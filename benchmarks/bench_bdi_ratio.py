@@ -1,0 +1,50 @@
+"""Paper claims: compression ratios (Figs 3.2, 3.6, 3.7; Table 3.6).
+
+Columns: population, algorithm, effective compression ratio (2x-tag cache,
+1-byte segments — the paper's accounting, Sec 3.7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bdi_exact as bx
+from repro.core import patterns, prior
+
+N_LINES = 8192
+
+
+def rows() -> list[dict]:
+    out = []
+    pops = {
+        "thesis_mix": patterns.thesis_mix(N_LINES, seed=0),
+        "zeros": patterns.zeros_lines(N_LINES),
+        "repeated": patterns.repeated_lines(N_LINES, seed=1),
+        "narrow": patterns.narrow_lines(N_LINES, seed=2),
+        "ldr": patterns.ldr_lines(N_LINES, seed=3),
+        "pointer_table": patterns.pointer_table_lines(N_LINES, seed=4),
+        "mixed_two_range": patterns.mixed_two_range_lines(N_LINES, seed=5),
+        "random": patterns.random_lines(N_LINES, seed=6),
+    }
+    for pname, lines in pops.items():
+        sizes = prior.all_algorithm_sizes(lines)
+        for alg, s in sizes.items():
+            out.append({"bench": "bdi_ratio", "population": pname,
+                        "alg": alg,
+                        "ratio": round(bx.effective_ratio(s), 3)})
+    # Figure 3.6: number-of-bases sweep on the thesis mix
+    lines = pops["thesis_mix"]
+    for k in (0, 1, 2, 3, 4, 8):
+        r = bx.effective_ratio(bx.bplusdelta_sizes(lines, n_bases=k))
+        out.append({"bench": "bases_sweep", "population": "thesis_mix",
+                    "alg": f"bplusdelta_{k}bases", "ratio": round(r, 3)})
+    return out
+
+
+def main() -> None:
+    for r in rows():
+        print(f"{r['bench']},{r['population']},{r['alg']},{r['ratio']}")
+
+
+if __name__ == "__main__":
+    main()

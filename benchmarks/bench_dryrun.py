@@ -1,0 +1,123 @@
+"""Drive the full (arch x shape x mesh) dry-run matrix (deliverables e/f).
+
+Each cell runs in a fresh subprocess (the 512-device XLA flag must precede
+jax init). Results accumulate incrementally under results/dryrun/ so the
+sweep is resumable; existing cells are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_dryrun [--mesh both]
+      [--filter yi] [--jobs 1] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES, applicable_shapes  # noqa: E402
+from repro.configs.registry import ARCHS  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def cell_id(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}".replace("/", "_")
+
+
+def all_cells(mesh_mode: str) -> list[tuple[str, str, str]]:
+    meshes = {"single": ["16x16"], "multi": ["2x16x16"],
+              "both": ["16x16", "2x16x16"]}[mesh_mode]
+    cells = []
+    for aname, cfg in sorted(ARCHS.items()):
+        for sname in SHAPES:
+            for mesh in meshes:
+                cells.append((aname, sname, mesh))
+    return cells
+
+
+def run_cell(arch: str, shape: str, mesh: str, timeout: int = 1800,
+             extra: list[str] | None = None) -> dict:
+    cfg = ARCHS[arch]
+    if shape not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "status": "skipped",
+                "reason": "full-attention arch: long_500k inapplicable "
+                          "(DESIGN.md §Arch-applicability)"}
+    out = os.path.join(RESULTS_DIR, cell_id(arch, shape, mesh) + ".json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if mesh == "2x16x16":
+        cmd.append("--multi-pod")
+    cmd += extra or []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "status": "timeout", "wall_s": timeout}
+    if proc.returncode != 0:
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "status": "failed", "wall_s": round(time.time() - t0, 1),
+                "stderr": proc.stderr[-2000:]}
+    with open(out) as f:
+        info = json.load(f)
+    info["status"] = "ok"
+    info["wall_s"] = round(time.time() - t0, 1)
+    with open(out, "w") as f:
+        json.dump(info, f, indent=1)
+    return info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--filter", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cells = [c for c in all_cells(args.mesh)
+             if args.filter in f"{c[0]}|{c[1]}|{c[2]}"]
+    print(f"{len(cells)} cells")
+    summary = []
+    for i, (arch, shape, mesh) in enumerate(cells):
+        out = os.path.join(RESULTS_DIR, cell_id(arch, shape, mesh) + ".json")
+        if os.path.exists(out) and not args.force:
+            with open(out) as f:
+                info = json.load(f)
+            if info.get("status") in ("ok", "skipped"):
+                print(f"[{i+1}/{len(cells)}] {arch} {shape} {mesh}: cached")
+                summary.append(info)
+                continue
+        info = run_cell(arch, shape, mesh, timeout=args.timeout)
+        with open(out, "w") as f:
+            json.dump(info, f, indent=1)
+        print(f"[{i+1}/{len(cells)}] {arch} {shape} {mesh}: "
+              f"{info['status']} ({info.get('wall_s', 0)}s)")
+        summary.append(info)
+
+    ok = sum(1 for s in summary if s["status"] == "ok")
+    sk = sum(1 for s in summary if s["status"] == "skipped")
+    bad = [s for s in summary if s["status"] not in ("ok", "skipped")]
+    print(f"\nok={ok} skipped={sk} failed={len(bad)}")
+    for s in bad:
+        print("FAILED:", s["arch"], s["shape"], s["mesh"],
+              s.get("stderr", "")[-300:])
+    with open(os.path.join(RESULTS_DIR, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Reproduce the §Perf hillclimb iteration log (EXPERIMENTS.md).
+
+Re-runs the three chosen cells' variants through launch/dryrun and prints
+the hypothesis -> change -> before/after table. Each variant is one
+subprocess (the 512-device flag must precede jax init); cached results in
+results/perf/ are reused unless --force.
+
+  PYTHONPATH=src python -m benchmarks.bench_perf_iter [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+VARIANTS = [
+    # (cell, json name, extra flags, hypothesis)
+    ("A: yi-6b decode_32k", "A0_baseline",
+     ["--arch", "yi-6b", "--shape", "decode_32k"],
+     "baseline: FSDP weights + bf16 KV"),
+    ("A: yi-6b decode_32k", "A1_nofsdp",
+     ["--arch", "yi-6b", "--shape", "decode_32k", "--no-fsdp"],
+     "decode collectives are FSDP weight gathers -> replicate weights"),
+    ("A: yi-6b decode_32k", "A2_kvcomp",
+     ["--arch", "yi-6b", "--shape", "decode_32k", "--kv-compressed"],
+     "KV reads dominate HBM traffic -> BDI int8 KV (thesis 5.5.1)"),
+    ("A: yi-6b decode_32k", "A3_both",
+     ["--arch", "yi-6b", "--shape", "decode_32k", "--no-fsdp",
+      "--kv-compressed"],
+     "combine both"),
+    ("B: arctic-480b train_4k", "B0_baseline",
+     ["--arch", "arctic-480b", "--shape", "train_4k"],
+     "baseline: micro=16, q8 moments"),
+    ("B: arctic-480b train_4k", "B1_micro8",
+     ["--arch", "arctic-480b", "--shape", "train_4k",
+      "--microbatches", "8"],
+     "collective bytes scale with microbatches (FSDP regather)"),
+    ("B: arctic-480b train_4k", "B2_micro8_sp",
+     ["--arch", "arctic-480b", "--shape", "train_4k",
+      "--microbatches", "8", "--sp"],
+     "SP residual stream offsets the activation growth"),
+    ("B: arctic-480b train_4k", "B3_micro4_sp",
+     ["--arch", "arctic-480b", "--shape", "train_4k",
+      "--microbatches", "4", "--sp"],
+     "push further: micro=4 + SP"),
+    ("C: hymba-1.5b prefill_32k", "C0_baseline",
+     ["--arch", "hymba-1.5b", "--shape", "prefill_32k"],
+     "baseline: per-token Mamba time scan"),
+    ("C: hymba-1.5b prefill_32k", "C1_chunked",
+     ["--arch", "hymba-1.5b", "--shape", "prefill_32k", "--mamba-chunked"],
+     "serialization is the bottleneck -> chunked associative scan"),
+]
+
+
+def run_variant(name: str, flags: list[str], force: bool) -> dict:
+    out = os.path.join(PERF_DIR, name + ".json")
+    if os.path.exists(out) and not force:
+        with open(out) as f:
+            return json.load(f)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", *flags, "--out", out]
+    subprocess.run(cmd, check=True, capture_output=True, timeout=1200,
+                   env=env)
+    with open(out) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(PERF_DIR, exist_ok=True)
+    print("cell,variant,hypothesis,coll_bytes,hlo_bytes,seq_depth,temp_gb")
+    for cell, name, flags, hyp in VARIANTS:
+        d = run_variant(name, flags, args.force)
+        print(f"{cell},{name},\"{hyp}\","
+              f"{d['collectives']['total']:.3e},"
+              f"{d.get('hlo_bytes', 0):.3e},{d.get('seq_depth', 1)},"
+              f"{d.get('temp_size_in_bytes', 0)/2**30:.1f}")
+
+
+if __name__ == "__main__":
+    main()

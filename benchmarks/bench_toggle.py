@@ -1,0 +1,55 @@
+"""Paper claims: bit-toggle increase under compression + EC/MC recovery
+(Figs 6.2, 6.10, 6.20).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bdi_exact as bx
+from repro.core import patterns, toggle
+
+
+def rows() -> list[dict]:
+    out = []
+    pops = {
+        "narrow": patterns.narrow_lines(2048, seed=0),
+        "ldr": patterns.ldr_lines(2048, seed=1),
+        "thesis_mix": patterns.thesis_mix(2048, seed=2),
+        "random": patterns.random_lines(2048, seed=3),
+    }
+    for name, lines in pops.items():
+        # interleaved serialization = the naive wire format of Fig 6.2
+        stats = toggle.ec_stream(lines, e_toggle=4.0, e_byte=1.0,
+                                 consolidated=False)
+        raw_t = max(stats["raw_toggles"], 1)
+        per_byte_raw = raw_t / max(stats["raw_bytes"], 1)
+        per_byte_comp = stats["comp_toggles"] / max(stats["comp_bytes"], 1)
+        out.append({
+            "bench": "toggle", "population": name,
+            "comp_ratio": round(stats["comp_ratio"], 3),
+            "toggle_increase_total": round(stats["comp_toggles"] / raw_t, 3),
+            "toggle_increase_per_byte": round(
+                per_byte_comp / max(per_byte_raw, 1e-12), 3),
+            "ec_toggle_increase": round(stats["ec_toggles"] / raw_t, 3),
+            "ec_ratio": round(stats["ec_ratio"], 3),
+            "ec_compressed_frac": round(stats["ec_compressed_frac"], 3),
+        })
+    # Metadata Consolidation effect (Fig 6.20)
+    for name in ("narrow", "ldr"):
+        c = bx.bdi_compress(pops[name])
+        ti = toggle.toggle_count(toggle.serialize_interleaved(c))
+        tc = toggle.toggle_count(toggle.serialize_consolidated(c))
+        out.append({"bench": "toggle_mc", "population": name,
+                    "interleaved_toggles": ti, "consolidated_toggles": tc,
+                    "mc_reduction": round(1 - tc / max(ti, 1), 3)})
+    return out
+
+
+def main() -> None:
+    for r in rows():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

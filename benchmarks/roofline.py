@@ -1,0 +1,214 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads results/dryrun/*.json (produced by bench_dryrun) and derives, per
+cell:
+
+  compute term    = HLO_FLOPs_global / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes_global / (chips * 819 GB/s)
+  collective term = collective_bytes_global / (chips * 50 GB/s/link)
+
+where HLO_FLOPs/bytes come from the loop-aware per-device HLO cost model
+(launch/dryrun.hlo_cost; XLA's cost_analysis undercounts while-loop bodies)
+and _global = per-device x chips, so the formula reduces to
+per-device / peak — the per-chip bound the hardware imposes.
+
+Also reports MODEL_FLOPS (6*N*D for train, 2*N_active*D per decoded token)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import ARCHS, get_arch  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e class)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (assignment formula)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total params, active params per token) — analytic."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    per_layer_attn = d * h * dh + 2 * d * k * dh + h * dh * d
+    if cfg.attn_kind == "mla":
+        r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim)
+        per_layer_attn = (d * h * (dn + dr) + d * r + d * dr
+                          + r * h * dn + r * h * dv + h * dv * d)
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        mlstm = 2 * d * di + 3 * di * di + di * 2 * cfg.n_heads + di * d
+        slstm = 4 * d * d + cfg.n_heads * (d // cfg.n_heads) ** 2 * 4
+        total = cfg.n_layers * (mlstm + slstm) + v * d * 2
+        return float(total), float(total)   # recurrent: all params active
+    ffn_dense = 3 * d * f if f else 0
+    ffn_moe = 0
+    ffn_moe_active = 0
+    if cfg.is_moe:
+        e = 3 * d * cfg.d_ff_expert
+        ffn_moe = cfg.n_experts * e
+        ffn_moe_active = cfg.top_k * e
+        if cfg.n_shared_experts:
+            shared = 3 * d * cfg.n_shared_experts * cfg.d_ff_expert
+            ffn_moe += shared
+            ffn_moe_active += shared
+        if not cfg.moe_dense_residual:
+            ffn_dense = 0
+    if cfg.family == "hybrid":
+        di = cfg.ssm_expand * d
+        per_layer_attn += 2 * d * di + di * d + di * (
+            max(1, d // 16) + 2 * cfg.ssm_state) + di * cfg.ssm_state
+    n_lyr = cfg.n_layers + cfg.enc_layers
+    per_layer = per_layer_attn + ffn_dense + ffn_moe
+    per_layer_active = per_layer_attn + ffn_dense + ffn_moe_active
+    total = n_lyr * per_layer + 2 * v * d
+    active = n_lyr * per_layer_active + 2 * v * d
+    return float(total), float(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for the step (global, all chips)."""
+    total, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence + attention over the cache
+    flops = 2.0 * active * shape.global_batch
+    if cfg.attn_kind != "none":
+        wins = T.layer_windows(cfg) if cfg.local_ratio else None
+        kv = cfg.n_kv_heads * cfg.head_dim
+        for li in range(cfg.n_layers):
+            t_eff = shape.seq_len
+            if wins is not None and wins[li] > 0:
+                t_eff = min(shape.seq_len, int(wins[li]))
+            flops += 4.0 * shape.global_batch * t_eff * kv \
+                * max(cfg.n_heads // cfg.n_kv_heads, 1)
+    return flops
+
+
+MICRO = {"arctic-480b": 16, "internvl2-76b": 16, "gemma3-27b": 8,
+         "qwen2.5-14b": 4, "yi-9b": 4, "yi-6b": 4, "deepseek-v2-lite-16b": 2,
+         "hymba-1.5b": 4, "seamless-m4t-large-v2": 2, "xlstm-350m": 1}
+
+
+def analytic_bytes(cfg, shape, chips: int, cell: dict) -> float:
+    """Per-device HBM traffic model (bytes/step).
+
+    The HLO text model (hlo_bytes) overcounts fusion-wrapped in-place
+    updates on CPU-XLA, so the headline memory term uses this analytic
+    model: weights read per use, activations with remat recompute, KV/state
+    cache read per decode step.  Constants: fwd touches each activation ~4x
+    (read+write around attention/FFN), bwd ~8x incl. remat recompute.
+    """
+    total, active = count_params(cfg)
+    param_dev = 2.0 * total / chips          # bf16, fully sharded storage
+    kv_dev = 0.0
+    for key in ("alias_size_in_bytes",):
+        kv_dev = max(kv_dev, cell.get(key, 0))
+    if shape.kind == "train":
+        n_micro = MICRO.get(cfg.name, 1)
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips // 16, 1) \
+            / 16  # dp shards only
+        d = cfg.d_model
+        lyr = cfg.n_layers + cfg.enc_layers
+        act = lyr * tokens_dev / n_micro * d * 2 * 12 * n_micro
+        weights = 3.0 * param_dev * n_micro      # fwd+bwd reads + grad write
+        opt = 4.0 * param_dev                    # moments RW + param update
+        return act + weights + opt
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / max(chips, 1) * 16
+        d = cfg.d_model
+        lyr = cfg.n_layers + cfg.enc_layers
+        return param_dev + lyr * tokens_dev * d * 2 * 6 + kv_dev
+    # decode: weights once + full cache read + tiny write
+    return param_dev + kv_dev
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        if f.endswith("summary.json"):
+            continue
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def analyze(cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return None
+    cfg = get_arch(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    chips = cell["n_devices"]
+    # per-device quantities: flops/collectives from the loop-aware HLO cost
+    # model; memory from the analytic traffic model (hlo_bytes kept as a
+    # diagnostic — it overcounts fusion-wrapped in-place updates).
+    fl = cell.get("hlo_flops", 0.0)
+    by = analytic_bytes(cfg, shape, chips, cell)
+    coll = cell.get("collectives", {}).get("total", 0)
+    t_compute = fl / PEAK_FLOPS
+    t_memory = by / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    hlo_global = fl * chips
+    mfu_at_bound = mf / (chips * PEAK_FLOPS * bound) if bound else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "bottleneck": bottleneck,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "hlo_bytes_dev": cell.get("hlo_bytes", 0.0),
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_frac": mfu_at_bound,
+        "mem_gb": (cell.get("argument_size_in_bytes", 0)
+                   + cell.get("temp_size_in_bytes", 0)) / 2**30,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = [r for r in (analyze(c) for c in load_cells()) if r]
+    hdr = ("arch,shape,mesh,chips,compute_s,memory_s,collective_s,"
+           "bottleneck,useful_ratio,roofline_frac,mem_gb")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+            f"{r['collective_s']:.3e},{r['bottleneck']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_frac']:.4f},"
+            f"{r['mem_gb']:.1f}")
+    out = "\n".join(lines)
+    print(out)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

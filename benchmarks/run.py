@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs every CPU-runnable paper-claim benchmark
+and prints CSV rows. The dry-run matrix / roofline are separate (they need
+the 512-device subprocess environment):
+
+  python -m benchmarks.bench_dryrun        # 40 cells x 2 meshes
+  python -m benchmarks.roofline            # 3-term table from the results
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_bdi_ratio, bench_camp, bench_codec_latency,
+                            bench_collectives, bench_lcp, bench_toggle)
+    suites = [
+        ("bdi_ratio (Figs 3.2/3.6/3.7)", bench_bdi_ratio),
+        ("codec_latency (Table 3.5)", bench_codec_latency),
+        ("camp (Figs 4.8/4.9, Tab 4.3)", bench_camp),
+        ("lcp (Figs 5.8/5.16/5.17)", bench_lcp),
+        ("toggle+EC+MC (Figs 6.2/6.10/6.20)", bench_toggle),
+        ("collective compression (DESIGN 2.4)", bench_collectives),
+    ]
+    for name, mod in suites:
+        print(f"\n### {name}")
+        t0 = time.time()
+        mod.main()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+
+    # roofline summary if dry-run results exist
+    try:
+        from benchmarks import roofline
+        cells = roofline.load_cells()
+        if cells:
+            rows = [r for r in (roofline.analyze(c) for c in cells) if r]
+            print(f"\n### roofline: {len(rows)} analyzed cells "
+                  f"(python -m benchmarks.roofline for the full table)")
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

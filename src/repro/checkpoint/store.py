@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing with BDI-compressed streams.
+
+Contract (the fault-tolerance story of launch/train.py):
+  * atomic — a checkpoint is staged in ``<dir>/.tmp-<step>`` and published
+    with one ``os.replace``; a crash mid-save never corrupts the latest
+    good checkpoint;
+  * verified — every tensor file carries a SHA-256 in the manifest,
+    checked on restore (bit-rot / torn-write detection);
+  * compressed — tensor byte-streams go through the *paper's own* lossless
+    BDI codec (core/bdi_exact.compress_stream) with an EC-style gate
+    (Chapter 6): store compressed only when it actually wins;
+  * elastic — tensors are stored logically (full arrays, sharded files per
+    process); restore re-shards onto whatever mesh/device-count the new job
+    has (``target_shardings``), so a job can restart on a different
+    topology;
+  * replayable — the manifest carries the data-iterator state so the input
+    stream resumes exactly.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.core import bdi_exact as bx
+
+_MANIFEST = "manifest.json"
+
+_EXTRA_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": getattr(ml_dtypes, "float8_e4m3fn", None),
+    "float8_e5m2": getattr(ml_dtypes, "float8_e5m2", None),
+}
+
+
+def _dtype(name: str) -> np.dtype:
+    if name in _EXTRA_DTYPES and _EXTRA_DTYPES[name] is not None:
+        return np.dtype(_EXTRA_DTYPES[name])
+    return np.dtype(name)
+
+
+def _leaf_paths(tree) -> list[tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(k), v) for k, v in flat]
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None,
+         compress: bool = True, ec_min_ratio: float = 1.02) -> dict:
+    """Save a pytree checkpoint; returns the manifest."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    entries = []
+    raw_total = comp_total = 0
+    for i, (path, leaf) in enumerate(_leaf_paths(tree)):
+        arr = _np(leaf)
+        raw = arr.tobytes()
+        codec = "raw"
+        blob = raw
+        if compress and len(raw) >= 256:
+            c = bx.compress_stream(raw)
+            # EC-style decision: ship compressed only if it wins (Ch. 6)
+            if len(raw) / max(len(c), 1) >= ec_min_ratio:
+                codec, blob = "bdi", c
+        fname = f"{i:05d}.{codec}"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(blob)
+        entries.append({
+            "path": path, "file": fname, "codec": codec,
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "raw_bytes": len(raw), "stored_bytes": len(blob),
+        })
+        raw_total += len(raw)
+        comp_total += len(blob)
+
+    manifest = {
+        "step": step,
+        "entries": entries,
+        "extra": extra or {},
+        "raw_bytes": raw_total,
+        "stored_bytes": comp_total,
+        "compression_ratio": raw_total / max(comp_total, 1),
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    return manifest
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, *, step: int | None = None,
+            target_shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    ``target_shardings``: optional pytree of jax.sharding.Sharding — the
+    elastic path: tensors are device_put onto the *new* topology regardless
+    of how the saving job was laid out.
+    Returns (tree, manifest).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    by_path = {e["path"]: e for e in manifest["entries"]}
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shardings = (jax.tree_util.tree_leaves(target_shardings)
+                 if target_shardings is not None else [None] * len(flat))
+    out = []
+    for (key, like), shd in zip(flat, shardings):
+        e = by_path[jax.tree_util.keystr(key)]
+        with open(os.path.join(d, e["file"]), "rb") as f:
+            blob = f.read()
+        got = hashlib.sha256(blob).hexdigest()
+        if got != e["sha256"]:
+            raise IOError(f"checkpoint corruption in {e['file']}: "
+                          f"sha mismatch ({got[:12]} != {e['sha256'][:12]})")
+        raw = bx.decompress_stream(blob).tobytes() if e["codec"] == "bdi" \
+            else blob
+        arr = np.frombuffer(raw, dtype=_dtype(e["dtype"]))
+        arr = arr.reshape(e["shape"])
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, [v for v in out]), manifest
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    """Retention policy: keep the newest `keep` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)

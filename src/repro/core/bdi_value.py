@@ -1,0 +1,197 @@
+"""Value-space BDI tile codec — the TPU-native adaptation (DESIGN.md §2.1).
+
+The thesis' BDI mechanism is: one arbitrary base (the line's first value) +
+one *implicit zero base* + narrow per-element deltas + a per-element bit mask
+selecting the base, decompressed with a single masked SIMD add.
+
+DNN state is float, where bitwise deltas destroy the low-dynamic-range
+structure.  We lift the mechanism to *value space*:
+
+    x_hat[i] = delta[i] * scale + mask[i] * base        (one masked FMA)
+
+* ``base``  = the tile's first element (paper's first-value rule, Sec 3.3.2).
+* ``mask``  = per-element choice between the zero base and ``base`` — kept
+  because sparse-ish tensors (activations, gradients, KV) mix near-zero
+  values with a cluster far from zero, exactly the mcf/Figure-3.5 pattern.
+* ``scale`` = power of two covering the max residual in the chosen delta
+  width (8- or 16-bit), so quantization is a pure exponent shift.
+* Static encodings {ZERO, REP, D8, D16, RAW} mirror Table 3.2; RAW tiles are
+  *exceptions* handled by the LCP page layout (core/lcp.py).
+
+Error bound: |x - x_hat| <= scale/2 elementwise (0 for ZERO/REP/RAW tiles).
+
+Everything here is pure jnp and jit/pjit-compatible with static shapes; the
+compression *ratio* is carried by the per-tile encoding codes, while actual
+HBM savings are realized where deltas are stored as int8/int16 (LCP pages,
+compressed optimizer state, compressed collectives).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+TILE = 128  # default tile length: one VREG lane row (8,128) flattened per row
+
+ENC_ZERO = 0
+ENC_REP = 1
+ENC_D8 = 2
+ENC_D16 = 3
+ENC_RAW = 7
+ENC_NAMES = {ENC_ZERO: "zero", ENC_REP: "rep", ENC_D8: "d8",
+             ENC_D16: "d16", ENC_RAW: "raw"}
+
+
+class CompressedTiles(NamedTuple):
+    """Columnar compressed tiles; all arrays share leading tile dims."""
+    deltas: jax.Array   # int8 or int16 [..., T]
+    base: jax.Array     # f32 [...]
+    scale: jax.Array    # f32 power-of-two [...]
+    mask: jax.Array     # bool [..., T]; True => arbitrary base, False => zero
+    enc: jax.Array      # int8 [...]
+
+
+def _pow2_scale(maxres: jax.Array, qmax: float) -> jax.Array:
+    """Smallest power of two s with maxres/s <= qmax.
+
+    Implemented with an exponent-field bitcast (not jnp.frexp) so the Pallas
+    compressor kernel can reproduce it bit-exactly on TPU.
+    """
+    ratio = (maxres / qmax).astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(ratio, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127              # floor(log2(ratio))
+    mant = bits & 0x7FFFFF
+    e = e + (mant != 0).astype(jnp.int32)        # ceil for non-powers-of-two
+    s = jnp.exp2(e.astype(jnp.float32))
+    return jnp.where(maxres > 0, s, jnp.float32(1.0))
+
+
+def compress_tiles(x: jax.Array, *, delta_dtype=jnp.int8,
+                   raw_rtol: float | None = None) -> CompressedTiles:
+    """Compress float tiles laid out as [..., T].
+
+    ``raw_rtol``: if given, tiles whose quantization error bound exceeds
+    ``raw_rtol * max|tile|`` are tagged ENC_RAW (exceptions) — the caller
+    (e.g. the LCP page writer) must preserve their exact payload.
+    """
+    x = x.astype(jnp.float32)
+    qmax = 127.0 if delta_dtype == jnp.int8 else 32767.0
+
+    base = x[..., 0]
+    r_zero = x
+    r_base = x - base[..., None]
+    # Two-base selection (the "Immediate"): nearer base wins per element.
+    mask = jnp.abs(r_base) < jnp.abs(r_zero)
+    r = jnp.where(mask, r_base, r_zero)
+    maxres = jnp.max(jnp.abs(r), axis=-1)
+    scale = _pow2_scale(maxres, qmax)
+    deltas = jnp.clip(jnp.round(r / scale[..., None]), -qmax, qmax)
+    deltas = deltas.astype(delta_dtype)
+
+    maxabs = jnp.max(jnp.abs(x), axis=-1)
+    is_zero = maxabs == 0
+    is_rep = jnp.all(x == base[..., None], axis=-1) & ~is_zero
+
+    enc_q = ENC_D8 if delta_dtype == jnp.int8 else ENC_D16
+    enc = jnp.full(base.shape, enc_q, dtype=jnp.int8)
+    if raw_rtol is not None:
+        err_bound = scale * 0.5
+        enc = jnp.where(err_bound > raw_rtol * maxabs,
+                        jnp.int8(ENC_RAW), enc)
+    enc = jnp.where(is_rep, jnp.int8(ENC_REP), enc)
+    enc = jnp.where(is_zero, jnp.int8(ENC_ZERO), enc)
+
+    # Canonicalize ZERO/REP tiles so decompression is one unconditional FMA.
+    simple = (enc == ENC_ZERO) | (enc == ENC_REP)
+    deltas = jnp.where(simple[..., None], 0, deltas)
+    mask = jnp.where((enc == ENC_ZERO)[..., None], False,
+                     jnp.where((enc == ENC_REP)[..., None], True, mask))
+    base = jnp.where(enc == ENC_ZERO, 0.0, base)
+    return CompressedTiles(deltas, base, scale, mask, enc)
+
+
+def decompress_tiles(c: CompressedTiles, dtype=jnp.float32) -> jax.Array:
+    """The paper's decompressor, lifted: one masked vector FMA."""
+    out = (c.deltas.astype(jnp.float32) * c.scale[..., None]
+           + c.mask.astype(jnp.float32) * c.base[..., None])
+    return out.astype(dtype)
+
+
+def error_bound(c: CompressedTiles) -> jax.Array:
+    """Elementwise abs-error bound per tile (0 for exact encodings)."""
+    exact = (c.enc == ENC_ZERO) | (c.enc == ENC_REP)
+    return jnp.where(exact, 0.0, 0.5 * c.scale)
+
+
+# ---------------------------------------------------------------------------
+# Size accounting (paper-style; bases/scales/masks = metadata region)
+# ---------------------------------------------------------------------------
+
+def tile_size_bytes(enc: jax.Array, tile: int, elem_bytes: int = 2) -> jax.Array:
+    """Compressed bytes per tile under each encoding.
+
+    ZERO: 0; REP: 4 (base); D8: 5 + T/8 + T; D16: 5 + T/8 + 2T; RAW: T*elem.
+    The 5 = f32 base + int8 scale exponent; T/8 = packed mask.
+    """
+    meta = 5 + tile // 8
+    sizes = jnp.select(
+        [enc == ENC_ZERO, enc == ENC_REP, enc == ENC_D8, enc == ENC_D16],
+        [jnp.int32(0), jnp.int32(4), jnp.int32(meta + tile),
+         jnp.int32(meta + 2 * tile)],
+        jnp.int32(tile * elem_bytes))
+    return sizes
+
+
+def compression_ratio(c: CompressedTiles, elem_bytes: int = 2) -> jax.Array:
+    tile = c.deltas.shape[-1]
+    sizes = tile_size_bytes(c.enc, tile, elem_bytes)
+    raw = jnp.float32(c.enc.size * tile * elem_bytes)
+    return raw / jnp.maximum(jnp.sum(sizes).astype(jnp.float32), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Mask packing (for storage formats where the bitmask lives in HBM)
+# ---------------------------------------------------------------------------
+
+def pack_mask(mask: jax.Array) -> jax.Array:
+    """bool [..., T] -> uint8 [..., T//8] little-endian bit packing."""
+    t = mask.shape[-1]
+    assert t % 8 == 0
+    m = mask.reshape(*mask.shape[:-1], t // 8, 8).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(m * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_mask(packed: jax.Array) -> jax.Array:
+    """uint8 [..., T//8] -> bool [..., T]."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & jnp.uint8(1)
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8) > 0
+
+
+# ---------------------------------------------------------------------------
+# Tensor <-> tile folding helpers
+# ---------------------------------------------------------------------------
+
+def fold_to_tiles(x: jax.Array, tile: int = TILE) -> tuple[jax.Array, int]:
+    """Flatten to [n_tiles, tile], zero-padding the tail. Returns (tiles, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, tile), n
+
+
+def unfold_from_tiles(tiles: jax.Array, n: int, shape) -> jax.Array:
+    return tiles.reshape(-1)[:n].reshape(shape)
+
+
+def compress_tensor(x: jax.Array, tile: int = TILE, **kw) -> tuple[CompressedTiles, int]:
+    tiles, n = fold_to_tiles(x, tile)
+    return compress_tiles(tiles, **kw), n
+
+
+def decompress_tensor(c: CompressedTiles, n: int, shape, dtype=jnp.float32) -> jax.Array:
+    return unfold_from_tiles(decompress_tiles(c, dtype), n, shape)

@@ -1,0 +1,171 @@
+"""Linearly Compressed Pages (Chapter 5), adapted to JAX tensors.
+
+LCP's key idea: compress every cache line within a page to the *same* target
+size, so the location of line *i* is ``i * target_size`` — one shift instead
+of a chain of additions.  Lines that do not fit the target are *exceptions*
+stored in a per-page exception region, located through per-line metadata;
+pages whose exception region overflows fall back to uncompressed storage
+(the PTE "c-bit" clear case).
+
+The TPU adaptation (DESIGN.md §2.2): the target-size region is a statically
+shaped int8 delta tensor (XLA demands static shapes anyway — LCP's constraint
+is *native* here), the metadata region holds per-line base/scale/enc/bit-mask,
+and the exception region is a fixed pool of raw f32 slots.  ``read_line`` is
+a single gather at index *i* — the LCP address computation.
+
+Page-overflow taxonomy (paper §5.4.6):
+  * type-1 overflow: a line update stops fitting -> moves to the exception
+    region (``write_line`` returns the flag).
+  * page overflow: exception region full -> ``overflow`` flag set; the page
+    owner must re-store the page raw (see serving/kv_cache.py pool split).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bdi_value as bv
+
+
+class LCPPage(NamedTuple):
+    """One linearly compressed page of n lines x line_len floats."""
+    deltas: jax.Array    # int8 [n, L]   — target-size region
+    base: jax.Array      # f32 [n]       — metadata region
+    scale: jax.Array     # f32 [n]
+    maskp: jax.Array     # uint8 [n, L//8] packed zero-base mask
+    enc: jax.Array       # int8 [n]      — ENC_*; ENC_RAW lines live in exc
+    exc_idx: jax.Array   # int32 [n]     — exception slot or -1
+    exc: jax.Array       # f32 [E, L]    — exception region
+    n_exc: jax.Array     # int32 []      — used exception slots
+    overflow: jax.Array  # bool []       — page overflow (c-bit clear)
+
+    @property
+    def n_lines(self) -> int:
+        return self.deltas.shape[0]
+
+    @property
+    def line_len(self) -> int:
+        return self.deltas.shape[1]
+
+    @property
+    def exc_slots(self) -> int:
+        return self.exc.shape[0]
+
+
+def compress_page(lines: jax.Array, exc_slots: int,
+                  raw_rtol: float = 0.02) -> LCPPage:
+    """Compress [n, L] float lines into one LCP page (jit-friendly)."""
+    n, length = lines.shape
+    c = bv.compress_tiles(lines, raw_rtol=raw_rtol)
+    is_exc = c.enc == bv.ENC_RAW
+    # exception slot assignment: running count over the page
+    slot = jnp.cumsum(is_exc.astype(jnp.int32)) - 1
+    exc_idx = jnp.where(is_exc, slot, -1)
+    n_exc = jnp.sum(is_exc.astype(jnp.int32))
+    overflow = n_exc > exc_slots
+
+    exc = jnp.zeros((exc_slots, length), jnp.float32)
+    safe_idx = jnp.clip(exc_idx, 0, exc_slots - 1)
+    # scatter-add: non-exception rows contribute zeros (slot collisions on
+    # clipped indices only happen when the page has already overflowed).
+    exc = exc.at[safe_idx].add(
+        jnp.where(is_exc[:, None], lines.astype(jnp.float32), 0.0))
+    return LCPPage(c.deltas, c.base, c.scale, bv.pack_mask(c.mask),
+                   c.enc, exc_idx, exc, n_exc, overflow)
+
+
+def _dequant(p: LCPPage) -> jax.Array:
+    mask = bv.unpack_mask(p.maskp).astype(jnp.float32)
+    return (p.deltas.astype(jnp.float32) * p.scale[:, None]
+            + mask * p.base[:, None])
+
+
+def decompress_page(p: LCPPage) -> jax.Array:
+    """Full-page decompression (exceptions restored exactly)."""
+    approx = _dequant(p)
+    is_exc = p.exc_idx >= 0
+    from_exc = p.exc[jnp.clip(p.exc_idx, 0, p.exc_slots - 1)]
+    return jnp.where(is_exc[:, None], from_exc, approx)
+
+
+def read_line(p: LCPPage, i: jax.Array) -> jax.Array:
+    """Random access to line *i* — the LCP O(1) address computation.
+
+    One gather into the target-size region (address = i * target_size) plus
+    the metadata-directed exception override; no prefix-sum over preceding
+    line sizes (the 22-addition problem LCP eliminates, §5.1.1).
+    """
+    d = p.deltas[i].astype(jnp.float32)
+    mask = bv.unpack_mask(p.maskp[i]).astype(jnp.float32)
+    approx = d * p.scale[i] + mask * p.base[i]
+    is_exc = p.exc_idx[i] >= 0
+    exc_line = p.exc[jnp.clip(p.exc_idx[i], 0, p.exc_slots - 1)]
+    return jnp.where(is_exc, exc_line, approx)
+
+
+def write_line(p: LCPPage, i: jax.Array, line: jax.Array,
+               raw_rtol: float = 0.02) -> tuple[LCPPage, jax.Array]:
+    """Update line *i*; returns (page', type1_overflow).
+
+    If the new data no longer fits the compressed budget it migrates to the
+    exception region (type-1 overflow).  If the region is full the page
+    ``overflow`` flag is raised (caller re-stores the page uncompressed).
+    """
+    line = line.astype(jnp.float32)[None, :]
+    c = bv.compress_tiles(line, raw_rtol=raw_rtol)
+    needs_exc = (c.enc[0] == bv.ENC_RAW)
+    had_exc = p.exc_idx[i] >= 0
+
+    # allocate a slot: reuse the old one, else the next free counter
+    new_slot = jnp.where(had_exc, p.exc_idx[i], p.n_exc)
+    type1 = needs_exc & ~had_exc
+    n_exc = p.n_exc + type1.astype(jnp.int32)
+    page_overflow = p.overflow | (n_exc > p.exc_slots)
+
+    safe_slot = jnp.clip(new_slot, 0, p.exc_slots - 1)
+    exc = jnp.where(needs_exc,
+                    p.exc.at[safe_slot].set(line[0]),
+                    p.exc)
+    # NOTE: freeing a slot on exception->compressed transitions is deferred
+    # to page recompaction (paper §5.4.6 does the same off the critical path).
+    exc_idx = p.exc_idx.at[i].set(jnp.where(needs_exc, new_slot, -1))
+
+    return LCPPage(
+        deltas=p.deltas.at[i].set(c.deltas[0]),
+        base=p.base.at[i].set(c.base[0]),
+        scale=p.scale.at[i].set(c.scale[0]),
+        maskp=p.maskp.at[i].set(bv.pack_mask(c.mask)[0]),
+        enc=p.enc.at[i].set(c.enc[0]),
+        exc_idx=exc_idx, exc=exc, n_exc=n_exc, overflow=page_overflow,
+    ), type1
+
+
+def recompact_page(p: LCPPage, raw_rtol: float = 0.02) -> LCPPage:
+    """Rebuild the page from its logical contents (frees dead exc slots)."""
+    return compress_page(decompress_page(p), p.exc_slots, raw_rtol)
+
+
+# ---------------------------------------------------------------------------
+# Size accounting (paper-style, Figures 5.8/5.9)
+# ---------------------------------------------------------------------------
+
+def page_nbytes(p: LCPPage, elem_bytes: int = 2) -> jax.Array:
+    """Physical bytes of the compressed page (data + metadata + exceptions).
+
+    Uncompressed page cost is n*L*elem_bytes; overflowed pages count as raw.
+    """
+    n, length = p.deltas.shape
+    data = n * length                       # int8 target-size region
+    meta = n * (4 + 1 + 1 + length // 8)    # base + scale-exp + enc + mask
+    exc = p.n_exc * length * 4              # raw f32 exceptions
+    compressed = jnp.int32(data + meta) + exc.astype(jnp.int32)
+    raw = jnp.int32(n * length * elem_bytes)
+    return jnp.where(p.overflow, raw, jnp.minimum(compressed, raw))
+
+
+def page_compression_ratio(p: LCPPage, elem_bytes: int = 2) -> jax.Array:
+    n, length = p.deltas.shape
+    return n * length * elem_bytes / page_nbytes(p, elem_bytes).astype(jnp.float32)

@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle padding to block multiples, dtype/layout adaptation, and backend
+dispatch: on TPU the Pallas path compiles natively; elsewhere kernels run in
+``interpret=True`` mode (the kernel body executed on CPU for validation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdi_value as bv
+
+from . import ref
+from .bdi_compress import bdi_compress as _compress_kernel
+from .bdi_decompress import bdi_decompress as _decompress_kernel
+from .paged_attention import paged_attention as _paged_attention_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, n
+
+
+def compress(x: jax.Array, *, block_n: int = 8) -> ref.PackedTiles:
+    """Compress f32 tiles [N, T] with the Pallas compressor."""
+    xp, n = _pad_rows(x.astype(jnp.float32), block_n)
+    deltas, base, scale, maskp, enc = _compress_kernel(
+        xp, block_n=block_n, interpret=_interpret())
+    return ref.PackedTiles(deltas[:n], base[:n], scale[:n], maskp[:n], enc[:n])
+
+
+def decompress(p: ref.PackedTiles, *, block_n: int = 8) -> jax.Array:
+    """Decompress PackedTiles to f32 [N, T] with the Pallas decompressor."""
+    n = p.deltas.shape[0]
+    deltas, _ = _pad_rows(p.deltas, block_n)
+    base, _ = _pad_rows(p.base, block_n)
+    scale, _ = _pad_rows(jnp.where(p.scale == 0, 1.0, p.scale), block_n)
+    maskp, _ = _pad_rows(p.maskp, block_n)
+    return _decompress_kernel(deltas, base, scale, maskp,
+                              block_n=block_n, interpret=_interpret())[:n]
+
+
+def paged_attention(q: jax.Array, pages: ref.CompressedKVPages,
+                    page_table: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Fused compressed-paged-KV decode attention (see paged_attention.py)."""
+    return _paged_attention_kernel(q, pages, page_table, lengths,
+                                   interpret=_interpret())
+
+
+def roundtrip_tensor(x: jax.Array, tile: int = 128) -> jax.Array:
+    """compress->decompress an arbitrary tensor through the kernels."""
+    tiles, n = bv.fold_to_tiles(x, tile)
+    out = decompress(compress(tiles))
+    return bv.unfold_from_tiles(out, n, x.shape).astype(x.dtype)

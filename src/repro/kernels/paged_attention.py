@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: paged decode attention fused with BDI-KV dequant.
+
+This is the flagship kernel: the LCP-style compressed KV page pool
+(int8 deltas + per-(token, head) base/scale — see DESIGN.md §2.2) is read
+*directly* in its compressed form; dequantization fuses into the
+flash-decoding inner loop, so HBM traffic for K/V is ~the int8 bytes.
+This realizes the thesis' §5.5.1 "bandwidth reduction" optimization where it
+matters on TPU: decode attention is HBM-bandwidth-bound.
+
+Pattern: scalar-prefetched page table drives the BlockSpec index maps (the
+LCP address computation — page_table[b, p] is the whole "locate compressed
+data" story, one lookup + shift), online-softmax accumulation in VMEM
+scratch across the page grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import CompressedKVPages
+
+
+def _paged_attn_kernel(pt_ref, len_ref,            # scalar prefetch
+                       q_ref, kd_ref, kb_ref, ks_ref,
+                       vd_ref, vb_ref, vs_ref,
+                       out_ref,
+                       acc_ref, m_ref, l_ref):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    g, d = q_ref.shape[2], q_ref.shape[3]
+    page = kd_ref.shape[2]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0] * jax.lax.rsqrt(jnp.float32(d))          # [g, d]
+    k = (kd_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]
+         + kb_ref[0, 0])                                     # [page, d] dequant
+    v = (vd_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+         + vb_ref[0, 0])
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+    valid = pos < len_ref[b]
+    scores = jnp.where(valid, scores, -jnp.inf)
+
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pij = jnp.exp(scores - m_new)
+    l_new = l_prev * alpha + jnp.sum(pij, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(pij, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        out_ref[0, 0] = acc_ref[...] / l_ref[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, pages: CompressedKVPages,
+                    page_table: jax.Array, lengths: jax.Array,
+                    *, interpret: bool = True) -> jax.Array:
+    """q f32 [B, KVH, G, D]; page_table i32 [B, PMAX]; lengths i32 [B]."""
+    bsz, kvh, g, d = q.shape
+    pmax = page_table.shape[1]
+    page = pages.kd.shape[2]
+
+    # Per-(token, head) base/scale get a trailing singleton so the kernel
+    # sees [page, 1] tiles (broadcast against [page, d] without relayout).
+    kb = pages.kb[..., None]
+    ks = pages.ks[..., None]
+    vb = pages.vb[..., None]
+    vs = pages.vs[..., None]
+
+    def kv_map(b_i, h_i, p_i, pt, ln):
+        del ln
+        return (pt[b_i, p_i], h_i, 0, 0)
+
+    def q_map(b_i, h_i, p_i, pt, ln):
+        del p_i, pt, ln
+        return (b_i, h_i, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, kvh, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_map),
+            pl.BlockSpec((1, 1, page, d), kv_map),
+            pl.BlockSpec((1, 1, page, 1), kv_map),
+            pl.BlockSpec((1, 1, page, 1), kv_map),
+            pl.BlockSpec((1, 1, page, d), kv_map),
+            pl.BlockSpec((1, 1, page, 1), kv_map),
+            pl.BlockSpec((1, 1, page, 1), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _paged_attn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, kvh, g, d), jnp.float32),
+        interpret=interpret,
+    )(page_table, lengths, q, pages.kd, kb, ks, pages.vd, vb, vs)

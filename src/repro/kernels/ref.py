@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The kernels must match these references exactly (same rounding, same scale
+selection) — tests sweep shapes/dtypes and assert allclose/equality.
+
+Mask packing uses a *bit-plane* layout (element j's mask bit lives in byte
+``j % (T//8)`` at bit ``j // (T//8)``) so the TPU kernel can unpack it with a
+lane-tile repeat + constant shift instead of a lane-crossing reshape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bdi_value as bv
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane mask packing
+# ---------------------------------------------------------------------------
+
+def pack_mask_bitplane(mask: jax.Array) -> jax.Array:
+    """bool [..., T] -> uint8 [..., T//8]; element j -> byte j%W, bit j//W."""
+    t = mask.shape[-1]
+    w = t // 8
+    m = mask.reshape(*mask.shape[:-1], 8, w).astype(jnp.uint8)  # [.., bit, byte]
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[:, None]
+    return jnp.sum(m * weights, axis=-2).astype(jnp.uint8)
+
+
+def unpack_mask_bitplane(packed: jax.Array) -> jax.Array:
+    w = packed.shape[-1]
+    bits = (packed[..., None, :] >> jnp.arange(8, dtype=jnp.uint8)[:, None]) \
+        & jnp.uint8(1)
+    return bits.reshape(*packed.shape[:-1], 8 * w) > 0
+
+
+# ---------------------------------------------------------------------------
+# Tile codec refs (two-base masked-FMA form, packed mask)
+# ---------------------------------------------------------------------------
+
+class PackedTiles(NamedTuple):
+    deltas: jax.Array   # int8 [N, T]
+    base: jax.Array     # f32 [N, 1]
+    scale: jax.Array    # f32 [N, 1]
+    maskp: jax.Array    # uint8 [N, T//8] bit-plane packed
+    enc: jax.Array      # int32 [N, 1]
+
+
+def compress_ref(x: jax.Array) -> PackedTiles:
+    """Oracle for the Pallas compressor kernel. x: f32 [N, T]."""
+    c = bv.compress_tiles(x, delta_dtype=jnp.int8)
+    return PackedTiles(
+        deltas=c.deltas,
+        base=c.base[:, None],
+        scale=c.scale[:, None],
+        maskp=pack_mask_bitplane(c.mask),
+        enc=c.enc.astype(jnp.int32)[:, None],
+    )
+
+
+def decompress_ref(p: PackedTiles) -> jax.Array:
+    """Oracle for the Pallas decompressor kernel -> f32 [N, T]."""
+    mask = unpack_mask_bitplane(p.maskp).astype(jnp.float32)
+    return p.deltas.astype(jnp.float32) * p.scale + mask * p.base
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention with fused single-base dequantization
+# ---------------------------------------------------------------------------
+
+class CompressedKVPages(NamedTuple):
+    """B+Delta (single-base) compressed KV page pool.
+
+    The immediate/zero second base is a no-op for KV value distributions
+    (measured in benchmarks/bench_lcp.py), so the decode path stores
+    base+delta only; the full two-base codec serves gradients/optimizer
+    state/checkpoints where masks pack into the stream.
+    """
+    kd: jax.Array   # int8 [P, KVH, page, D]
+    kb: jax.Array   # f32  [P, KVH, page]
+    ks: jax.Array   # f32  [P, KVH, page]
+    vd: jax.Array   # int8 [P, KVH, page, D]
+    vb: jax.Array   # f32  [P, KVH, page]
+    vs: jax.Array   # f32  [P, KVH, page]
+
+
+def compress_kv_pages(k: jax.Array, v: jax.Array) -> CompressedKVPages:
+    """k, v: f32 [P, KVH, page, D] -> single-base compressed pages."""
+    def enc(x):
+        base = x[..., 0]
+        r = x - base[..., None]
+        maxres = jnp.max(jnp.abs(r), axis=-1)
+        scale = bv._pow2_scale(maxres, 127.0)
+        d = jnp.clip(jnp.round(r / scale[..., None]), -127, 127)
+        return d.astype(jnp.int8), base, scale
+    kd, kb, ks = enc(k.astype(jnp.float32))
+    vd, vb, vs = enc(v.astype(jnp.float32))
+    return CompressedKVPages(kd, kb, ks, vd, vb, vs)
+
+
+def dequant_pages(d: jax.Array, b: jax.Array, s: jax.Array) -> jax.Array:
+    return d.astype(jnp.float32) * s[..., None] + b[..., None]
+
+
+def paged_attention_ref(q: jax.Array, pages: CompressedKVPages,
+                        page_table: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Decode attention oracle.
+
+    q: f32 [B, KVH, G, D]; page_table: int32 [B, PMAX]; lengths: int32 [B].
+    Returns o: f32 [B, KVH, G, D].
+    """
+    b_, kvh, g, d = q.shape
+    pmax = page_table.shape[1]
+    page = pages.kd.shape[2]
+
+    k = dequant_pages(pages.kd, pages.kb, pages.ks)   # [P, KVH, page, D]
+    v = dequant_pages(pages.vd, pages.vb, pages.vs)
+
+    kg = k[page_table]                                 # [B, PMAX, KVH, page, D]
+    vg = v[page_table]
+    kg = jnp.moveaxis(kg, 2, 1).reshape(b_, kvh, pmax * page, d)
+    vg = jnp.moveaxis(vg, 2, 1).reshape(b_, kvh, pmax * page, d)
+
+    scores = jnp.einsum("bhgd,bhtd->bhgt", q, kg) / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(pmax * page)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", w, vg)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (not a module constant) so importing this module
+never touches jax device state.  Under the dry-run's
+``--xla_force_host_platform_device_count=512`` both meshes build; the
+single-pod mesh takes the first 256 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) > n:
+        devices = devices[:n]
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    assert len(devices) == n, (len(jax.devices()), n)
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
+                             ("data", "model"))

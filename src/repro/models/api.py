@@ -1,0 +1,54 @@
+"""Uniform model API — dispatch by architecture family.
+
+Every family exposes:
+  init(key) -> params
+  forward(params, batch) -> logits
+  loss(params, batch) -> scalar
+  init_cache(batch_size, max_len, enc_len=...) -> cache pytree
+  prefill(params, batch, max_len) -> (last_logits, cache)
+  decode_step(params, cache, token [B], t) -> (logits [B, V], cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ArchConfig
+
+from . import encdec, hybrid, transformer, xlstm
+
+
+class ModelAPI(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        mod: Any = encdec
+    elif cfg.family == "ssm":
+        mod = xlstm
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    else:  # dense | moe | vlm
+        mod = transformer
+
+    def bind(fname):
+        fn = getattr(mod, fname)
+        return functools.partial(fn, cfg)
+
+    return ModelAPI(
+        cfg=cfg,
+        init=bind("init_params"),
+        forward=bind("forward"),
+        loss=bind("loss_fn"),
+        init_cache=bind("init_cache"),
+        prefill=bind("prefill"),
+        decode_step=bind("decode_step"),
+    )

@@ -1,0 +1,316 @@
+"""Attention variants: GQA (full / sliding-window / ring-buffer decode),
+MLA (DeepSeek multi-head latent attention), and cross-attention.
+
+Conventions:
+  * activations [B, S, D]; heads H, KV heads K (H % K == 0), head_dim Dh;
+  * full-sequence paths are *query-chunked* (exact softmax per chunk) so the
+    S x T score matrix never materializes — memory O(chunk x T);
+  * decode paths take caches owned by the caller and a scalar position t;
+  * window == 0 or >= T means global attention (the per-layer window arrives
+    as a traced scalar so gemma3's 5:1 local:global pattern scans cleanly).
+
+The decode KV caches are where the thesis plugs in: serving stores them as
+BDI-compressed LCP pages (serving/kv_cache.py) and the fused Pallas kernel
+(kernels/paged_attention.py) consumes that format directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import DP, MODEL, shard
+
+from . import layers as L
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+             bias: bool = False, dtype=jnp.bfloat16) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(kq, d, (n_heads, head_dim), bias=bias, dtype=dtype),
+        "wk": L.init_linear(kk, d, (n_kv, head_dim), bias=bias, dtype=dtype),
+        "wv": L.init_linear(kv, d, (n_kv, head_dim), bias=bias, dtype=dtype),
+        "wo": {"w": L._dense_init(ko, (n_heads, head_dim, d), dtype)},
+    }
+
+
+def _proj_out(p: dict, ctx: jax.Array) -> jax.Array:
+    """ctx [B, S, H, Dh] -> [B, S, D]."""
+    y = jnp.einsum("bshd,hdD->bsD", ctx, p["wo"]["w"],
+                   preferred_element_type=jnp.float32).astype(ctx.dtype)
+    return shard(y, DP, None, None)
+
+
+def _chunked_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, k_pos: jax.Array,
+                  causal: bool, window: jax.Array | int,
+                  chunk: int = 1024) -> jax.Array:
+    """Exact attention, chunked over queries.
+
+    q [B, S, K, G, Dh]; k/v [B, T, K, Dh]; returns [B, S, K, G, Dh].
+    window: 0 => global; else only positions in (qp - window, qp].
+    """
+    b, s, kh, g, dh = q.shape
+    t = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    window = jnp.asarray(window, jnp.int32)
+
+    n_chunks = max(1, (s + chunk - 1) // chunk)
+    c = (s + n_chunks - 1) // n_chunks
+    pad = n_chunks * c - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, pad),), constant_values=-1)
+    qc = q.reshape(b, n_chunks, c, kh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(n_chunks, c)
+
+    def one_chunk(args):
+        qi, qpi = args                              # [B, c, K, G, Dh], [c]
+        scores = jnp.einsum("bckgd,btkd->bckgt", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        m = qpi[:, None] >= k_pos[None, :] if causal else \
+            jnp.ones((c, t), bool)
+        m &= (qpi[:, None] >= 0) & (k_pos[None, :] >= 0)
+        m &= jnp.where(window > 0,
+                       k_pos[None, :] > qpi[:, None] - window, True)
+        scores = jnp.where(m[None, :, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bckgt,btkd->bckgd", w,
+                          v.astype(jnp.float32)).astype(qi.dtype)
+
+    out = jax.lax.map(one_chunk, (qc, qp))
+    dv = v.shape[-1]                                 # may differ from dh (MLA)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, n_chunks * c, kh, g, dv)
+    return out[:, :s]
+
+
+def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
+                window: jax.Array | int = 0, theta: float = 1e4,
+                causal: bool = True,
+                kv_x: jax.Array | None = None,
+                kv_positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence GQA. positions [S]. kv_x enables cross-attention."""
+    b, s, d = x.shape
+    kv_in = x if kv_x is None else kv_x
+    kvp = positions if kv_positions is None else kv_positions
+
+    q = L.linear(p["wq"], x)                         # [B, S, H, Dh]
+    k = L.linear(p["wk"], kv_in)                     # [B, T, K, Dh]
+    v = L.linear(p["wv"], kv_in)
+    q = shard(q, DP, None, MODEL, None)
+    k = shard(k, DP, None, MODEL, None)
+    v = shard(v, DP, None, MODEL, None)
+
+    dh = q.shape[-1]
+    if theta > 0:
+        cos_q, sin_q = L.rope_angles(positions, dh, theta)
+        q = L.apply_rope(q, cos_q[None, :, None, :], sin_q[None, :, None, :])
+        cos_k, sin_k = L.rope_angles(kvp, dh, theta)
+        k = L.apply_rope(k, cos_k[None, :, None, :], sin_k[None, :, None, :])
+
+    h, kh = q.shape[2], k.shape[2]
+    qg = q.reshape(b, s, kh, h // kh, dh)
+    ctx = _chunked_attn(qg, k, v, positions, kvp, causal, window)
+    ctx = ctx.reshape(b, s, h, dh)
+    return _proj_out(p, ctx)
+
+
+def gqa_decode(p: dict, x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               t: jax.Array, *, ring: bool, theta: float = 1e4,
+               window: jax.Array | int = 0
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. x [B, 1, D]; caches [B, Tc, K, Dh]; t scalar pos.
+
+    ring=True: cache is a ring buffer of size Tc == window (slot = pos % Tc).
+    Returns (y [B,1,D], k_cache', v_cache').
+    """
+    b = x.shape[0]
+    tc = k_cache.shape[1]
+    q = L.linear(p["wq"], x)                         # [B, 1, H, Dh]
+    k_new = L.linear(p["wk"], x)                     # [B, 1, K, Dh]
+    v_new = L.linear(p["wv"], x)
+    dh = q.shape[-1]
+
+    if theta > 0:
+        pos_t = jnp.asarray(t, jnp.int32)[None]
+        cos, sin = L.rope_angles(pos_t, dh, theta)
+        q = L.apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k_new = L.apply_rope(k_new, cos[None, :, None, :],
+                             sin[None, :, None, :])
+
+    slot = jnp.where(ring, jnp.asarray(t) % tc, jnp.asarray(t))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+
+    sidx = jnp.arange(tc, dtype=jnp.int32)
+    if ring:
+        # slot s holds the largest position p <= t with p % Tc == s
+        slot_pos = t - ((t - sidx) % tc)
+    else:
+        slot_pos = sidx
+    valid = (slot_pos >= 0) & (slot_pos <= t)
+    if not ring:
+        w = jnp.asarray(window, jnp.int32)
+        valid &= jnp.where(w > 0, slot_pos > t - w, True)
+
+    h, kh = q.shape[2], k_cache.shape[2]
+    qg = q.reshape(b, kh, h // kh, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    wts = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgt,btkd->bkgd", wts,
+                     v_cache.astype(jnp.float32)).astype(x.dtype)
+    ctx = ctx.reshape(b, 1, h, dh)
+    return _proj_out(p, ctx), k_cache, v_cache
+
+
+def gqa_prefill_cache(p: dict, x: jax.Array, positions: jax.Array,
+                      cache_len: int, *, ring: bool, theta: float = 1e4
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Compute K/V for a prompt and lay them out as a decode cache."""
+    k = L.linear(p["wk"], x)
+    v = L.linear(p["wv"], x)
+    dh = k.shape[-1]
+    if theta > 0:
+        cos, sin = L.rope_angles(positions, dh, theta)
+        k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+    b, s, kh, _ = k.shape
+    kc = jnp.zeros((b, cache_len, kh, dh), k.dtype)
+    vc = jnp.zeros_like(kc)
+    if ring:
+        take = min(cache_len, s)
+        idx = positions[-take:] % cache_len
+        kc = kc.at[:, idx].set(k[:, -take:])
+        vc = vc.at[:, idx].set(v[:, -take:])
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, :cache_len], 0,
+                                                 axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, :cache_len], 0,
+                                                 axis=1)
+    return kc, vc
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2), absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d: int, n_heads: int, r: int, dn: int, dr: int, dv: int,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.init_linear(ks[0], d, (n_heads, dn + dr), dtype=dtype),
+        "wdkv": L.init_linear(ks[1], d, r, dtype=dtype),
+        "wkr": L.init_linear(ks[2], d, dr, dtype=dtype),
+        "kv_norm": L.init_rmsnorm(r),
+        "wuk": {"w": L._dense_init(ks[3], (r, n_heads, dn), dtype)},
+        "wuv": {"w": L._dense_init(ks[4], (r, n_heads, dv), dtype)},
+        "wo": {"w": L._dense_init(ks[5], (n_heads, dv, d), dtype)},
+    }
+
+
+def _mla_qkr(p: dict, x: jax.Array, positions: jax.Array, dn: int, dr: int,
+             theta: float) -> tuple[jax.Array, jax.Array]:
+    q = L.linear(p["wq"], x)                        # [B, S, H, dn+dr]
+    q = shard(q, DP, None, MODEL, None)
+    qn, qr = q[..., :dn], q[..., dn:]
+    cos, sin = L.rope_angles(positions, dr, theta)
+    qr = L.apply_rope(qr, cos[None, :, None, :], sin[None, :, None, :])
+    return qn, qr
+
+
+def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
+                dn: int, dr: int, theta: float = 1e4) -> jax.Array:
+    """Naive (materialized) MLA for train/prefill; causal."""
+    b, s, d = x.shape
+    qn, qr = _mla_qkr(p, x, positions, dn, dr, theta)
+
+    c = L.rmsnorm(p["kv_norm"], L.linear(p["wdkv"], x))      # [B, S, r]
+    kr = L.linear(p["wkr"], x)[:, :, None, :]                # [B, S, 1, dr]
+    cos, sin = L.rope_angles(positions, dr, theta)
+    kr = L.apply_rope(kr, cos[None, :, None, :], sin[None, :, None, :])
+
+    kn = jnp.einsum("bsr,rhd->bshd", c, p["wuk"]["w"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhd->bshd", c, p["wuv"]["w"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    kn = shard(kn, DP, None, MODEL, None)
+    v = shard(v, DP, None, MODEL, None)
+
+    h = qn.shape[2]
+    dh = qn.shape[-1] + qr.shape[-1]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, kn.shape[:3] + (dr,))],
+                        axis=-1)
+    qg = q.reshape(b, s, h, 1, dh)
+    ctx = _chunked_attn(qg, k, v, positions, positions, True, 0)
+    ctx = ctx.reshape(b, s, h, v.shape[-1])
+    return _proj_out(p, ctx)
+
+
+def mla_decode(p: dict, x: jax.Array, c_cache: jax.Array, kr_cache: jax.Array,
+               t: jax.Array, dn: int, dr: int, theta: float = 1e4
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-matrix decode: attention runs in the r-dim latent space.
+
+    The cache *is* the compressed latent (c [B, T, r], k_rope [B, T, dr]) —
+    MLA is itself a learned KV compression; BDI-LCP pages then compress the
+    latent further (DESIGN.md §Arch-applicability).
+    """
+    b = x.shape[0]
+    qn, qr = _mla_qkr(p, x, jnp.asarray(t, jnp.int32)[None], dn, dr, theta)
+
+    c_new = L.rmsnorm(p["kv_norm"], L.linear(p["wdkv"], x))  # [B, 1, r]
+    kr_new = L.linear(p["wkr"], x)                            # [B, 1, dr]
+    cos, sin = L.rope_angles(jnp.asarray(t, jnp.int32)[None], dr, theta)
+    kr_new = L.apply_rope(kr_new[:, :, None, :],
+                          cos[None, :, None, :],
+                          sin[None, :, None, :])[:, :, 0, :]
+
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), jnp.asarray(t), axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), jnp.asarray(t), axis=1)
+
+    # absorb W_uk into q: q_eff [B, H, r]
+    q_eff = jnp.einsum("bshd,rhd->bshr", qn, p["wuk"]["w"],
+                       preferred_element_type=jnp.float32)[:, 0]
+    scores = jnp.einsum("bhr,btr->bht", q_eff,
+                        c_cache.astype(jnp.float32))
+    scores += jnp.einsum("bhd,btd->bht", qr[:, 0].astype(jnp.float32),
+                         kr_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(dn + dr))
+    tidx = jnp.arange(c_cache.shape[1])
+    scores = jnp.where((tidx <= t)[None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bht,btr->bhr", w, c_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat,
+                     p["wuv"]["w"].astype(jnp.float32)).astype(x.dtype)
+    return _proj_out(p, ctx[:, None]), c_cache, kr_cache
+
+
+def mla_prefill_cache(p: dict, x: jax.Array, positions: jax.Array,
+                      cache_len: int, theta: float = 1e4
+                      ) -> tuple[jax.Array, jax.Array]:
+    c = L.rmsnorm(p["kv_norm"], L.linear(p["wdkv"], x))
+    kr = L.linear(p["wkr"], x)[:, :, None, :]
+    dr = kr.shape[-1]
+    cos, sin = L.rope_angles(positions, dr, theta)
+    kr = L.apply_rope(kr, cos[None, :, None, :], sin[None, :, None, :])[:, :, 0]
+    b, s, r = c.shape
+    cc = jnp.zeros((b, cache_len, r), c.dtype)
+    krc = jnp.zeros((b, cache_len, dr), kr.dtype)
+    cc = jax.lax.dynamic_update_slice_in_dim(cc, c[:, :cache_len], 0, axis=1)
+    krc = jax.lax.dynamic_update_slice_in_dim(krc, kr[:, :cache_len], 0,
+                                              axis=1)
+    return cc, krc

@@ -1,0 +1,214 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over precomputed audio-frame
+embeddings (the modality frontend is a stub per the assignment —
+``input_specs`` supplies [B, S_enc, D] frames).
+Decoder: causal self-attention + cross-attention to the encoder memory.
+
+Decode caches: self-attention KV per decoder layer + cross K/V computed
+once from the encoder memory at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.axes import DP, MODEL, shard
+
+from . import attention as A
+from . import layers as L
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def _init_enc_block(cfg: ArchConfig, key) -> dict:
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_gqa(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim),
+        "ffn": L.init_mlp(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_block(cfg: ArchConfig, key) -> dict:
+    ka, kx, kf = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "lnx": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_gqa(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim),
+        "cross": A.init_gqa(kx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim),
+        "ffn": L.init_mlp(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ke, kb1, kb2, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _init_enc_block(cfg, k))(
+        jax.random.split(kb1, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_block(cfg, k))(
+        jax.random.split(kb2, cfg.n_layers))
+    return {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.init_lm_head(kh, cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, enc_embeds: jax.Array,
+           remat: bool = True) -> jax.Array:
+    x = shard(enc_embeds.astype(jnp.bfloat16), DP, None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        x = x + A.gqa_forward(bp["attn"], h, positions, causal=False,
+                              theta=cfg.rope_theta)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["ffn"], h), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _hidden(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    """Teacher-forcing decoder hidden states (pre-LM-head)."""
+    memory = encode(cfg, params, batch["enc_embeds"], remat)
+    x = L.embed(params["embed"], batch["tokens"])
+    x = shard(x, DP, None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        x = x + A.gqa_forward(bp["attn"], h, positions, theta=cfg.rope_theta)
+        h = L.rmsnorm(bp["lnx"], x, cfg.norm_eps)
+        x = x + A.gqa_forward(bp["cross"], h, positions, causal=False,
+                              theta=0.0, kv_x=memory, kv_positions=mem_pos)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["ffn"], h), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    """Teacher-forcing: encoder over frames, decoder over tokens."""
+    logits = L.lm_logits(params["lm_head"], _hidden(cfg, params, batch,
+                                                    remat))
+    return shard(logits, DP, None, MODEL)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = _hidden(cfg, params, batch)
+    return L.chunked_cross_entropy(params["lm_head"], x, batch["targets"],
+                                   batch.get("loss_mask"))
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array    # [L, B, T, K, Dh]
+    self_v: jax.Array
+    cross_k: jax.Array   # [L, B, S_enc, K, Dh]
+    cross_v: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               enc_len: int = 4096, dtype=jnp.bfloat16) -> EncDecCache:
+    lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return EncDecCache(
+        self_k=jnp.zeros((lyr, batch, max_len, k, dh), dtype),
+        self_v=jnp.zeros((lyr, batch, max_len, k, dh), dtype),
+        cross_k=jnp.zeros((lyr, batch, enc_len, k, dh), dtype),
+        cross_v=jnp.zeros((lyr, batch, enc_len, k, dh), dtype),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: EncDecCache,
+                token: jax.Array, t: jax.Array
+                ) -> tuple[jax.Array, EncDecCache]:
+    x = L.embed(params["embed"], token[:, None])
+    enc_len = cache.cross_k.shape[2]
+
+    def body(carry, layer):
+        x, sk, sv = carry
+        bp, ck, cv, i = layer
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        y, k2, v2 = A.gqa_decode(bp["attn"], h, sk[i], sv[i], t, ring=False,
+                                 theta=cfg.rope_theta)
+        x = x + y
+        sk = sk.at[i].set(k2)
+        sv = sv.at[i].set(v2)
+        # cross attention against the static encoder memory
+        h = L.rmsnorm(bp["lnx"], x, cfg.norm_eps)
+        q = L.linear(bp["cross"]["wq"], h)
+        b_, _, hh, dh = q.shape
+        kh = ck.shape[2]
+        qg = q.reshape(b_, kh, hh // kh, dh)
+        scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                            ck.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bkgt,btkd->bkgd", w, cv.astype(jnp.float32))
+        ctx = ctx.reshape(b_, 1, hh, dh).astype(x.dtype)
+        x = x + A._proj_out(bp["cross"], ctx)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return (x + L.mlp(bp["ffn"], h), sk, sv), None
+
+    idx = jnp.arange(cfg.n_layers)
+    (x, sk, sv), _ = jax.lax.scan(
+        body, (x, cache.self_k, cache.self_v),
+        (params["dec_blocks"], cache.cross_k, cache.cross_v, idx))
+    cache = cache._replace(self_k=sk, self_v=sv)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x)[:, 0]
+    return shard(logits, DP, MODEL), cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
+            ) -> tuple[jax.Array, EncDecCache]:
+    memory = encode(cfg, params, batch["enc_embeds"], remat=False)
+    b, s_enc, _ = memory.shape
+    mem_pos = jnp.arange(s_enc, dtype=jnp.int32)
+    x = L.embed(params["embed"], batch["tokens"])
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cache = init_cache(cfg, b, max_len, enc_len=s_enc)
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        kc, vc = A.gqa_prefill_cache(bp["attn"], h, positions, max_len,
+                                     ring=False, theta=cfg.rope_theta)
+        x = x + A.gqa_forward(bp["attn"], h, positions, theta=cfg.rope_theta)
+        h = L.rmsnorm(bp["lnx"], x, cfg.norm_eps)
+        ck = L.linear(bp["cross"]["wk"], memory)
+        cv = L.linear(bp["cross"]["wv"], memory)
+        x = x + A.gqa_forward(bp["cross"], h, positions, causal=False,
+                              theta=0.0, kv_x=memory, kv_positions=mem_pos)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["ffn"], h), (kc, vc, ck, cv)
+
+    x, (sks, svs, cks, cvs) = jax.lax.scan(body, x, params["dec_blocks"])
+    cache = EncDecCache(self_k=sks, self_v=svs, cross_k=cks, cross_v=cvs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x[:, -1:])[:, 0]
+    return shard(logits, DP, MODEL), cache

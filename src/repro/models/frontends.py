@@ -1,0 +1,90 @@
+"""Modality frontend stubs + batch construction per (arch, shape).
+
+Per the assignment, [audio]/[vlm] entries specify the transformer BACKBONE
+only: the modality frontend is a STUB — ``input_specs()`` provides
+precomputed frame/patch embeddings:
+
+  * vlm   : ``embeds`` [B, n_frontend_embeds, D] patch embeddings prepended
+            to the token sequence (total length == shape.seq_len);
+  * audio : ``enc_embeds`` [B, S_enc, D] frame embeddings feeding the
+            encoder; decoder sees tokens.  For decode shapes the decoder KV
+            length is seq_len and the encoder memory is ENC_LEN_DECODE
+            frames (interpretation documented in DESIGN.md).
+
+Two entry points with identical tree structure:
+  * ``input_specs``  — ShapeDtypeStructs, for .lower() dry-runs;
+  * ``make_batch``   — concrete random arrays, for smoke tests/examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+ENC_LEN_DECODE = 4096
+
+
+def token_len(cfg: ArchConfig, seq_len: int) -> int:
+    return seq_len - (cfg.n_frontend_embeds if cfg.frontend == "vision" else 0)
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Training/prefill batch tree of ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    st = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": st((b, token_len(cfg, s)), jnp.int32),
+        "targets": st((b, s), jnp.int32),
+        "loss_mask": st((b, s), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["embeds"] = st((b, cfg.n_frontend_embeds, cfg.d_model),
+                             jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = st((b, s, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = st((b, s), jnp.int32)
+    return batch
+
+
+def decode_struct(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Decode-step inputs (cache comes from the model's init_cache)."""
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key) -> dict:
+    """Concrete random batch matching batch_struct."""
+    ks = jax.random.split(key, 4)
+    b, s = shape.global_batch, shape.seq_len
+    tl = token_len(cfg, s)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, tl), 0, cfg.vocab, jnp.int32),
+        "targets": jax.random.randint(ks[1], (b, s), 0, cfg.vocab, jnp.int32),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["embeds"] = (jax.random.normal(
+            ks[2], (b, cfg.n_frontend_embeds, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+        # no next-token loss on image positions
+        batch["loss_mask"] = batch["loss_mask"].at[
+            :, :cfg.n_frontend_embeds].set(0.0)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = (jax.random.normal(ks[2], (b, s, cfg.d_model))
+                               * 0.02).astype(jnp.bfloat16)
+        batch["tokens"] = jax.random.randint(ks[3], (b, s), 0, cfg.vocab,
+                                             jnp.int32)
+    return batch
+
+
+def enc_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Encoder memory length for enc-dec decode shapes."""
+    if shape.is_decode:
+        return min(ENC_LEN_DECODE, shape.seq_len)
+    return shape.seq_len

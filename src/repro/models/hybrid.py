@@ -1,0 +1,238 @@
+"""Hymba-style hybrid LM: parallel attention + Mamba heads in every block.
+
+Each block: x -> norm -> {GQA attention, Mamba SSM} on the same input,
+outputs normalized and averaged (the Hymba fusion), then a SwiGLU FFN.
+A few layers (cfg.n_full_attn, spread first/middle/last) use full
+attention; the rest use sliding-window attention (ring-buffer decode
+caches), so with the O(1) Mamba state the ``long_500k`` decode fits.
+
+Not implemented from the paper: learnable meta tokens (stub note in
+DESIGN.md §2.5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed import axes as AX
+from repro.distributed.axes import DP, MODEL, shard
+
+from . import attention as A
+from . import layers as L
+from . import ssm as S
+
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """Full attention on n_full_attn layers (first/mid/last), SWA elsewhere."""
+    w = np.full(cfg.n_layers, cfg.window or 1024, np.int32)
+    full_idx = np.linspace(0, cfg.n_layers - 1,
+                           max(cfg.n_full_attn, 1)).astype(int)
+    if cfg.n_full_attn > 0:
+        w[full_idx] = 0
+    return w
+
+
+def cache_slots(cfg: ArchConfig):
+    wins = layer_windows(cfg)
+    is_global = wins == 0
+    slot = np.zeros(cfg.n_layers, np.int32)
+    slot[is_global] = np.arange(is_global.sum())
+    slot[~is_global] = np.arange((~is_global).sum())
+    return is_global, slot, (int(is_global.sum()), int((~is_global).sum()))
+
+
+def _init_block(cfg: ArchConfig, key) -> dict:
+    ka, km, kf = jax.random.split(key, 3)
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "ln_attn": L.init_rmsnorm(cfg.d_model),
+        "ln_ssm": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_gqa(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim),
+        "mamba": S.init_mamba(km, cfg.d_model, di, cfg.ssm_state,
+                              cfg.ssm_conv),
+        "ffn": L.init_mlp(kf, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _init_block(cfg, k))(
+        jax.random.split(kb, cfg.n_layers))
+    return {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.init_lm_head(kh, cfg.d_model, cfg.vocab),
+    }
+
+
+def _fuse(bp: dict, attn_y: jax.Array, ssm_y: jax.Array,
+          eps: float) -> jax.Array:
+    """Hymba head fusion: mean of per-branch normalized outputs."""
+    return 0.5 * (L.rmsnorm(bp["ln_attn"], attn_y, eps)
+                  + L.rmsnorm(bp["ln_ssm"], ssm_y, eps))
+
+
+def _hidden(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    x = L.embed(params["embed"], batch["tokens"])
+    x = shard(x, DP, None, None)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    wins = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        bp, w = xs
+        x = AX.shard_seq(x)
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        attn_y = A.gqa_forward(bp["attn"], h, positions, window=w,
+                               theta=cfg.rope_theta)
+        ssm_y = S.mamba_forward(bp["mamba"], h, cfg.ssm_state)
+        x = x + _fuse(bp, attn_y, ssm_y, cfg.norm_eps)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["ffn"], h), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], wins))
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    logits = L.lm_logits(params["lm_head"], _hidden(cfg, params, batch,
+                                                    remat))
+    return shard(logits, DP, None, MODEL)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = _hidden(cfg, params, batch)
+    return L.chunked_cross_entropy(params["lm_head"], x, batch["targets"],
+                                   batch.get("loss_mask"))
+
+
+class HybridCache(NamedTuple):
+    full_k: jax.Array   # [n_full, B, T, K, Dh]
+    full_v: jax.Array
+    ring_k: jax.Array   # [n_swa, B, W, K, Dh]
+    ring_v: jax.Array
+    ssm_h: jax.Array    # [L, B, di, n]
+    conv: jax.Array     # [L, B, cw-1, di]
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> HybridCache:
+    _, _, (n_g, n_l) = cache_slots(cfg)
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    di = cfg.ssm_expand * cfg.d_model
+    w = min(max(cfg.window or 1024, 1), max_len)
+    return HybridCache(
+        full_k=jnp.zeros((n_g, batch, max_len, k, dh), dtype),
+        full_v=jnp.zeros((n_g, batch, max_len, k, dh), dtype),
+        ring_k=jnp.zeros((n_l, batch, w, k, dh), dtype),
+        ring_v=jnp.zeros((n_l, batch, w, k, dh), dtype),
+        ssm_h=jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state),
+                        jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, di), dtype),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: HybridCache,
+                token: jax.Array, t: jax.Array
+                ) -> tuple[jax.Array, HybridCache]:
+    x = L.embed(params["embed"], token[:, None])
+    is_g, slots, _ = cache_slots(cfg)
+    idx = jnp.arange(cfg.n_layers)
+    xs = (params["blocks"], jnp.asarray(is_g), jnp.asarray(slots), idx)
+
+    def body(carry, layer):
+        x, cch = carry
+        bp, g, slot, i = layer
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+
+        def global_branch(_):
+            y, k2, v2 = A.gqa_decode(bp["attn"], h, cch.full_k[slot],
+                                     cch.full_v[slot], t, ring=False,
+                                     theta=cfg.rope_theta)
+            return y, cch._replace(full_k=cch.full_k.at[slot].set(k2),
+                                   full_v=cch.full_v.at[slot].set(v2))
+
+        def local_branch(_):
+            y, k2, v2 = A.gqa_decode(bp["attn"], h, cch.ring_k[slot],
+                                     cch.ring_v[slot], t, ring=True,
+                                     theta=cfg.rope_theta)
+            return y, cch._replace(ring_k=cch.ring_k.at[slot].set(k2),
+                                   ring_v=cch.ring_v.at[slot].set(v2))
+
+        if cache.ring_k.shape[0] == 0:
+            attn_y, cch = global_branch(None)
+        elif cache.full_k.shape[0] == 0:
+            attn_y, cch = local_branch(None)
+        else:
+            attn_y, cch = jax.lax.cond(g, global_branch, local_branch, None)
+
+        ssm_y, h2, conv2 = S.mamba_decode(bp["mamba"], h, cch.ssm_h[i],
+                                          cch.conv[i], cfg.ssm_state)
+        cch = cch._replace(ssm_h=cch.ssm_h.at[i].set(h2),
+                           conv=cch.conv.at[i].set(conv2))
+        x = x + _fuse(bp, attn_y, ssm_y, cfg.norm_eps)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return (x + L.mlp(bp["ffn"], h), cch), None
+
+    (x, cache), _ = jax.lax.scan(body, (x, cache), xs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x)[:, 0]
+    return shard(logits, DP, MODEL), cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
+            ) -> tuple[jax.Array, HybridCache]:
+    x = L.embed(params["embed"], batch["tokens"])
+    x = shard(x, DP, None, None)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    wins = jnp.asarray(layer_windows(cfg))
+    cache = init_cache(cfg, b, max_len)
+    is_g, slots, _ = cache_slots(cfg)
+    ring_len = cache.ring_k.shape[2] if cache.ring_k.shape[0] else 0
+
+    def body(x, xs):
+        bp, w = xs
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        kc, vc = A.gqa_prefill_cache(bp["attn"], h, positions, max_len,
+                                     ring=False, theta=cfg.rope_theta)
+        attn_y = A.gqa_forward(bp["attn"], h, positions, window=w,
+                               theta=cfg.rope_theta)
+        ssm_y, h_last, conv_tail = S.mamba_forward(bp["mamba"], h,
+                                                   cfg.ssm_state,
+                                                   return_state=True)
+        x = x + _fuse(bp, attn_y, ssm_y, cfg.norm_eps)
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        return x + L.mlp(bp["ffn"], h), (kc, vc, h_last, conv_tail)
+
+    x, (ks, vs, hs, convs) = jax.lax.scan(body, x, (params["blocks"], wins))
+    cache = cache._replace(ssm_h=hs, conv=convs)
+    if cache.full_k.shape[0]:
+        gi = jnp.asarray(np.nonzero(is_g)[0])
+        cache = cache._replace(full_k=ks[gi], full_v=vs[gi])
+    if cache.ring_k.shape[0]:
+        li = jnp.asarray(np.nonzero(~is_g)[0])
+        take = min(ring_len, s)
+        idx = positions[s - take:s] % ring_len
+        rk = jnp.zeros_like(cache.ring_k).at[:, :, idx].set(
+            ks[li][:, :, s - take:s])
+        rv = jnp.zeros_like(cache.ring_v).at[:, :, idx].set(
+            vs[li][:, :, s - take:s])
+        cache = cache._replace(ring_k=rk, ring_v=rv)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x[:, -1:])[:, 0]
+    return shard(logits, DP, MODEL), cache

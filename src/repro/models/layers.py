@@ -1,0 +1,173 @@
+"""Shared building blocks: norms, RoPE, linear, SwiGLU, embeddings.
+
+Pure functional style: ``init_*`` returns a params dict; the apply function
+takes (params, inputs).  All inits take an explicit PRNG key and are
+vmap-able so per-layer parameters stack along a leading axis for
+``lax.scan`` over layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import DP, MODEL, shard
+
+Init = jax.nn.initializers
+
+
+def _dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * p["w"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out, bias: bool = False,
+                dtype=jnp.bfloat16) -> dict:
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    p = {"w": _dense_init(key, shape, dtype)}
+    if bias:
+        p["b"] = jnp.zeros(shape[1:], dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    w = p["w"]
+    out_dims = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int,
+                theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> cos/sin [..., dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., T, H, dim]; cos/sin broadcastable [..., T, 1, dim/2]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, f, dtype=dtype),
+        "up": init_linear(k2, d, f, dtype=dtype),
+        "down": init_linear(k3, f, d, dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(linear(p["gate"], x).astype(jnp.float32)).astype(x.dtype)
+    h = h * linear(p["up"], x)
+    h = shard(h, DP, None, MODEL)
+    return linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"w": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def init_lm_head(key, d: int, vocab: int, dtype=jnp.bfloat16) -> dict:
+    return init_linear(key, d, vocab, dtype=dtype)
+
+
+def lm_logits(p: dict, x: jax.Array) -> jax.Array:
+    return linear(p, x)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean masked token cross-entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(head_p: dict, x: jax.Array, targets: jax.Array,
+                          mask: jax.Array | None = None,
+                          chunk: int = 2048) -> jax.Array:
+    """CE over the vocab head without materializing [B, S, V] logits.
+
+    The sequence is processed in chunks with per-chunk remat, so peak
+    memory holds one chunk's logits only (for a 1M-token global batch at
+    vocab 32k the full f32 logits would be 134TB — this is what makes
+    train_4k fit).
+    """
+    b, s, d = x.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    n_chunks = max(1, (s + chunk - 1) // chunk)
+    c = (s + n_chunks - 1) // n_chunks
+    pad = n_chunks * c - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = x.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, c).transpose(1, 0, 2).astype(jnp.float32)
+
+    @jax.checkpoint
+    def one(args):
+        xi, ti, mi = args
+        logits = linear(head_p, xi).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mi), jnp.sum(mi)
+
+    nll, cnt = jax.lax.map(one, (xc, tc, mc))
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Two execution paths with identical math:
+
+  * ``_moe_local``  — plain jnp (no mesh / inside shard_map): top-k routing,
+    capacity-bounded scatter dispatch, per-expert SwiGLU, weighted combine.
+  * sharded path    — ``shard_map`` over (dp..., "model"): activations are
+    replicated across "model" (Megatron-style TP keeps them so between
+    blocks), expert weights are sharded over "model" (EP); every device
+    routes its own data shard's tokens through its local experts and a
+    ``psum`` over "model" combines — the all-to-all collapses into the same
+    reduction the dense-TP FFN already pays (DESIGN.md §Distribution).
+
+Supports DeepSeek-style shared experts (always-on) and Arctic-style dense
+residual FFN in parallel with the routed experts.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import axes as AX
+
+from . import layers as L
+
+
+def init_moe(key, d: int, f_expert: int, n_experts: int,
+             n_shared: int = 0, dtype=jnp.bfloat16) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    keys = jax.random.split(ke, n_experts)
+    experts = jax.vmap(lambda k: L.init_mlp(k, d, f_expert, dtype))(keys)
+    p = {"router": L.init_linear(kr, d, n_experts, dtype=jnp.float32),
+         "experts": experts}
+    if n_shared:
+        p["shared"] = L.init_mlp(ks, d, n_shared * f_expert, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int,
+              factor: float = 1.25) -> int:
+    return max(8, int(math.ceil(n_tokens * top_k / n_experts * factor)))
+
+
+def _route(router: dict, x2d: jax.Array, top_k: int, n_experts: int
+           ) -> tuple[jax.Array, jax.Array]:
+    """x2d [T, D] -> (gates [T, k] f32, experts [T, k] i32)."""
+    logits = L.linear(router, x2d.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates.astype(jnp.float32), idx.astype(jnp.int32)
+
+
+def _moe_local(p: dict, x2d: jax.Array, top_k: int, n_experts: int,
+               e_offset: int, e_local: int, capacity: int) -> jax.Array:
+    """Route T tokens through experts [e_offset, e_offset + e_local)."""
+    t, d = x2d.shape
+    gates, idx = _route(p["router"], x2d, top_k, n_experts)
+
+    flat_e = idx.reshape(-1)                                  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                      # pos within expert
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    local = (flat_e >= e_offset) & (flat_e < e_offset + e_local)
+    keep = (pos < capacity) & local
+    e_loc = jnp.where(keep, flat_e - e_offset, 0)
+    slot = jnp.where(keep, pos, capacity)                     # cap = dropped
+
+    # dispatch: [E_loc, C+1, D] (last slot is the trash bin)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    buf = jnp.zeros((e_local, capacity + 1, d), x2d.dtype)
+    buf = buf.at[e_loc, slot].set(jnp.where(keep[:, None], x2d[tok], 0),
+                                  mode="drop")
+    xe = buf[:, :capacity]                                    # [E_loc, C, D]
+
+    w = p["experts"]
+    # bf16 operands + f32 accumulation: weight grads come out bf16, so the
+    # stacked [L, E, D, F] gradient leaves never materialize in f32
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w["gate"]["w"],
+                               preferred_element_type=jnp.float32))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w["up"]["w"],
+                       preferred_element_type=jnp.float32)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(xe.dtype), w["down"]["w"],
+                    preferred_element_type=jnp.float32)       # [E_loc, C, D]
+
+    # combine: gather each (token, k) expert output, weight by gate
+    ye_pad = jnp.concatenate([ye, jnp.zeros((e_local, 1, d), ye.dtype)],
+                             axis=1)
+    contrib = ye_pad[e_loc, slot]                             # [T*k, D]
+    contrib = contrib * jnp.where(keep, gates.reshape(-1), 0.0)[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[tok].add(contrib)
+    return out
+
+
+def moe_ffn(p: dict, x: jax.Array, *, top_k: int, n_experts: int,
+            capacity_factor: float = 1.25) -> jax.Array:
+    """[B, S, D] -> [B, S, D]; shard_map EP path when a mesh is active."""
+    b, s, d = x.shape
+    mesh = AX.current_mesh()
+    x2d = x.reshape(b * s, d)
+
+    if mesh is None or "model" not in mesh.axis_names:
+        cap = _capacity(b * s, top_k, n_experts, capacity_factor)
+        out = _moe_local(p, x2d, top_k, n_experts, 0, n_experts, cap)
+        y = out.reshape(b, s, d).astype(x.dtype)
+    else:
+        m = mesh.shape["model"]
+        assert n_experts % m == 0, (n_experts, m)
+        e_local = n_experts // m
+        dp = AX.dp_axes()
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        t_loc = max(1, b * s // dp_size)
+        cap = _capacity(t_loc, top_k, n_experts, capacity_factor)
+
+        def kernel(router_w, experts, x_loc):
+            midx = jax.lax.axis_index("model")
+            pp = {"router": router_w, "experts": experts}
+            out = _moe_local(pp, x_loc, top_k, n_experts,
+                             midx * e_local, e_local, cap)
+            return jax.lax.psum(out, "model")
+
+        expert_specs = jax.tree.map(lambda _: P("model"), p["experts"])
+        router_specs = jax.tree.map(lambda _: P(), p["router"])
+        out = jax.shard_map(
+            kernel, mesh=mesh,
+            in_specs=(router_specs, expert_specs, P(dp if len(dp) > 1
+                                                    else dp[0], None)),
+            out_specs=P(dp if len(dp) > 1 else dp[0], None),
+            check_vma=False,
+        )(p["router"], p["experts"], x2d)
+        y = out.reshape(b, s, d).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], x)
+    return y
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, *, top_k: int,
+                          n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean fraction * prob)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    logits = L.linear(p["router"], x2d.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    return n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,174 @@
+"""xLSTM language model (sLSTM + mLSTM blocks) — xlstm-350m family.
+
+Block pattern: mostly mLSTM (matrix memory) with an sLSTM block every
+``cfg.slstm_every`` layers (xLSTM[7:1]-style).  No FFN (d_ff == 0): the
+up/down projections live inside the cells.  O(1)-state decode makes
+``long_500k`` runnable (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed import axes as AX
+from repro.distributed.axes import DP, MODEL, shard
+
+from . import layers as L
+from . import ssm as S
+
+
+def layer_is_slstm(cfg: ArchConfig) -> np.ndarray:
+    if cfg.slstm_every <= 0:
+        return np.zeros(cfg.n_layers, bool)
+    flags = np.zeros(cfg.n_layers, bool)
+    flags[cfg.slstm_every - 1::cfg.slstm_every] = True
+    return flags
+
+
+def _init_block(cfg: ArchConfig, key) -> dict:
+    km, ks_, kn = jax.random.split(key, 3)
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model),
+        "mlstm": S.init_mlstm(km, cfg.d_model, cfg.n_heads,
+                              proj_factor=cfg.ssm_expand),
+        "slstm": S.init_slstm(ks_, cfg.d_model, cfg.n_heads),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _init_block(cfg, k))(
+        jax.random.split(kb, cfg.n_layers))
+    return {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.init_lm_head(kh, cfg.d_model, cfg.vocab),
+    }
+
+
+def _hidden(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    x = L.embed(params["embed"], batch["tokens"])
+    x = shard(x, DP, None, None)
+    flags = jnp.asarray(layer_is_slstm(cfg))
+
+    def body(x, xs):
+        bp, is_s = xs
+        x = AX.shard_seq(x)
+        h = L.rmsnorm(bp["ln"], x, cfg.norm_eps)
+        y = jax.lax.cond(
+            is_s,
+            lambda h: S.slstm_forward(bp["slstm"], h, cfg.n_heads),
+            lambda h: S.mlstm_forward(bp["mlstm"], h, cfg.n_heads),
+            h)
+        return x + y, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], flags))
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict,
+            remat: bool = True) -> jax.Array:
+    logits = L.lm_logits(params["lm_head"], _hidden(cfg, params, batch,
+                                                    remat))
+    return shard(logits, DP, None, MODEL)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = _hidden(cfg, params, batch)
+    return L.chunked_cross_entropy(params["lm_head"], x, batch["targets"],
+                                   batch.get("loss_mask"))
+
+
+class XLSTMCache(NamedTuple):
+    mC: jax.Array      # [L, B, H, dh, dh]
+    mn: jax.Array      # [L, B, H, dh]
+    mm: jax.Array      # [L, B, H]
+    sh: jax.Array      # [L, B, d]
+    sc: jax.Array
+    sn: jax.Array
+    sm: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> XLSTMCache:
+    del max_len, dtype  # O(1) state — the whole point
+    lyr, b, h = cfg.n_layers, batch, cfg.n_heads
+    di = cfg.ssm_expand * cfg.d_model
+    dh = di // h
+    return XLSTMCache(
+        mC=jnp.zeros((lyr, b, h, dh, dh), jnp.float32),
+        mn=jnp.zeros((lyr, b, h, dh), jnp.float32),
+        mm=jnp.full((lyr, b, h), -jnp.inf, jnp.float32),
+        sh=jnp.zeros((lyr, b, cfg.d_model), jnp.float32),
+        sc=jnp.zeros((lyr, b, cfg.d_model), jnp.float32),
+        sn=jnp.ones((lyr, b, cfg.d_model), jnp.float32),
+        sm=jnp.zeros((lyr, b, cfg.d_model), jnp.float32),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: XLSTMCache,
+                token: jax.Array, t: jax.Array
+                ) -> tuple[jax.Array, XLSTMCache]:
+    del t  # recurrent state carries position implicitly
+    x = L.embed(params["embed"], token[:, None])
+    flags = jnp.asarray(layer_is_slstm(cfg))
+    idx = jnp.arange(cfg.n_layers)
+
+    def body(carry, xs):
+        x, cch = carry
+        bp, is_s, i = xs
+        h = L.rmsnorm(bp["ln"], x, cfg.norm_eps)
+
+        def s_branch(_):
+            st = {"h": cch.sh[i], "c": cch.sc[i], "n": cch.sn[i],
+                  "m": cch.sm[i]}
+            y, st2 = S.slstm_decode(bp["slstm"], h, st, cfg.n_heads)
+            c2 = cch._replace(sh=cch.sh.at[i].set(st2["h"]),
+                              sc=cch.sc.at[i].set(st2["c"]),
+                              sn=cch.sn.at[i].set(st2["n"]),
+                              sm=cch.sm.at[i].set(st2["m"]))
+            return y, c2
+
+        def m_branch(_):
+            st = {"C": cch.mC[i], "n": cch.mn[i], "m": cch.mm[i]}
+            y, st2 = S.mlstm_decode(bp["mlstm"], h, st, cfg.n_heads)
+            c2 = cch._replace(mC=cch.mC.at[i].set(st2["C"]),
+                              mn=cch.mn.at[i].set(st2["n"]),
+                              mm=cch.mm.at[i].set(st2["m"]))
+            return y, c2
+
+        y, cch = jax.lax.cond(is_s, s_branch, m_branch, None)
+        return (x + y, cch), None
+
+    (x, cache), _ = jax.lax.scan(body, (x, cache),
+                                 (params["blocks"], flags, idx))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x)[:, 0]
+    return shard(logits, DP, MODEL), cache
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
+            ) -> tuple[jax.Array, XLSTMCache]:
+    """Sequential state build-up via repeated decode (prompt scan)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+
+    def step(carry, tok_t):
+        cache, _ = carry
+        logits, cache = decode_step(cfg, params, cache, tok_t, jnp.int32(0))
+        return (cache, logits.astype(jnp.float32)), None
+
+    (cache, logits), _ = jax.lax.scan(step, (cache, jnp.zeros(
+        (b, cfg.vocab), jnp.float32)), tokens.T)
+    return logits, cache

@@ -1,0 +1,2 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                    opt_state_bytes)

@@ -1,0 +1,169 @@
+"""AdamW with optionally BDI-compressed moment state.
+
+Beyond-paper feature (DESIGN.md): optimizer moments are pure capacity in
+HBM — exactly the paper's "effective capacity" target.  ``moment_dtype``:
+
+  * ``f32``  — classic AdamW (reference);
+  * ``bf16`` — moments stored in bf16 (standard large-model practice);
+  * ``bdi8`` — moments stored as BDI value-space tiles (int8 deltas + f32
+    base/scale per 128-elt tile, ~3.8x smaller than f32): compress after
+    update, decompress before use.  The quantization error enters the
+    *state*, not the gradient, and behaves like stochastic rounding;
+    validated against f32 AdamW in tests/test_optim.py.
+
+All update math runs in f32 regardless of storage.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bdi_value as bv
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "f32"          # f32 | bf16 | bdi8
+
+
+# -- moment storage codecs ---------------------------------------------------
+#
+# bdi8 stores arrays only (jit/eval_shape-safe): int8 deltas + f32 base/scale
+# + bit-packed zero-base mask per 128-elt tile; the logical shape comes from
+# the matching parameter leaf at load time.
+
+_BDI_TILE = 128
+_BDI_MIN_SIZE = 1 << 16
+
+
+def _store(x: jax.Array, kind: str):
+    if kind == "f32":
+        return x.astype(jnp.float32)
+    if kind == "bf16":
+        return x.astype(jnp.bfloat16)
+    if kind in ("bdi8", "q8"):
+        # tile-last layout: [..., D] -> [..., D/128, 128]; the reshape stays
+        # shard-local (leading dims keep the parameter's sharding), so the
+        # compressed state never forces a resharding collective.
+        # decision depends only on the LAST dim so per-layer update slices
+        # keep the same storage structure as the full stacked leaf
+        if x.ndim and x.shape[-1] % _BDI_TILE == 0:
+            tiles = x.astype(jnp.float32).reshape(
+                *x.shape[:-1], x.shape[-1] // _BDI_TILE, _BDI_TILE)
+            if kind == "q8":
+                # zero-base-only BDI (the "Immediate" special case): per-tile
+                # power-of-two scale + int8 deltas; minimal codec temps.
+                maxres = jnp.max(jnp.abs(tiles), axis=-1)
+                scale = bv._pow2_scale(maxres, 127.0)
+                deltas = jnp.clip(jnp.round(tiles / scale[..., None]),
+                                  -127, 127).astype(jnp.int8)
+                return {"deltas": deltas, "scale": scale}
+            c = bv.compress_tiles(tiles)
+            return {"deltas": c.deltas, "base": c.base, "scale": c.scale,
+                    "maskp": bv.pack_mask(c.mask)}
+        return x.astype(jnp.float32)   # small/odd leaves stay exact
+    raise ValueError(kind)
+
+
+def _load(s: Any, kind: str, shape) -> jax.Array:
+    if isinstance(s, dict):
+        if "maskp" in s:
+            mask = bv.unpack_mask(s["maskp"])
+            tiles = (s["deltas"].astype(jnp.float32) * s["scale"][..., None]
+                     + mask.astype(jnp.float32) * s["base"][..., None])
+        else:
+            tiles = s["deltas"].astype(jnp.float32) * s["scale"][..., None]
+        return tiles.reshape(shape)
+    return s.astype(jnp.float32)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _store(z, cfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+    }
+
+
+def _sumsq(g: jax.Array) -> jax.Array:
+    """Sum of squares; big stacked leaves reduce layer-by-layer so the f32
+    square temp never materializes at full-leaf size."""
+    if g.ndim >= 2 and g.size >= (1 << 24):
+        def body(acc, gi):
+            return acc + jnp.sum(jnp.square(gi.astype(jnp.float32))), None
+        total, _ = jax.lax.scan(body, jnp.float32(0), g)
+        return total
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(_sumsq(g) for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (params', state', metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * _load(m_s, cfg.moment_dtype, p.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * _load(v_s, cfg.moment_dtype, p.shape) + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return p2, _store(m, cfg.moment_dtype), _store(v, cfg.moment_dtype)
+
+    def upd_leaf(p, g, m_s, v_s):
+        # big stacked leaves update layer-by-layer (lax.scan over dim 0) so
+        # the f32 moment/codec temps are bounded to one layer's slice
+        if p.ndim >= 2 and p.size >= (1 << 24):
+            def body(_, xs):
+                pi, gi, mi, vi = xs
+                return None, upd(pi, gi, mi, vi)
+            _, (p2, m2, v2) = jax.lax.scan(body, None, (p, g, m_s, v_s))
+            return p2, m2, v2
+        return upd(p, g, m_s, v_s)
+
+    is_store = lambda x: isinstance(x, dict) and "deltas" in x  # noqa: E731
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_store)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_store)[0]
+    out = [upd_leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, {
+        "grad_norm": gnorm, "clip_scale": scale}
+
+
+def opt_state_bytes(state, cfg: AdamWConfig) -> int:
+    """Storage accounting for the moment state (EXPERIMENTS.md)."""
+    total = 0
+    for leaf in jax.tree.leaves(state["m"]) + jax.tree.leaves(state["v"]):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,129 @@
+"""Unit + property tests for the lossless BDI codec (paper Chapter 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bdi_exact as bx
+from repro.core import patterns, prior
+
+
+def test_zero_lines_compress_to_one_byte():
+    lines = patterns.zeros_lines(16)
+    codes, sizes = bx.bdi_encode_choice(lines)
+    assert (sizes == 1).all()
+    assert (codes == bx.ENC_ZEROS.code).all()
+
+
+def test_repeated_lines_compress_to_eight_bytes():
+    lines = patterns.repeated_lines(32, seed=1)
+    codes, sizes = bx.bdi_encode_choice(lines)
+    # all-equal-8-byte lines; some may also be zeros if value drawn 0
+    assert (sizes <= 8).all()
+
+
+def test_h264ref_example_fig_3_3():
+    """Narrow 4-byte values -> Base4-D1: 4 + 16 = 20 bytes for a 64B line."""
+    words = np.arange(16, dtype="<u4") * 2  # 0x0,0x2,...: narrow
+    line = words.view(np.uint8).reshape(1, 64)
+    codes, sizes = bx.bdi_encode_choice(line)
+    assert sizes[0] == bx.ENC_B4D1.compressed_size(64) == 20
+
+
+def test_pointer_example_fig_3_4():
+    """Nearby 8-byte pointers -> Base8-D1: 8 + 8 = 16 bytes."""
+    ptrs = (0x7FFF00000000 + np.arange(8) * 8).astype("<u8")
+    line = ptrs.view(np.uint8).reshape(1, 64)
+    codes, sizes = bx.bdi_encode_choice(line)
+    assert sizes[0] == bx.ENC_B8D1.compressed_size(64) == 16
+
+
+def test_mcf_two_base_example_fig_3_5():
+    """Pointers mixed with small ints: single-base B+D fails, BDI works."""
+    lines = patterns.mixed_two_range_lines(64, seed=3)
+    bdi = bx.bdi_sizes(lines)
+    bpd1 = bx.bplusdelta_sizes(lines, n_bases=1)
+    # BDI (zero second base) compresses essentially all of these lines.
+    assert (bdi < 64).mean() > 0.95
+    assert bdi.mean() < bpd1.mean()
+
+
+def test_two_bases_is_the_sweet_spot_fig_3_6():
+    """Effective ratio peaks at ~2 bases on the thesis pattern mix."""
+    lines = patterns.thesis_mix(4096, seed=7)
+    ratios = {k: bx.effective_ratio(bx.bplusdelta_sizes(lines, n_bases=k))
+              for k in (0, 1, 2, 4, 8)}
+    assert ratios[1] > ratios[0]
+    assert ratios[2] > ratios[1]
+    # beyond two bases the base-storage overhead cancels the gains (Fig 3.6)
+    assert ratios[8] <= ratios[2] + 0.02
+
+
+def test_bdi_vs_prior_work_ordering_fig_3_7():
+    lines = patterns.thesis_mix(4096, seed=11)
+    sizes = prior.all_algorithm_sizes(lines)
+    r = {k: bx.effective_ratio(v) for k, v in sizes.items()}
+    assert r["bdi"] > r["fvc"]
+    assert r["bdi"] > r["zca"]
+    assert r["bdi"] >= r["bplusdelta"]
+    # BDI ~ B+D(2 arbitrary bases) (paper: 1.53 vs 1.51)
+    assert abs(r["bdi"] - r["bplusdelta2"]) < 0.15
+
+
+def test_table_3_2_sizes():
+    for enc, (s32, s64) in {
+        bx.ENC_B8D1: (12, 16), bx.ENC_B8D2: (16, 24), bx.ENC_B8D4: (24, 40),
+        bx.ENC_B4D1: (12, 20), bx.ENC_B4D2: (20, 36), bx.ENC_B2D1: (18, 34),
+    }.items():
+        assert enc.compressed_size(32) == s32
+        assert enc.compressed_size(64) == s64
+
+
+@pytest.mark.parametrize("gen", sorted(patterns.PATTERN_GENERATORS))
+def test_roundtrip_per_pattern(gen):
+    lines = patterns.PATTERN_GENERATORS[gen](128, seed=5)
+    c = bx.bdi_compress(lines)
+    out = bx.bdi_decompress(c)
+    np.testing.assert_array_equal(out, lines)
+
+
+def test_roundtrip_mixed_population():
+    lines = patterns.thesis_mix(2048, seed=13)
+    c = bx.bdi_compress(lines)
+    np.testing.assert_array_equal(bx.bdi_decompress(c), lines)
+    # paper sizes from the compressed object match the size oracle
+    np.testing.assert_array_equal(c.paper_sizes(), bx.bdi_sizes(lines))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.binary(min_size=0, max_size=4096))
+def test_stream_roundtrip_property(data):
+    blob = bx.compress_stream(data)
+    out = bx.decompress_stream(blob)
+    assert out.tobytes() == data
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 64), st.integers(0, 255))
+def test_ldr_lines_always_compress(base, stride, jitter):
+    """Low-dynamic-range lines must compress (the paper's core claim)."""
+    words = (np.uint64(base) + np.arange(8, dtype=np.uint64)
+             * np.uint64(stride % 16)) + np.uint64(jitter % 8)
+    line = words.astype("<u8").view(np.uint8).reshape(1, 64)
+    sizes = bx.bdi_sizes(line)
+    assert sizes[0] < 64
+
+
+def test_compression_never_corrupts_random_data():
+    lines = patterns.random_lines(512, seed=17)
+    c = bx.bdi_compress(lines)
+    np.testing.assert_array_equal(bx.bdi_decompress(c), lines)
+
+
+def test_stream_size_accounting():
+    lines = patterns.thesis_mix(1024, seed=19)
+    blob = bx.compress_stream(lines.reshape(-1))
+    # real stream must beat raw on the thesis mix, even with metadata
+    assert len(blob) < lines.size
+    c = bx.bdi_compress(lines)
+    assert c.stream_nbytes() >= int(c.paper_sizes().sum())

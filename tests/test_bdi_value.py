@@ -1,0 +1,114 @@
+"""Tests for the value-space BDI tile codec (core/bdi_value.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bdi_value as bv
+
+
+def test_zero_tiles_exact():
+    x = jnp.zeros((4, 128))
+    c = bv.compress_tiles(x)
+    assert (np.asarray(c.enc) == bv.ENC_ZERO).all()
+    np.testing.assert_array_equal(bv.decompress_tiles(c), x)
+    assert float(bv.error_bound(c).max()) == 0.0
+
+
+def test_repeated_tiles_exact():
+    x = jnp.full((4, 128), 3.25)
+    c = bv.compress_tiles(x)
+    assert (np.asarray(c.enc) == bv.ENC_REP).all()
+    np.testing.assert_array_equal(bv.decompress_tiles(c), x)
+
+
+def test_error_bound_holds_on_gaussian():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 5.0
+    c = bv.compress_tiles(x)
+    err = jnp.abs(bv.decompress_tiles(c) - x)
+    bound = bv.error_bound(c)[:, None]
+    assert bool(jnp.all(err <= bound + 1e-7))
+
+
+def test_two_base_mixture_beats_single_base():
+    """Sparse + cluster data (the mcf pattern, Fig 3.5) needs the zero base.
+
+    With the mask disabled, the same tile quantizes with a much larger scale
+    (hence larger error) than with the two-base scheme.
+    """
+    key = jax.random.PRNGKey(1)
+    big = 100.0 + jax.random.normal(key, (32, 128))
+    sparse_mask = jax.random.bernoulli(jax.random.PRNGKey(2), 0.5, (32, 128))
+    x = jnp.where(sparse_mask, big, jax.random.normal(key, (32, 128)) * 0.01)
+    x = x.at[:, 0].set(big[:, 0])  # first value = cluster base
+
+    c = bv.compress_tiles(x)
+    err_two = float(jnp.abs(bv.decompress_tiles(c) - x).max())
+
+    # single-base: force residual vs base only
+    b = x[:, :1]
+    r = x - b
+    s = bv._pow2_scale(jnp.max(jnp.abs(r), -1), 127.0)
+    one = jnp.round(r / s[:, None]).clip(-127, 127) * s[:, None] + b
+    err_one = float(jnp.abs(one - x).max())
+    assert err_two < err_one * 0.5
+
+
+def test_int16_deltas_tighter_than_int8():
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 128)) * 10
+    c8 = bv.compress_tiles(x, delta_dtype=jnp.int8)
+    c16 = bv.compress_tiles(x, delta_dtype=jnp.int16)
+    assert float(bv.error_bound(c16).max()) < float(bv.error_bound(c8).max())
+
+
+def test_raw_exception_tagging():
+    # int8 quantization error on gaussian data >> 1e-6 relative tolerance
+    x = jax.random.normal(jax.random.PRNGKey(8), (8, 128)) * 100
+    c = bv.compress_tiles(x, raw_rtol=1e-6)
+    assert (np.asarray(c.enc) == bv.ENC_RAW).all()
+    # ...but a loose tolerance keeps them compressed
+    c2 = bv.compress_tiles(x, raw_rtol=0.05)
+    assert (np.asarray(c2.enc) == bv.ENC_D8).all()
+
+
+def test_mask_pack_roundtrip():
+    m = jax.random.bernoulli(jax.random.PRNGKey(4), 0.3, (16, 128))
+    np.testing.assert_array_equal(bv.unpack_mask(bv.pack_mask(m)), m)
+
+
+def test_tensor_fold_roundtrip_odd_sizes():
+    x = jax.random.normal(jax.random.PRNGKey(5), (7, 33))
+    c, n = bv.compress_tensor(x)
+    out = bv.decompress_tensor(c, n, x.shape)
+    assert out.shape == x.shape
+    assert float(jnp.abs(out - x).max()) <= float(bv.error_bound(c).max())
+
+
+def test_compression_ratio_reporting():
+    x = jnp.zeros((64, 128))
+    c = bv.compress_tiles(x)
+    assert float(bv.compression_ratio(c)) > 50  # zero tiles ~free
+    y = jax.random.normal(jax.random.PRNGKey(6), (64, 128))
+    cy = bv.compress_tiles(y)
+    r = float(bv.compression_ratio(cy))
+    assert 1.5 < r < 2.1  # int8 deltas + metadata vs bf16
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-3, 1e3), st.floats(-1e3, 1e3))
+def test_error_bound_property(seed, spread, offset):
+    x = (jax.random.normal(jax.random.PRNGKey(seed % 1000), (4, 128))
+         * spread + offset)
+    c = bv.compress_tiles(x)
+    err = jnp.abs(bv.decompress_tiles(c) - x)
+    bound = bv.error_bound(c)[:, None] * (1 + 1e-6) + 1e-9
+    assert bool(jnp.all(err <= bound))
+
+
+def test_scale_is_power_of_two():
+    x = jax.random.normal(jax.random.PRNGKey(7), (32, 128)) * 3.7
+    c = bv.compress_tiles(x)
+    log2s = np.log2(np.asarray(c.scale))
+    np.testing.assert_array_equal(log2s, np.round(log2s))

@@ -1,0 +1,85 @@
+"""Tests for CAMP cache-management policies (core/camp.py)."""
+
+import pytest
+
+from repro.core import camp
+
+CAP = 32 << 10  # 32KB toy LLC; trace working set tuned to pressure it
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return camp.soplex_like_trace(n_epochs=12)
+
+
+@pytest.fixture(scope="module")
+def rates(trace):
+    return {p: camp.run_policy(trace, p, capacity_bytes=CAP)["miss_rate"]
+            for p in ("lru", "rrip", "ecm", "mve", "sip", "camp",
+                      "vway", "gmve", "gsip", "gcamp")}
+
+
+def test_fig_4_1_size_aware_beats_belady():
+    """The paper's motivating example: size-aware MVE > size-oblivious OPT."""
+    tr, cap = camp.fig_4_1_trace()
+    belady = camp.run_policy(tr, "belady", capacity_bytes=cap)
+    mve = camp.run_policy(tr, "mve", capacity_bytes=cap, ways=16)
+    assert mve["misses"] < belady["misses"]
+
+
+def test_size_aware_beats_size_oblivious_local(rates):
+    """CAMP/MVE < RRIP/LRU when size indicates reuse (Fig 4.8)."""
+    assert rates["camp"] < rates["rrip"] - 0.05
+    assert rates["camp"] < rates["lru"] - 0.05
+    assert rates["mve"] < rates["rrip"] - 0.05
+
+
+def test_camp_not_worse_than_ecm(rates):
+    assert rates["camp"] <= rates["ecm"] + 0.01
+
+
+def test_global_ordering_fig_4_9(rates):
+    """G-CAMP < V-Way < LRU (paper's global-policy comparison)."""
+    assert rates["gcamp"] < rates["vway"] - 0.02
+    assert rates["vway"] < rates["lru"]
+    assert rates["gmve"] < rates["vway"]
+
+
+def test_size_oblivious_trace_no_degradation():
+    """When size does not indicate reuse (mcf-like), CAMP must not regress
+    much vs RRIP (SIP learns to turn itself off)."""
+    tr = camp.mcf_like_trace(n=20_000)
+    rrip = camp.run_policy(tr, "rrip", capacity_bytes=CAP)
+    cam = camp.run_policy(tr, "camp", capacity_bytes=CAP)
+    assert cam["miss_rate"] <= rrip["miss_rate"] * 1.05 + 0.01
+
+
+def test_capacity_invariant_local():
+    """The segmented data store never exceeds its capacity."""
+    tr = camp.mcf_like_trace(n=5_000)
+    cache = camp.LocalCache(n_sets=64, ways=8, policy="camp")
+    for addr, size in tr:
+        cache.access(addr, size)
+        for s in cache.sets:
+            assert cache._used_segments(s) <= cache.capacity_segments
+            assert len(s) <= cache.max_tags
+
+
+def test_capacity_invariant_global():
+    tr = camp.mcf_like_trace(n=5_000)
+    cache = camp.GlobalCache(64 << 10, "gcamp")
+    for addr, size in tr:
+        cache.access(addr, size)
+        assert cache.used_segments <= cache.capacity_segments
+        assert len(cache.blocks) <= cache.max_tags
+
+
+def test_compressed_cache_beats_uncompressed():
+    """Effective-capacity win (Fig 3.14): same policy, compressed block
+    sizes vs all-64B, on a uniform-reuse working set larger than the cache."""
+    tr = camp.mcf_like_trace(n=30_000, working_set=3_000)
+    cap = 64 << 10
+    comp = camp.run_policy(tr, "rrip", capacity_bytes=cap)
+    uncomp = camp.run_policy([(a, 64) for a, _ in tr], "rrip",
+                             capacity_bytes=cap)
+    assert comp["miss_rate"] < uncomp["miss_rate"] - 0.1

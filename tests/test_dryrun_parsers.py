@@ -1,0 +1,63 @@
+"""Unit tests for the HLO cost/collective parsers on hand-built HLO text."""
+
+import textwrap
+
+from repro.launch import dryrun
+
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add.1
+      %one = s32[] constant(1)
+      %niv = s32[] add(%iv, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%niv, %ar)
+    }
+
+    %cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %bound = s32[] constant(12)
+      ROOT %cmp = pred[] compare(%iv2, %bound), direction=LT
+    }
+
+    %add.1 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+      %arg = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %arg)
+      %loop = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+    }
+    """)
+
+
+def test_collective_bytes_with_trip_count():
+    coll = dryrun.collective_bytes(HLO)
+    # all-reduce operand: f32[8,16] = 512 bytes, x12 loop iterations
+    assert coll["all-reduce"] == 512 * 12
+    assert coll["counts"]["all-reduce"] == 12
+
+
+def test_hlo_cost_flops_with_trip_count():
+    cost = dryrun.hlo_cost(HLO)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x12 iterations
+    assert cost["flops"] == 4096 * 12
+    assert cost["bytes"] > 0
+
+
+def test_shape_bytes():
+    assert dryrun._shape_bytes("f32[8,16]") == 512
+    assert dryrun._shape_bytes("bf16[2,2] s8[4]") == 12
+    assert dryrun._shape_bytes("pred[]") == 1  # scalar

@@ -1,0 +1,137 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (the kernel body is executed exactly as
+written); outputs must match kernels/ref.py bit-for-bit for the codec and to
+tight tolerance for attention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tile_data(key, n, t, kind):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "gauss":
+        return jax.random.normal(k1, (n, t)) * 3.0
+    if kind == "zeros":
+        return jnp.zeros((n, t))
+    if kind == "rep":
+        return jnp.broadcast_to(jax.random.normal(k1, (n, 1)), (n, t)) + 0.0
+    if kind == "sparse_cluster":
+        big = 50.0 + jax.random.normal(k1, (n, t))
+        m = jax.random.bernoulli(k2, 0.5, (n, t))
+        x = jnp.where(m, big, jax.random.normal(k3, (n, t)) * 1e-2)
+        return x.at[:, 0].set(big[:, 0])
+    if kind == "mixed":
+        rows = [jnp.zeros((1, t)), jnp.full((1, t), 7.5),
+                jax.random.normal(k1, (max(n - 2, 1), t))]
+        return jnp.concatenate(rows, axis=0)[:n]
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("n", [8, 16, 64, 100])
+@pytest.mark.parametrize("t", [128, 256])
+@pytest.mark.parametrize("kind", ["gauss", "zeros", "rep", "sparse_cluster",
+                                  "mixed"])
+def test_compress_kernel_matches_ref(n, t, kind):
+    x = _tile_data(jax.random.PRNGKey(n * t), n, t, kind).astype(jnp.float32)
+    got = ops.compress(x)
+    want = ref.compress_ref(x)
+    np.testing.assert_array_equal(np.asarray(got.deltas),
+                                  np.asarray(want.deltas))
+    np.testing.assert_array_equal(np.asarray(got.base), np.asarray(want.base))
+    np.testing.assert_array_equal(np.asarray(got.scale),
+                                  np.asarray(want.scale))
+    np.testing.assert_array_equal(np.asarray(got.maskp),
+                                  np.asarray(want.maskp))
+    np.testing.assert_array_equal(np.asarray(got.enc), np.asarray(want.enc))
+
+
+@pytest.mark.parametrize("n", [8, 32, 100])
+@pytest.mark.parametrize("t", [128, 512])
+def test_decompress_kernel_matches_ref(n, t):
+    x = _tile_data(jax.random.PRNGKey(7), n, t, "sparse_cluster")
+    p = ref.compress_ref(x.astype(jnp.float32))
+    got = ops.decompress(p)
+    want = ref.decompress_ref(p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 128)) * 10
+    p = ops.compress(x)
+    out = ops.decompress(p)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    bound = 0.5 * np.asarray(p.scale)
+    assert (err <= bound + 1e-7).all()
+
+
+def test_roundtrip_tensor_arbitrary_shape():
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 45, 17), jnp.float32)
+    out = ops.roundtrip_tensor(x)
+    assert out.shape == x.shape
+    assert np.abs(np.asarray(out - x)).max() < 0.5  # coarse sanity
+
+
+# ---------------------------------------------------------------------------
+# Paged attention
+# ---------------------------------------------------------------------------
+
+def _make_paged_case(key, bsz, kvh, g, d, page, pmax, ragged=True):
+    ks = jax.random.split(key, 6)
+    n_pages = bsz * pmax + 1
+    k = jax.random.normal(ks[0], (n_pages, kvh, page, d))
+    v = jax.random.normal(ks[1], (n_pages, kvh, page, d))
+    pages = ref.compress_kv_pages(k, v)
+    q = jax.random.normal(ks[2], (bsz, kvh, g, d))
+    # each batch element owns a disjoint slab of pages
+    page_table = (jnp.arange(bsz * pmax, dtype=jnp.int32).reshape(bsz, pmax)
+                  + 1)
+    if ragged:
+        lengths = jax.random.randint(ks[3], (bsz,), 1, pmax * page + 1)
+    else:
+        lengths = jnp.full((bsz,), pmax * page, jnp.int32)
+    return q, pages, page_table, lengths.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("bsz,kvh,g,d,page,pmax", [
+    (2, 2, 2, 128, 8, 4),
+    (1, 1, 1, 128, 16, 2),
+    (3, 4, 2, 64, 8, 3),
+    (2, 1, 8, 128, 8, 5),
+])
+def test_paged_attention_matches_ref(bsz, kvh, g, d, page, pmax):
+    q, pages, pt, lengths = _make_paged_case(
+        jax.random.PRNGKey(bsz * 100 + pmax), bsz, kvh, g, d, page, pmax)
+    got = ops.paged_attention(q, pages, pt, lengths)
+    want = ref.paged_attention_ref(q, pages, pt, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_full_lengths():
+    q, pages, pt, lengths = _make_paged_case(
+        jax.random.PRNGKey(0), 2, 2, 4, 128, 8, 4, ragged=False)
+    got = ops.paged_attention(q, pages, pt, lengths)
+    want = ref.paged_attention_ref(q, pages, pt, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_respects_lengths():
+    """Tokens beyond `length` must not influence the output."""
+    key = jax.random.PRNGKey(42)
+    q, pages, pt, _ = _make_paged_case(key, 1, 1, 2, 128, 8, 4)
+    lengths = jnp.array([9], jnp.int32)
+    out1 = ops.paged_attention(q, pages, pt, lengths)
+    # scramble all pages after the first two
+    scram = pages._replace(
+        vd=pages.vd.at[pt[0, 2]:].set(127),
+        kd=pages.kd.at[pt[0, 2]:].set(127))
+    out2 = ops.paged_attention(q, scram, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

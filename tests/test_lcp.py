@@ -1,0 +1,109 @@
+"""Tests for Linearly Compressed Pages (core/lcp.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lcp
+
+
+def _page_data(key, n=64, length=128, wild_rows=()):
+    """Smooth lines (large base + tiny spread — LDR, compressible even at
+    tight rtol) with optional gaussian 'wild' rows whose int8 quantization
+    error exceeds tight tolerances (-> exceptions)."""
+    k1, k2 = jax.random.split(key)
+    base = 100.0 + 10.0 * jax.random.normal(k1, (n, 1))
+    x = base + jax.random.normal(k2, (n, length)) * 1e-3
+    for r in wild_rows:
+        x = x.at[r].set(jax.random.normal(jax.random.PRNGKey(r), (length,))
+                        * 2.0)
+    return x
+
+
+def test_page_roundtrip_within_tolerance():
+    x = _page_data(jax.random.PRNGKey(0))
+    p = lcp.compress_page(x, exc_slots=8, raw_rtol=0.05)
+    assert not bool(p.overflow)
+    out = lcp.decompress_page(p)
+    rel = jnp.abs(out - x).max() / jnp.abs(x).max()
+    assert float(rel) < 0.05
+
+
+def test_exceptions_are_exact():
+    x = _page_data(jax.random.PRNGKey(1), wild_rows=(3, 17))
+    p = lcp.compress_page(x, exc_slots=8, raw_rtol=1e-4)
+    assert int(p.n_exc) >= 2
+    out = lcp.decompress_page(p)
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(x[3]))
+    np.testing.assert_array_equal(np.asarray(out[17]), np.asarray(x[17]))
+
+
+def test_read_line_matches_full_decompress():
+    x = _page_data(jax.random.PRNGKey(2), wild_rows=(5,))
+    p = lcp.compress_page(x, exc_slots=4, raw_rtol=1e-4)
+    full = lcp.decompress_page(p)
+    for i in (0, 5, 31, 63):
+        line = lcp.read_line(p, jnp.int32(i))
+        np.testing.assert_array_equal(np.asarray(line), np.asarray(full[i]))
+
+
+def test_page_overflow_flag():
+    x = _page_data(jax.random.PRNGKey(3))
+    # absurd tolerance: every line becomes an exception -> overflow
+    p = lcp.compress_page(x, exc_slots=4, raw_rtol=1e-9)
+    assert bool(p.overflow)
+    # accounting treats overflowed page as raw
+    assert int(lcp.page_nbytes(p)) == x.shape[0] * x.shape[1] * 2
+
+
+def test_write_line_type1_overflow():
+    x = _page_data(jax.random.PRNGKey(4))
+    p = lcp.compress_page(x, exc_slots=4, raw_rtol=1e-4)
+    n0 = int(p.n_exc)
+    wild = jax.random.normal(jax.random.PRNGKey(99), (128,)) * 2.0
+    p2, t1 = lcp.write_line(p, jnp.int32(7), wild, raw_rtol=1e-4)
+    assert bool(t1)
+    assert int(p2.n_exc) == n0 + 1
+    np.testing.assert_array_equal(
+        np.asarray(lcp.read_line(p2, jnp.int32(7))), np.asarray(wild))
+    # other lines unaffected
+    np.testing.assert_array_equal(
+        np.asarray(lcp.read_line(p2, jnp.int32(8))),
+        np.asarray(lcp.read_line(p, jnp.int32(8))))
+
+
+def test_write_line_compressible_update_no_overflow():
+    x = _page_data(jax.random.PRNGKey(5))
+    p = lcp.compress_page(x, exc_slots=4, raw_rtol=0.05)
+    new = jnp.full((128,), 2.5, jnp.float32)
+    p2, t1 = lcp.write_line(p, jnp.int32(0), new, raw_rtol=0.05)
+    assert not bool(t1)
+    np.testing.assert_array_equal(
+        np.asarray(lcp.read_line(p2, jnp.int32(0))), np.asarray(new))
+
+
+def test_recompact_frees_slots():
+    x = _page_data(jax.random.PRNGKey(6), wild_rows=(1,))
+    p = lcp.compress_page(x, exc_slots=4, raw_rtol=1e-4)
+    assert int(p.n_exc) == 1
+    smooth = jnp.ones((128,), jnp.float32)
+    p2, _ = lcp.write_line(p, jnp.int32(1), smooth, raw_rtol=1e-4)
+    p3 = lcp.recompact_page(p2, raw_rtol=1e-4)
+    assert int(p3.n_exc) == 0
+
+
+def test_compression_ratio_about_2x_for_bf16():
+    x = _page_data(jax.random.PRNGKey(7))
+    p = lcp.compress_page(x, exc_slots=8, raw_rtol=0.05)
+    r = float(lcp.page_compression_ratio(p, elem_bytes=2))
+    assert 1.5 < r < 2.0  # int8 deltas + metadata vs bf16
+
+
+def test_compress_page_is_jittable():
+    f = jax.jit(lambda x: lcp.compress_page(x, exc_slots=8, raw_rtol=0.05),
+                static_argnames=())
+    x = _page_data(jax.random.PRNGKey(8))
+    p = f(x)
+    out = lcp.decompress_page(p)
+    assert out.shape == x.shape

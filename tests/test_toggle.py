@@ -1,0 +1,65 @@
+"""Tests for toggle-aware bandwidth compression (core/toggle.py)."""
+
+import numpy as np
+
+from repro.core import bdi_exact as bx
+from repro.core import patterns, toggle
+
+
+def test_toggle_count_basics():
+    # identical flits -> zero toggles
+    assert toggle.toggle_count(b"\xAA" * 64) == 0
+    # alternating all-zeros / all-ones flits -> full-width toggles
+    stream = (b"\x00" * 16 + b"\xFF" * 16) * 4
+    assert toggle.toggle_count(stream) == 7 * 128
+
+
+def test_compression_increases_toggles():
+    """The Chapter 6 phenomenon (Fig 6.2): compressed streams toggle more."""
+    lines = patterns.narrow_lines(512, seed=0)    # nicely aligned raw data
+    raw = lines.tobytes()
+    comp = toggle.serialize_interleaved(bx.bdi_compress(lines))
+    t_raw = toggle.toggle_count(raw) / max(len(raw), 1)
+    t_comp = toggle.toggle_count(comp) / max(len(comp), 1)
+    assert t_comp > t_raw  # toggles per byte increase after compression
+
+
+def test_ec_reduces_toggle_overhead():
+    lines = np.concatenate([
+        patterns.narrow_lines(256, seed=1),
+        patterns.random_lines(256, seed=2),
+    ])
+    stats = toggle.ec_stream(lines, e_toggle=4.0, e_byte=1.0)
+    # EC must never toggle more than always-compress, and must retain
+    # some compression benefit over raw.
+    assert stats["ec_toggles"] <= stats["comp_toggles"]
+    assert stats["ec_bytes"] <= stats["raw_bytes"]
+    assert 0.0 <= stats["ec_compressed_frac"] <= 1.0
+
+
+def test_ec_extreme_energy_prices():
+    lines = patterns.thesis_mix(256, seed=3)
+    # free toggles -> always compress when smaller
+    always = toggle.ec_stream(lines, e_toggle=0.0, e_byte=1.0)
+    # toggles infinitely expensive -> (almost) never compress
+    never = toggle.ec_stream(lines, e_toggle=1e9, e_byte=1.0)
+    assert always["ec_compressed_frac"] >= never["ec_compressed_frac"]
+    assert never["ec_toggles"] <= never["raw_toggles"] + 1
+
+
+def test_metadata_consolidation_reduces_toggles():
+    """MC (Fig 6.20): consolidated headers restore alignment."""
+    lines = patterns.ldr_lines(512, seed=4)
+    c = bx.bdi_compress(lines)
+    inter = toggle.serialize_interleaved(c)
+    cons = toggle.serialize_consolidated(c)
+    # same information content, ~same size
+    assert abs(len(inter) - len(cons)) <= c.n
+    assert toggle.toggle_count(cons) <= toggle.toggle_count(inter)
+
+
+def test_dbi_reduces_toggles():
+    lines = patterns.random_lines(128, seed=5)
+    t = toggle.toggle_count(lines.tobytes())
+    t_dbi = toggle.dbi_toggle_count(lines.tobytes())
+    assert t_dbi <= t
