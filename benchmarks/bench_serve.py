@@ -1,0 +1,124 @@
+"""Serving throughput: batched device-resident engine vs the seed engine.
+
+Measures prefill and decode tokens/sec through the LCP-paged
+compressed-KV engine at batch 1/8/32 and writes a machine-readable JSON
+snapshot to ``results/serve/`` so the perf trajectory is tracked across
+PRs.  The headline row is decode tok/s at batch 8: the batched jitted
+hot path must hold >=5x over the host-looped reference (it lands ~15x on
+CPU; more where compiled Pallas is available).
+
+Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "results", "serve")
+
+PROMPT_LEN = 12
+PAGE = 8
+
+
+def _build(cfg, params, engine: str, batch: int, pool: int):
+    if engine == "batched":
+        from repro.serving.engine import PagedKVEngine
+        return PagedKVEngine(cfg, params, page_size=PAGE,
+                             n_pool_pages=pool, max_batch=batch)
+    from repro.serving.reference import ReferencePagedKVEngine
+    return ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                  n_pool_pages=pool)
+
+
+def _bench_engine(cfg, params, engine: str, batch: int,
+                  decode_steps: int) -> dict:
+    pool = max(256, batch * 16)
+    eng = _build(cfg, params, engine, batch, pool)
+    prompts = {i: [1 + (i * 7 + j) % (cfg.vocab - 1)
+                   for j in range(PROMPT_LEN)] for i in range(batch)}
+
+    t0 = time.time()
+    for sid, p in prompts.items():
+        eng.add_request(sid, p)
+    prefill_s = time.time() - t0
+
+    if engine == "batched":
+        eng.decode_batch()                       # trace/compile warmup
+        t0 = time.time()
+        for _ in range(decode_steps):
+            eng.decode_batch()
+        decode_s = time.time() - t0
+    else:
+        for sid in prompts:                      # symmetric warmup step
+            eng.decode_one(sid)
+        t0 = time.time()
+        for _ in range(decode_steps):
+            for sid in prompts:
+                eng.decode_one(sid)
+        decode_s = time.time() - t0
+
+    return {
+        "bench": "serve", "engine": engine, "batch": batch,
+        "prompt_len": PROMPT_LEN, "decode_steps": decode_steps,
+        "prefill_tok_s": round(batch * PROMPT_LEN / prefill_s, 1),
+        "decode_tok_s": round(batch * decode_steps / decode_s, 1),
+        "kv_compression_ratio": round(eng.compression_ratio(), 3),
+    }
+
+
+def rows(quick: bool = False) -> list[dict]:
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models.api import get_model
+
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    batches = (1, 8) if quick else (1, 8, 32)
+    out = []
+    for batch in batches:
+        # reference is ~15x slower per token: fewer timed steps there
+        batched = _bench_engine(cfg, params, "batched", batch,
+                                decode_steps=8 if quick else 32)
+        refr = _bench_engine(cfg, params, "reference", batch,
+                             decode_steps=4 if quick else 8)
+        speed = round(batched["decode_tok_s"] / refr["decode_tok_s"], 2)
+        batched["decode_speedup_vs_reference"] = speed
+        out.extend([batched, refr])
+    return out
+
+
+def save_json(rs: list[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    path = os.path.join(RESULTS_DIR, f"serve_{stamp}.json")
+    payload = {"generated_at": stamp, "rows": rs}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    with open(os.path.join(RESULTS_DIR, "serve_latest.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def main(quick: bool = False) -> None:
+    rs = rows(quick=quick)
+    for r in rs:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    path = save_json(rs)
+    print(f"# wrote {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="batch 1/8 only, fewer timed steps")
+    main(quick=ap.parse_args().quick)

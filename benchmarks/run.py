@@ -19,7 +19,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (bench_bdi_ratio, bench_camp, bench_codec_latency,
-                            bench_collectives, bench_lcp, bench_toggle)
+                            bench_collectives, bench_lcp, bench_serve,
+                            bench_toggle)
     suites = [
         ("bdi_ratio (Figs 3.2/3.6/3.7)", bench_bdi_ratio),
         ("codec_latency (Table 3.5)", bench_codec_latency),
@@ -27,6 +28,7 @@ def main() -> None:
         ("lcp (Figs 5.8/5.16/5.17)", bench_lcp),
         ("toggle+EC+MC (Figs 6.2/6.10/6.20)", bench_toggle),
         ("collective compression (DESIGN 2.4)", bench_collectives),
+        ("serve throughput (§5.5.1 on the KV path)", bench_serve),
     ]
     for name, mod in suites:
         print(f"\n### {name}")

@@ -21,6 +21,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.bdi_value import ENC_D8, ENC_REP, ENC_ZERO
 
+from ._backend import resolve_interpret
+
 _QMAX = 127.0
 
 
@@ -70,10 +72,19 @@ def _compress_kernel(x_ref, deltas_ref, base_ref, scale_ref, maskp_ref,
     enc_ref[...] = enc.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def bdi_compress(x: jax.Array, *, block_n: int = 8,
-                 interpret: bool = True):
-    """x f32 [N, T] -> (deltas i8, base f32, scale f32, maskp u8, enc i32)."""
+                 interpret: bool | None = None):
+    """x f32 [N, T] -> (deltas i8, base f32, scale f32, maskp u8, enc i32).
+
+    ``interpret=None`` resolves from the backend (compiled on TPU,
+    interpret elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides).
+    """
+    return _bdi_compress(x, block_n=block_n,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _bdi_compress(x: jax.Array, *, block_n: int, interpret: bool):
     n, t = x.shape
     assert n % block_n == 0 and t % 8 == 0, (n, t, block_n)
     grid = (n // block_n,)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._backend import resolve_interpret
+
 
 def _decompress_kernel(deltas_ref, base_ref, scale_ref, maskp_ref, out_ref):
     bn, t = deltas_ref.shape
@@ -37,11 +39,22 @@ def _decompress_kernel(deltas_ref, base_ref, scale_ref, maskp_ref, out_ref):
     out_ref[...] = d * s + mask * b                # THE masked vector FMA
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def bdi_decompress(deltas: jax.Array, base: jax.Array, scale: jax.Array,
                    maskp: jax.Array, *, block_n: int = 8,
-                   interpret: bool = True) -> jax.Array:
-    """deltas int8 [N, T], base/scale f32 [N, 1], maskp uint8 [N, T//8]."""
+                   interpret: bool | None = None) -> jax.Array:
+    """deltas int8 [N, T], base/scale f32 [N, 1], maskp uint8 [N, T//8].
+
+    ``interpret=None`` resolves from the backend (compiled on TPU,
+    interpret elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides).
+    """
+    return _bdi_decompress(deltas, base, scale, maskp, block_n=block_n,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _bdi_decompress(deltas: jax.Array, base: jax.Array, scale: jax.Array,
+                    maskp: jax.Array, *, block_n: int,
+                    interpret: bool) -> jax.Array:
     n, t = deltas.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)

@@ -3,6 +3,9 @@
 Handle padding to block multiples, dtype/layout adaptation, and backend
 dispatch: on TPU the Pallas path compiles natively; elsewhere kernels run in
 ``interpret=True`` mode (the kernel body executed on CPU for validation).
+The policy lives in :func:`default_interpret` (re-exported from
+``kernels._backend``): False on TPU backends, True otherwise, with a
+``REPRO_PALLAS_INTERPRET`` env override.
 """
 
 from __future__ import annotations
@@ -13,13 +16,11 @@ import jax.numpy as jnp
 from repro.core import bdi_value as bv
 
 from . import ref
+from ._backend import default_interpret, resolve_interpret  # noqa: F401
 from .bdi_compress import bdi_compress as _compress_kernel
 from .bdi_decompress import bdi_decompress as _decompress_kernel
 from .paged_attention import paged_attention as _paged_attention_kernel
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .paged_attention import paged_attention_tail as _paged_attention_tail
 
 
 def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
@@ -34,8 +35,7 @@ def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
 def compress(x: jax.Array, *, block_n: int = 8) -> ref.PackedTiles:
     """Compress f32 tiles [N, T] with the Pallas compressor."""
     xp, n = _pad_rows(x.astype(jnp.float32), block_n)
-    deltas, base, scale, maskp, enc = _compress_kernel(
-        xp, block_n=block_n, interpret=_interpret())
+    deltas, base, scale, maskp, enc = _compress_kernel(xp, block_n=block_n)
     return ref.PackedTiles(deltas[:n], base[:n], scale[:n], maskp[:n], enc[:n])
 
 
@@ -47,14 +47,22 @@ def decompress(p: ref.PackedTiles, *, block_n: int = 8) -> jax.Array:
     scale, _ = _pad_rows(jnp.where(p.scale == 0, 1.0, p.scale), block_n)
     maskp, _ = _pad_rows(p.maskp, block_n)
     return _decompress_kernel(deltas, base, scale, maskp,
-                              block_n=block_n, interpret=_interpret())[:n]
+                              block_n=block_n)[:n]
 
 
 def paged_attention(q: jax.Array, pages: ref.CompressedKVPages,
                     page_table: jax.Array, lengths: jax.Array) -> jax.Array:
     """Fused compressed-paged-KV decode attention (see paged_attention.py)."""
-    return _paged_attention_kernel(q, pages, page_table, lengths,
-                                   interpret=_interpret())
+    return _paged_attention_kernel(q, pages, page_table, lengths)
+
+
+def paged_attention_tail(q: jax.Array, pages: ref.CompressedKVPages,
+                         page_table: jax.Array, lengths: jax.Array,
+                         tail_k: jax.Array, tail_v: jax.Array,
+                         tail_len: jax.Array) -> jax.Array:
+    """Fused decode attention over [compressed pages + uncompressed tail]."""
+    return _paged_attention_tail(q, pages, page_table, lengths,
+                                 tail_k, tail_v, tail_len)
 
 
 def roundtrip_tensor(x: jax.Array, tile: int = 128) -> jax.Array:

@@ -131,3 +131,34 @@ def paged_attention_ref(q: jax.Array, pages: CompressedKVPages,
     scores = jnp.where(valid, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhgt,bhtd->bhgd", w, vg)
+
+
+def paged_attention_tail_ref(q: jax.Array, pages: CompressedKVPages,
+                             page_table: jax.Array, lengths: jax.Array,
+                             tail_k: jax.Array, tail_v: jax.Array,
+                             tail_len: jax.Array) -> jax.Array:
+    """Oracle for decode attention over [compressed pages + f32 tail].
+
+    q f32 [B, KVH, G, D]; tail_k/tail_v f32 [B, KVH, page, D]; tail_len
+    i32 [B] counts valid tail slots; lengths i32 [B] counts page tokens.
+    """
+    b_, kvh, g, d = q.shape
+    pmax = page_table.shape[1]
+    page = pages.kd.shape[2]
+
+    k = dequant_pages(pages.kd, pages.kb, pages.ks)
+    v = dequant_pages(pages.vd, pages.vb, pages.vs)
+    kg = jnp.moveaxis(k[page_table], 2, 1).reshape(b_, kvh, pmax * page, d)
+    vg = jnp.moveaxis(v[page_table], 2, 1).reshape(b_, kvh, pmax * page, d)
+    kg = jnp.concatenate([kg, tail_k.astype(jnp.float32)], axis=2)
+    vg = jnp.concatenate([vg, tail_v.astype(jnp.float32)], axis=2)
+
+    pos = jnp.arange(pmax * page)[None, :]
+    valid = jnp.concatenate(
+        [pos < lengths[:, None],
+         jnp.arange(page)[None, :] < tail_len[:, None]], axis=1)
+
+    scores = jnp.einsum("bhgd,bhtd->bhgt", q, kg) / jnp.sqrt(jnp.float32(d))
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgt,bhtd->bhgd", w, vg)

@@ -1,9 +1,14 @@
 """Serving driver: batched greedy generation through the model API, or the
 LCP-paged compressed-KV engine (--paged).
 
+The paged path runs the batched device-resident hot path
+(``PagedKVEngine.decode_batch`` — one jitted step per token for the whole
+batch); ``--paged-reference`` selects the seed host-looped engine instead,
+for A/B timing.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --prompt-len 16 --gen 16 [--paged]
+      --prompt-len 16 --gen 16 [--paged | --paged-reference]
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ from repro.models.api import get_model
 
 def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              prompt_len: int = 16, gen: int = 16,
-             paged: bool = False) -> dict:
+             paged: bool = False, paged_reference: bool = False) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -30,16 +35,25 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
     prompts = jax.random.randint(key, (batch, prompt_len), 1, cfg.vocab,
                                  jnp.int32)
 
-    if paged:
-        from repro.serving.engine import PagedKVEngine
-        eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512)
-        outs = []
+    if paged or paged_reference:
         t0 = time.time()
-        for b in range(batch):
-            eng.add_request(b, [int(t) for t in prompts[b]])
-        for _ in range(gen):
+        if paged_reference:
+            from repro.serving.reference import ReferencePagedKVEngine
+            eng = ReferencePagedKVEngine(cfg, params, page_size=8,
+                                         n_pool_pages=512)
             for b in range(batch):
-                eng.decode_one(b)
+                eng.add_request(b, [int(t) for t in prompts[b]])
+            for _ in range(gen):
+                for b in range(batch):
+                    eng.decode_one(b)
+        else:
+            from repro.serving.engine import PagedKVEngine
+            eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
+                                max_batch=batch)
+            for b in range(batch):
+                eng.add_request(b, [int(t) for t in prompts[b]])
+            for _ in range(gen):
+                eng.decode_batch()
         dt = time.time() - t0
         outs = [eng.seqs[b].tokens[prompt_len:] for b in range(batch)]
         return {"tokens": outs, "kv_compression_ratio":
@@ -72,9 +86,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--paged-reference", action="store_true",
+                    help="seed host-looped engine (A/B baseline)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                   gen=args.gen, paged=args.paged)
+                   gen=args.gen, paged=args.paged,
+                   paged_reference=args.paged_reference)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:

@@ -10,28 +10,69 @@ The inference-side integration of all three thesis pillars:
     when the pool is full, the least-valuable sequence (value =
     reuse-proxy / compressed size, the MVE function) is preempted.
 
-Decode flow per sequence: tokens accumulate in an *uncompressed tail* page
-(the write buffer); when the tail fills, it is compressed and published to
-the pool — compression happens at page-fill granularity, off the critical
-path, exactly like the thesis' cache-fill-side compression.  Attention
-runs over [compressed pages + tail].
+Serving hot path
+----------------
+Decode is a single **batched, jit-compiled, device-resident step**
+(:func:`_decode_step`): all active sequences and all layers advance one
+token per dispatch.
 
-This engine is the small-scale runnable path (examples/serve_paged.py,
-tests); the production lowering for decode shapes is the XLA serve_step in
-launch/serve.py.
+  * The per-layer compressed page pools (``kd/kb/ks/vd/vb/vs``) live as
+    device ``jnp`` arrays for the whole engine lifetime; page publishes
+    scatter into them with donated ``.at[]`` writes — no host round-trips
+    of KV data on the token path.
+  * The step embeds the last token of every sequence, runs a
+    ``lax.scan`` over the stacked per-layer block params, and finishes
+    with the LM head + greedy argmax — one XLA computation per token
+    across the whole batch.
+  * Page tables are padded to a static ``PMAX`` (doubled on demand, which
+    retraces at most a handful of times) so shapes stay static across
+    steps; inactive batch slots ride along masked.
+  * Attention over [compressed pages + uncompressed tail] selects its
+    implementation by backend: on TPU the fused BDI-dequant Pallas kernel
+    (``kernels.paged_attention_tail``) reads the pool in compressed form;
+    elsewhere a jnp gather-dequant-dense fallback runs inside the same
+    jit (``REPRO_PALLAS_INTERPRET`` / the ``use_fused`` ctor arg
+    override the detection).
+  * Page-fill compression is batched: every freshly filled tail of every
+    layer is compressed in one jitted dispatch
+    (:func:`_compress_blocks`), which also computes per-page compressed
+    byte counts **on device**; the counts sync to the host once per
+    publish and drive the host-side CAMP preemption policy.
+
+Tokens accumulate in an *uncompressed tail* page per (layer, sequence)
+— the write buffer, also device-resident; when the tail fills, it is
+compressed and published to the pool, off the critical path, exactly
+like the thesis' cache-fill-side compression.
+
+The host keeps only control state: token ids, page-table lists, the
+free-page list, and CAMP accounting.  ``serving/reference.py`` holds the
+original single-sequence host-looped engine as the behavioral oracle.
+
+Equivalence contract vs the reference: greedy output is token-for-token
+identical while no preemption fires, and through preemptions whose
+victim choice is order-independent (e.g. a ``done`` sequence, CAMP value
+-1).  Caveat: when two logits land within one bf16 ULP of each other (a
+true tie at model precision), the padded-softmax summation order can
+pick the other token — observed roughly once per ~20 tokens on random
+tiny-model prompts, never with a materially-separated argmax.  When live sequences with near-equal CAMP values compete for
+eviction, victim choice can differ: the reference interleaves publishes
+between sequences inside a round while the batched step publishes once
+after all sequences advanced, so the two engines observe value sets at
+slightly different times.  That is inherent to batching, not a bug.
 """
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels.paged_attention import paged_attention_tail
 from repro.models import attention as A
 from repro.models import layers as L
 
@@ -39,35 +80,209 @@ from repro.models import layers as L
 @dataclass
 class Sequence:
     sid: int
+    slot: int                            # batch slot in the device state
     tokens: list[int]
     pages: list[list[int]]               # [L][n_pages] pool ids
-    tail_k: np.ndarray                   # [L, page, K, Dh] f32
-    tail_v: np.ndarray
     tail_len: int = 0
     done: bool = False
     preempted: bool = False
 
 
+# ---------------------------------------------------------------------------
+# jitted device steps
+# ---------------------------------------------------------------------------
+
+def _attend_ref(q, kd, kb, ks, vd, vb, vs, pt, page_len, tk, tv, tail_len):
+    """jnp fallback: gather-then-dequant pages + tail, dense softmax.
+
+    q f32 [S, K, G, D]; pools [P, K, page, D]; pt i32 [S, PMAX];
+    tk/tv f32 [S, K, page, D].  Gathers compressed bytes first so only
+    [S, PMAX] pages dequantize, not the whole pool.
+    """
+    s, kvh, g, d = q.shape
+    pmax = pt.shape[1]
+    page = kd.shape[2]
+
+    def deq(dq, b, sc):                              # [S,PMAX,K,page,D] f32
+        return dq.astype(jnp.float32) * sc[..., None] + b[..., None]
+
+    kg = jnp.moveaxis(deq(kd[pt], kb[pt], ks[pt]), 2, 1)
+    vg = jnp.moveaxis(deq(vd[pt], vb[pt], vs[pt]), 2, 1)
+    kg = kg.reshape(s, kvh, pmax * page, d)
+    vg = vg.reshape(s, kvh, pmax * page, d)
+    kg = jnp.concatenate([kg, tk], axis=2)           # [S, K, T, D]
+    vg = jnp.concatenate([vg, tv], axis=2)
+
+    pos = jnp.arange(pmax * page)[None, :]
+    valid = jnp.concatenate(
+        [pos < page_len[:, None],
+         jnp.arange(page)[None, :] < tail_len[:, None]], axis=1)
+
+    sc = jnp.einsum("skgd,sktd->skgt", q, kg) / jnp.sqrt(jnp.float32(d))
+    sc = jnp.where(valid[:, None, None, :], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("skgt,sktd->skgd", w, vg)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "use_fused"),
+                   donate_argnums=(2, 3))
+def _decode_step(params, pools, tk, tv, page_table, page_cnt,
+                 last_tok, pos, tail_len, active, *, cfg: ArchConfig,
+                 use_fused: bool):
+    """One greedy decode step for every active sequence, all layers.
+
+    pools: CompressedKVPages with leading layer dim ([L, P, K, page, D]...).
+    tk/tv f32 [L, S, K, page, D] (donated; returned updated).
+    page_table i32 [L, S, PMAX]; page_cnt/last_tok/pos/tail_len i32 [S];
+    active bool [S].
+    Returns (next_tok [S], tk', tv').
+    """
+    s = last_tok.shape[0]
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    x = L.embed(params["embed"], last_tok[:, None])          # [S, 1, D]
+    cos, sin = L.rope_angles(pos, dh, cfg.rope_theta)        # [S, dh/2]
+    cos_b = cos[:, None, None, :]
+    sin_b = sin[:, None, None, :]
+    page_len = page_cnt * tk.shape[3]                        # tokens in pages
+    # tail write slot, masked so inactive sequences' buffers stay untouched
+    slot_hot = ((jnp.arange(tk.shape[3])[None, :] == tail_len[:, None])
+                & active[:, None])                           # [S, page]
+
+    def body(x, xs):
+        bp, kd, kb, ks, vd, vb, vs, tk_l, tv_l, pt_l = xs
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        q = L.linear(bp["attn"]["wq"], h)                    # [S, 1, H, Dh]
+        k_new = L.linear(bp["attn"]["wk"], h)                # [S, 1, K, Dh]
+        v_new = L.linear(bp["attn"]["wv"], h)
+        q = L.apply_rope(q, cos_b, sin_b)
+        k_new = L.apply_rope(k_new, cos_b, sin_b)
+
+        # append the new token into the tail write buffer [S, K, page, D]
+        kw = k_new[:, 0].astype(jnp.float32)                 # [S, K, Dh]
+        vw = v_new[:, 0].astype(jnp.float32)
+        sel = slot_hot[:, None, :, None]
+        tk_l = jnp.where(sel, kw[:, :, None, :], tk_l)
+        tv_l = jnp.where(sel, vw[:, :, None, :], tv_l)
+
+        hq = q.shape[2]
+        qg = q[:, 0].reshape(s, kvh, hq // kvh, dh).astype(jnp.float32)
+        if use_fused:
+            pages_l = ref.CompressedKVPages(kd, kb, ks, vd, vb, vs)
+            ctx = paged_attention_tail(qg, pages_l, pt_l, page_len,
+                                       tk_l, tv_l, tail_len + 1)
+        else:
+            ctx = _attend_ref(qg, kd, kb, ks, vd, vb, vs, pt_l, page_len,
+                              tk_l, tv_l, tail_len + 1)
+        ctx = ctx.reshape(s, 1, hq, dh).astype(x.dtype)
+        x = x + A._proj_out(bp["attn"], ctx)
+        h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["ffn"], h2)
+        return x, (tk_l, tv_l)
+
+    xs = (params["blocks"], pools.kd, pools.kb, pools.ks,
+          pools.vd, pools.vb, pools.vs, tk, tv, page_table)
+    x, (tk, tv) = jax.lax.scan(body, x, xs)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_logits(params["lm_head"], x)[:, 0]         # [S, V]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.where(active, nxt, last_tok), tk, tv
+
+
+@jax.jit
+def _gather_tail_blocks(tk, tv, slots):
+    """[L, S, K, page, D] tails -> [L*m, K, page, D] publish blocks."""
+    kb = tk[:, slots]                                        # [L, m, K, pg, D]
+    vb = tv[:, slots]
+    return (kb.reshape((-1,) + kb.shape[2:]),
+            vb.reshape((-1,) + vb.shape[2:]))
+
+
+def _device_page_bytes(pg: ref.CompressedKVPages) -> jax.Array:
+    """Per-page compressed size, computed on device ([n] i32).
+
+    BDI-faithful accounting: each (head, token) row costs 8 bytes of
+    base+scale metadata plus D delta bytes — unless the row is all-zero
+    (ENC_ZERO: metadata only), in which case the delta bytes drop out.
+
+    For KV data with no exactly-zero rows (any real model) this equals
+    the seed engine's constant per-page formula, so stats and CAMP
+    values match the reference bit-for-bit; ENC_ZERO rows earn a
+    size credit the seed never modeled.
+    """
+    def side(d, b):
+        zero_row = jnp.all(d == 0, axis=-1) & (b == 0.0)     # [n, K, page]
+        data = jnp.where(zero_row, 0, d.shape[-1])
+        return (jnp.sum(data, axis=(1, 2))
+                + 8 * d.shape[1] * d.shape[2])
+    return (side(pg.kd, pg.kb) + side(pg.vd, pg.vb)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids):
+    """Compress [n, K, page, D] KV blocks and scatter them into the pools.
+
+    One dispatch publishes every filled page of every layer: the batched
+    page-fill compression + donated in-place pool update.  Returns the
+    updated pools and the device-computed per-page byte counts [n].
+    """
+    pg = ref.compress_kv_pages(k_blocks, v_blocks)
+    nbytes = _device_page_bytes(pg)
+    pools = ref.CompressedKVPages(
+        kd=pools.kd.at[layer_idx, pids].set(pg.kd),
+        kb=pools.kb.at[layer_idx, pids].set(pg.kb),
+        ks=pools.ks.at[layer_idx, pids].set(pg.ks),
+        vd=pools.vd.at[layer_idx, pids].set(pg.vd),
+        vb=pools.vb.at[layer_idx, pids].set(pg.vb),
+        vs=pools.vs.at[layer_idx, pids].set(pg.vs),
+    )
+    return pools, nbytes
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
 class PagedKVEngine:
-    """Greedy-decoding engine over a dense-GQA transformer."""
+    """Greedy-decoding engine over a dense-GQA transformer.
+
+    Batched device-resident hot path; see the module docstring.  The
+    public surface matches the seed engine (``add_request`` /
+    ``decode_one`` / stats) plus :meth:`decode_batch`, the intended
+    entry point under load.
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
-                 n_pool_pages: int = 256):
+                 n_pool_pages: int = 256, max_batch: int = 32,
+                 use_fused: bool | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         self.cfg = cfg
         self.params = params
         self.page = page_size
+        self.max_batch = max_batch
+        # fused Pallas kernel where it compiles natively; jnp ref elsewhere
+        self.use_fused = (not ops.default_interpret()
+                          if use_fused is None else use_fused)
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        # compressed page pools (the LCP target-size + metadata regions)
-        self.kd = np.zeros((lyr, n_pool_pages, k, page_size, dh), np.int8)
-        self.kb = np.zeros((lyr, n_pool_pages, k, page_size), np.float32)
-        self.ks = np.ones((lyr, n_pool_pages, k, page_size), np.float32)
-        self.vd = np.zeros_like(self.kd)
-        self.vb = np.zeros_like(self.kb)
-        self.vs = np.ones_like(self.ks)
+        self.pools = ref.CompressedKVPages(
+            kd=jnp.zeros((lyr, n_pool_pages, k, page_size, dh), jnp.int8),
+            kb=jnp.zeros((lyr, n_pool_pages, k, page_size), jnp.float32),
+            ks=jnp.ones((lyr, n_pool_pages, k, page_size), jnp.float32),
+            vd=jnp.zeros((lyr, n_pool_pages, k, page_size, dh), jnp.int8),
+            vb=jnp.zeros((lyr, n_pool_pages, k, page_size), jnp.float32),
+            vs=jnp.ones((lyr, n_pool_pages, k, page_size), jnp.float32),
+        )
+        self.tail_k = jnp.zeros((lyr, max_batch, k, page_size, dh),
+                                jnp.float32)
+        self.tail_v = jnp.zeros_like(self.tail_k)
+        # pool id 0 is the padding target of padded page tables
         self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
         self.page_bytes = np.zeros(n_pool_pages, np.int64)
         self.seqs: dict[int, Sequence] = {}
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+        self._pmax = 8
+        self._pt_dev: jax.Array | None = None
+        self._pt_dirty = True
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
                       "preemptions": 0}
@@ -78,10 +293,10 @@ class PagedKVEngine:
         c = self.cfg
         return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
 
-    def _alloc_page(self) -> int:
-        if not self.free:
+    def _reserve_pages(self, n: int) -> list[int]:
+        while len(self.free) < n:
             self._preempt_one()
-        return self.free.pop()
+        return [self.free.pop() for _ in range(n)]
 
     def _seq_value(self, seq: Sequence) -> float:
         """CAMP/MVE value: reuse proxy / compressed size (smaller = victim)."""
@@ -101,43 +316,58 @@ class PagedKVEngine:
         victim.pages = [[] for _ in range(self.cfg.n_layers)]
         victim.tail_len = 0
         victim.preempted = True
+        self._pt_dirty = True
         self.stats["preemptions"] += 1
 
-    def _publish_page(self, seq: Sequence, li: int,
-                      k_blk: np.ndarray, v_blk: np.ndarray) -> None:
-        """Compress one full [page, K, Dh] block into the pool."""
-        pid = self._alloc_page()
-        kk = jnp.swapaxes(jnp.asarray(k_blk)[None], 1, 2)   # [1, K, page, Dh]
-        vv = jnp.swapaxes(jnp.asarray(v_blk)[None], 1, 2)
-        pg = ref.compress_kv_pages(kk, vv)
-        self.kd[li, pid] = np.asarray(pg.kd[0])
-        self.kb[li, pid] = np.asarray(pg.kb[0])
-        self.ks[li, pid] = np.asarray(pg.ks[0])
-        self.vd[li, pid] = np.asarray(pg.vd[0])
-        self.vb[li, pid] = np.asarray(pg.vb[0])
-        self.vs[li, pid] = np.asarray(pg.vs[0])
-        nbytes = int(pg.kd[0].size + pg.vd[0].size
-                     + 2 * 8 * self.page * self.cfg.n_kv_heads)
-        self.page_bytes[pid] = nbytes
-        seq.pages[li].append(pid)
-        self.stats["pages_compressed"] += 1
-        self.stats["bytes_raw"] += self.page_raw_bytes()
-        self.stats["bytes_compressed"] += nbytes
+    def _record_publish(self, seq: Sequence, pids: list[int],
+                        nbytes: np.ndarray) -> None:
+        """Attach freshly published pages (one per layer) to a sequence."""
+        for li, pid in enumerate(pids):
+            self.page_bytes[pid] = int(nbytes[li])
+            seq.pages[li].append(pid)
+        self.stats["pages_compressed"] += len(pids)
+        self.stats["bytes_raw"] += self.page_raw_bytes() * len(pids)
+        self.stats["bytes_compressed"] += int(nbytes.sum())
+        self._pt_dirty = True
+
+    # -- page table ----------------------------------------------------------
+
+    def _page_table(self) -> jax.Array:
+        """Padded device page table [L, S, PMAX] (rebuilt when dirty)."""
+        need = max((len(s.pages[0]) for s in self.seqs.values()), default=0)
+        while self._pmax < need:
+            self._pmax *= 2
+            self._pt_dirty = True
+        if self._pt_dirty or self._pt_dev is None:
+            lyr = self.cfg.n_layers
+            pt = np.zeros((lyr, self.max_batch, self._pmax), np.int32)
+            for s in self.seqs.values():
+                for li in range(lyr):
+                    ids = s.pages[li]
+                    pt[li, s.slot, :len(ids)] = ids
+            self._pt_dev = jnp.asarray(pt)
+            self._pt_dirty = False
+        return self._pt_dev
 
     # -- request lifecycle -----------------------------------------------------
 
+    def release(self, sid: int) -> None:
+        """Retire a request: free its pool pages and recycle its slot."""
+        seq = self.seqs.pop(sid)
+        for lp in seq.pages:
+            self.free.extend(lp)
+        self._free_slots.append(seq.slot)
+        self._pt_dirty = True
+
     def add_request(self, sid: int, prompt: list[int]) -> None:
-        cfg = self.cfg
-        lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        seq = Sequence(sid=sid, tokens=list(prompt),
-                       pages=[[] for _ in range(lyr)],
-                       tail_k=np.zeros((lyr, self.page, k, dh), np.float32),
-                       tail_v=np.zeros((lyr, self.page, k, dh), np.float32))
+        assert sid not in self.seqs, sid
+        assert self._free_slots, "engine at max_batch capacity"
+        lyr = self.cfg.n_layers
+        seq = Sequence(sid=sid, slot=self._free_slots.pop(),
+                       tokens=list(prompt),
+                       pages=[[] for _ in range(lyr)])
         self.seqs[sid] = seq
         self._prefill(seq)
-
-    def _block_params(self, li: int):
-        return jax.tree.map(lambda x: x[li], self.params["blocks"])
 
     def _prefill(self, seq: Sequence) -> None:
         cfg = self.cfg
@@ -147,8 +377,12 @@ class PagedKVEngine:
         positions = jnp.arange(s, dtype=jnp.int32)
         n_full = s // self.page
         seq.tail_len = s - n_full * self.page
+        k_blocks, v_blocks = [], []                    # [L*n_full, K, pg, D]
+        tail_k = np.zeros(self.tail_k.shape[0:1] + self.tail_k.shape[2:],
+                          np.float32)                  # [L, K, page, D]
+        tail_v = np.zeros_like(tail_k)
         for li in range(cfg.n_layers):
-            bp = self._block_params(li)
+            bp = jax.tree.map(lambda x: x[li], self.params["blocks"])
             h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
             k = L.linear(bp["attn"]["wk"], h)
             v = L.linear(bp["attn"]["wv"], h)
@@ -160,81 +394,99 @@ class PagedKVEngine:
             h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
             x = x + L.mlp(bp["ffn"], h2)
 
-            karr = np.asarray(k[0], np.float32)       # [S, K, Dh]
+            karr = np.asarray(k[0], np.float32)        # [S, K, Dh]
             varr = np.asarray(v[0], np.float32)
             for blk in range(n_full):
                 sl = slice(blk * self.page, (blk + 1) * self.page)
-                self._publish_page(seq, li, karr[sl], varr[sl])
+                k_blocks.append(karr[sl].transpose(1, 0, 2))  # [K, pg, D]
+                v_blocks.append(varr[sl].transpose(1, 0, 2))
             if seq.tail_len:
-                seq.tail_k[li, :seq.tail_len] = karr[n_full * self.page:]
-                seq.tail_v[li, :seq.tail_len] = varr[n_full * self.page:]
+                rest = karr[n_full * self.page:]
+                tail_k[li, :, :seq.tail_len] = rest.transpose(1, 0, 2)
+                tail_v[li, :, :seq.tail_len] = \
+                    varr[n_full * self.page:].transpose(1, 0, 2)
+
+        self.tail_k = self.tail_k.at[:, seq.slot].set(jnp.asarray(tail_k))
+        self.tail_v = self.tail_v.at[:, seq.slot].set(jnp.asarray(tail_v))
+        if n_full:
+            # already layer-major ([L, n_full] blocks), as _publish expects
+            self._publish(jnp.asarray(np.stack(k_blocks)),
+                          jnp.asarray(np.stack(v_blocks)),
+                          [seq] * n_full)
+
+    def _publish(self, k_blocks, v_blocks, seqs: list[Sequence]) -> None:
+        """Publish len(seqs) filled pages per layer in one dispatch.
+
+        Blocks are layer-major: [L * len(seqs), K, page, D] with the
+        sequence order of ``seqs`` repeating inside each layer group.
+        """
+        lyr, m = self.cfg.n_layers, len(seqs)
+        pids = self._reserve_pages(lyr * m)
+        layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
+        self.pools, nbytes = _publish_blocks(
+            self.pools, k_blocks, v_blocks, layer_idx,
+            jnp.asarray(pids, jnp.int32))
+        nbytes = np.asarray(nbytes)                    # 1 sync per publish
+        for j, seq in enumerate(seqs):
+            self._record_publish(seq, pids[j::m], nbytes[j::m])
 
     # -- decode ------------------------------------------------------------------
 
+    def decode_batch(self, sids: list[int] | None = None) -> dict[int, int]:
+        """Greedy-decode one token for every active (or given) sequence."""
+        if sids is None:
+            sids = [s.sid for s in self.seqs.values()
+                    if not (s.preempted or s.done)]
+        sids = [sid for sid in dict.fromkeys(sids)   # dedup, keep order
+                if not (self.seqs[sid].preempted or self.seqs[sid].done)]
+        if not sids:
+            return {}
+        sb = self.max_batch
+        active = np.zeros(sb, bool)
+        last_tok = np.zeros(sb, np.int32)
+        pos = np.zeros(sb, np.int32)
+        tail_len = np.zeros(sb, np.int32)
+        page_cnt = np.zeros(sb, np.int32)
+        for sid in sids:
+            s = self.seqs[sid]
+            active[s.slot] = True
+            last_tok[s.slot] = s.tokens[-1]
+            pos[s.slot] = len(s.tokens) - 1
+            tail_len[s.slot] = s.tail_len
+            page_cnt[s.slot] = len(s.pages[0])
+
+        nxt, self.tail_k, self.tail_v = _decode_step(
+            self.params, self.pools, self.tail_k, self.tail_v,
+            self._page_table(), jnp.asarray(page_cnt),
+            jnp.asarray(last_tok), jnp.asarray(pos),
+            jnp.asarray(tail_len), jnp.asarray(active),
+            cfg=self.cfg, use_fused=self.use_fused)
+        nxt = np.asarray(nxt)                          # 1 sync per step
+
+        filled: list[Sequence] = []
+        out: dict[int, int] = {}
+        for sid in sids:
+            s = self.seqs[sid]
+            out[sid] = int(nxt[s.slot])
+            s.tokens.append(out[sid])
+            s.tail_len += 1
+            if s.tail_len == self.page:
+                filled.append(s)
+                s.tail_len = 0
+        if filled:
+            slots = jnp.asarray([s.slot for s in filled], jnp.int32)
+            kb, vb = _gather_tail_blocks(self.tail_k, self.tail_v, slots)
+            self._publish(kb, vb, filled)
+        return out
+
     def decode_one(self, sid: int) -> int:
-        """Greedy-decode one token for sequence sid."""
-        cfg, seq = self.cfg, self.seqs[sid]
-        t = len(seq.tokens)
-        tok = jnp.asarray([seq.tokens[-1]], jnp.int32)
-        x = L.embed(self.params["embed"], tok[:, None])
-        tails_full = False
-        for li in range(cfg.n_layers):
-            bp = self._block_params(li)
-            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
-            q = L.linear(bp["attn"]["wq"], h)
-            k_new = L.linear(bp["attn"]["wk"], h)
-            v_new = L.linear(bp["attn"]["wv"], h)
-            dh = q.shape[-1]
-            pos_t = jnp.asarray([t - 1], jnp.int32)
-            cos, sin = L.rope_angles(pos_t, dh, cfg.rope_theta)
-            q = L.apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
-            k_new = L.apply_rope(k_new, cos[None, :, None, :],
-                                 sin[None, :, None, :])
-            seq.tail_k[li, seq.tail_len] = np.asarray(k_new[0, 0], np.float32)
-            seq.tail_v[li, seq.tail_len] = np.asarray(v_new[0, 0], np.float32)
-
-            ctx = self._attend(seq, li, q)
-            x = x + A._proj_out(bp["attn"], ctx)
-            h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
-            x = x + L.mlp(bp["ffn"], h2)
-        seq.tail_len += 1
-        if seq.tail_len == self.page:
-            for li in range(cfg.n_layers):
-                self._publish_page(seq, li, seq.tail_k[li], seq.tail_v[li])
-            seq.tail_len = 0
-
-        x = L.rmsnorm(self.params["final_norm"], x, cfg.norm_eps)
-        logits = L.lm_logits(self.params["lm_head"], x)[0, 0]
-        nxt = int(jnp.argmax(logits))
-        seq.tokens.append(nxt)
-        return nxt
-
-    def _attend(self, seq: Sequence, li: int, q: jax.Array) -> jax.Array:
-        cfg = self.cfg
-        kh, dh = cfg.n_kv_heads, cfg.head_dim
-        pids = seq.pages[li]
-        parts_k, parts_v = [], []
-        if pids:
-            k_pages = ref.dequant_pages(jnp.asarray(self.kd[li, pids]),
-                                        jnp.asarray(self.kb[li, pids]),
-                                        jnp.asarray(self.ks[li, pids]))
-            v_pages = ref.dequant_pages(jnp.asarray(self.vd[li, pids]),
-                                        jnp.asarray(self.vb[li, pids]),
-                                        jnp.asarray(self.vs[li, pids]))
-            parts_k.append(jnp.swapaxes(k_pages, 1, 2).reshape(-1, kh, dh))
-            parts_v.append(jnp.swapaxes(v_pages, 1, 2).reshape(-1, kh, dh))
-        tl = seq.tail_len + 1
-        parts_k.append(jnp.asarray(seq.tail_k[li, :tl]))
-        parts_v.append(jnp.asarray(seq.tail_v[li, :tl]))
-        k = jnp.concatenate(parts_k, axis=0)           # [T, K, Dh]
-        v = jnp.concatenate(parts_v, axis=0)
-        hq = q.shape[2]
-        qg = q[0, 0].reshape(kh, hq // kh, dh)
-        sc = jnp.einsum("kgd,tkd->kgt", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
-        w = jax.nn.softmax(sc, axis=-1)
-        ctx = jnp.einsum("kgt,tkd->kgd", w, v.astype(jnp.float32))
-        return ctx.reshape(1, 1, hq, dh).astype(q.dtype)
+        """Greedy-decode one token for sequence sid (compat shim)."""
+        out = self.decode_batch([sid])
+        if sid not in out:
+            seq = self.seqs[sid]                   # KeyError for unknown sid
+            state = "preempted" if seq.preempted else "done"
+            raise ValueError(f"sequence {sid} is {state}; cannot decode")
+        return out[sid]
 
     # -- metrics ------------------------------------------------------------------
 
@@ -244,4 +496,4 @@ class PagedKVEngine:
         return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
 
     def pool_used_pages(self) -> int:
-        return (self.kd.shape[1] - 1) - len(self.free)
+        return (self.pools.kd.shape[1] - 1) - len(self.free)

@@ -1,0 +1,251 @@
+"""Reference (seed) serving engine: host-looped, one token / seq / layer.
+
+This is the original ``PagedKVEngine`` kept verbatim as the behavioral
+oracle: ``serving/engine.py`` now runs the batched device-resident hot
+path and must produce token-for-token identical greedy output to this
+implementation (tests/test_serving_batched.py).  It is also the baseline
+that ``benchmarks/bench_serve.py`` measures speedups against.  Do not
+optimize this file — its value is being the slow, obviously-correct path.
+
+The inference-side integration of all three thesis pillars:
+
+  * KV pages are stored **compressed** (B+Delta int8 form, the layout the
+    fused Pallas decode kernel reads — kernels/paged_attention.py);
+  * page addressing is **LCP**: fixed target size per page, page table ->
+    pool index, one shift to locate a token (no prefix sums);
+  * the finite HBM page pool is managed by **CAMP**-style value scoring:
+    when the pool is full, the least-valuable sequence (value =
+    reuse-proxy / compressed size, the MVE function) is preempted.
+
+Decode flow per sequence: tokens accumulate in an *uncompressed tail* page
+(the write buffer); when the tail fills, it is compressed and published to
+the pool — compression happens at page-fill granularity, off the critical
+path, exactly like the thesis' cache-fill-side compression.  Attention
+runs over [compressed pages + tail].
+
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ref
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+@dataclass
+class Sequence:
+    sid: int
+    tokens: list[int]
+    pages: list[list[int]]               # [L][n_pages] pool ids
+    tail_k: np.ndarray                   # [L, page, K, Dh] f32
+    tail_v: np.ndarray
+    tail_len: int = 0
+    done: bool = False
+    preempted: bool = False
+
+
+class ReferencePagedKVEngine:
+    """Greedy-decoding engine over a dense-GQA transformer (seed path)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
+                 n_pool_pages: int = 256):
+        assert cfg.attn_kind == "gqa" and not cfg.is_encdec
+        self.cfg = cfg
+        self.params = params
+        self.page = page_size
+        lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        # compressed page pools (the LCP target-size + metadata regions)
+        self.kd = np.zeros((lyr, n_pool_pages, k, page_size, dh), np.int8)
+        self.kb = np.zeros((lyr, n_pool_pages, k, page_size), np.float32)
+        self.ks = np.ones((lyr, n_pool_pages, k, page_size), np.float32)
+        self.vd = np.zeros_like(self.kd)
+        self.vb = np.zeros_like(self.kb)
+        self.vs = np.ones_like(self.ks)
+        self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
+        self.page_bytes = np.zeros(n_pool_pages, np.int64)
+        self.seqs: dict[int, Sequence] = {}
+        self.stats = {"pages_compressed": 0, "pages_evicted": 0,
+                      "bytes_raw": 0, "bytes_compressed": 0,
+                      "preemptions": 0}
+
+    # -- pool bookkeeping ----------------------------------------------------
+
+    def page_raw_bytes(self) -> int:
+        c = self.cfg
+        return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
+
+    def _alloc_page(self) -> int:
+        if not self.free:
+            self._preempt_one()
+        return self.free.pop()
+
+    def _seq_value(self, seq: Sequence) -> float:
+        """CAMP/MVE value: reuse proxy / compressed size (smaller = victim)."""
+        if seq.done:
+            return -1.0
+        size = sum(int(self.page_bytes[p]) for lp in seq.pages for p in lp)
+        return (len(seq.tokens) + 1) / max(size, 1)
+
+    def _preempt_one(self) -> None:
+        cands = [s for s in self.seqs.values()
+                 if any(s.pages[li] for li in range(self.cfg.n_layers))]
+        assert cands, "pool exhausted with nothing evictable"
+        victim = min(cands, key=self._seq_value)
+        for lp in victim.pages:
+            self.free.extend(lp)
+            self.stats["pages_evicted"] += len(lp)
+        victim.pages = [[] for _ in range(self.cfg.n_layers)]
+        victim.tail_len = 0
+        victim.preempted = True
+        self.stats["preemptions"] += 1
+
+    def _publish_page(self, seq: Sequence, li: int,
+                      k_blk: np.ndarray, v_blk: np.ndarray) -> None:
+        """Compress one full [page, K, Dh] block into the pool."""
+        pid = self._alloc_page()
+        kk = jnp.swapaxes(jnp.asarray(k_blk)[None], 1, 2)   # [1, K, page, Dh]
+        vv = jnp.swapaxes(jnp.asarray(v_blk)[None], 1, 2)
+        pg = ref.compress_kv_pages(kk, vv)
+        self.kd[li, pid] = np.asarray(pg.kd[0])
+        self.kb[li, pid] = np.asarray(pg.kb[0])
+        self.ks[li, pid] = np.asarray(pg.ks[0])
+        self.vd[li, pid] = np.asarray(pg.vd[0])
+        self.vb[li, pid] = np.asarray(pg.vb[0])
+        self.vs[li, pid] = np.asarray(pg.vs[0])
+        nbytes = int(pg.kd[0].size + pg.vd[0].size
+                     + 2 * 8 * self.page * self.cfg.n_kv_heads)
+        self.page_bytes[pid] = nbytes
+        seq.pages[li].append(pid)
+        self.stats["pages_compressed"] += 1
+        self.stats["bytes_raw"] += self.page_raw_bytes()
+        self.stats["bytes_compressed"] += nbytes
+
+    # -- request lifecycle -----------------------------------------------------
+
+    def add_request(self, sid: int, prompt: list[int]) -> None:
+        cfg = self.cfg
+        lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        seq = Sequence(sid=sid, tokens=list(prompt),
+                       pages=[[] for _ in range(lyr)],
+                       tail_k=np.zeros((lyr, self.page, k, dh), np.float32),
+                       tail_v=np.zeros((lyr, self.page, k, dh), np.float32))
+        self.seqs[sid] = seq
+        self._prefill(seq)
+
+    def _block_params(self, li: int):
+        return jax.tree.map(lambda x: x[li], self.params["blocks"])
+
+    def _prefill(self, seq: Sequence) -> None:
+        cfg = self.cfg
+        toks = jnp.asarray(seq.tokens, jnp.int32)[None]
+        s = len(seq.tokens)
+        x = L.embed(self.params["embed"], toks)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        n_full = s // self.page
+        seq.tail_len = s - n_full * self.page
+        for li in range(cfg.n_layers):
+            bp = self._block_params(li)
+            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            k = L.linear(bp["attn"]["wk"], h)
+            v = L.linear(bp["attn"]["wv"], h)
+            dh = k.shape[-1]
+            cos, sin = L.rope_angles(positions, dh, cfg.rope_theta)
+            k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+            x = x + A.gqa_forward(bp["attn"], h, positions,
+                                  theta=cfg.rope_theta)
+            h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(bp["ffn"], h2)
+
+            karr = np.asarray(k[0], np.float32)       # [S, K, Dh]
+            varr = np.asarray(v[0], np.float32)
+            for blk in range(n_full):
+                sl = slice(blk * self.page, (blk + 1) * self.page)
+                self._publish_page(seq, li, karr[sl], varr[sl])
+            if seq.tail_len:
+                seq.tail_k[li, :seq.tail_len] = karr[n_full * self.page:]
+                seq.tail_v[li, :seq.tail_len] = varr[n_full * self.page:]
+
+    # -- decode ------------------------------------------------------------------
+
+    def decode_one(self, sid: int) -> int:
+        """Greedy-decode one token for sequence sid."""
+        cfg, seq = self.cfg, self.seqs[sid]
+        t = len(seq.tokens)
+        tok = jnp.asarray([seq.tokens[-1]], jnp.int32)
+        x = L.embed(self.params["embed"], tok[:, None])
+        tails_full = False
+        for li in range(cfg.n_layers):
+            bp = self._block_params(li)
+            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            q = L.linear(bp["attn"]["wq"], h)
+            k_new = L.linear(bp["attn"]["wk"], h)
+            v_new = L.linear(bp["attn"]["wv"], h)
+            dh = q.shape[-1]
+            pos_t = jnp.asarray([t - 1], jnp.int32)
+            cos, sin = L.rope_angles(pos_t, dh, cfg.rope_theta)
+            q = L.apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+            k_new = L.apply_rope(k_new, cos[None, :, None, :],
+                                 sin[None, :, None, :])
+            seq.tail_k[li, seq.tail_len] = np.asarray(k_new[0, 0], np.float32)
+            seq.tail_v[li, seq.tail_len] = np.asarray(v_new[0, 0], np.float32)
+
+            ctx = self._attend(seq, li, q)
+            x = x + A._proj_out(bp["attn"], ctx)
+            h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(bp["ffn"], h2)
+        seq.tail_len += 1
+        if seq.tail_len == self.page:
+            for li in range(cfg.n_layers):
+                self._publish_page(seq, li, seq.tail_k[li], seq.tail_v[li])
+            seq.tail_len = 0
+
+        x = L.rmsnorm(self.params["final_norm"], x, cfg.norm_eps)
+        logits = L.lm_logits(self.params["lm_head"], x)[0, 0]
+        nxt = int(jnp.argmax(logits))
+        seq.tokens.append(nxt)
+        return nxt
+
+    def _attend(self, seq: Sequence, li: int, q: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        kh, dh = cfg.n_kv_heads, cfg.head_dim
+        pids = seq.pages[li]
+        parts_k, parts_v = [], []
+        if pids:
+            k_pages = ref.dequant_pages(jnp.asarray(self.kd[li, pids]),
+                                        jnp.asarray(self.kb[li, pids]),
+                                        jnp.asarray(self.ks[li, pids]))
+            v_pages = ref.dequant_pages(jnp.asarray(self.vd[li, pids]),
+                                        jnp.asarray(self.vb[li, pids]),
+                                        jnp.asarray(self.vs[li, pids]))
+            parts_k.append(jnp.swapaxes(k_pages, 1, 2).reshape(-1, kh, dh))
+            parts_v.append(jnp.swapaxes(v_pages, 1, 2).reshape(-1, kh, dh))
+        tl = seq.tail_len + 1
+        parts_k.append(jnp.asarray(seq.tail_k[li, :tl]))
+        parts_v.append(jnp.asarray(seq.tail_v[li, :tl]))
+        k = jnp.concatenate(parts_k, axis=0)           # [T, K, Dh]
+        v = jnp.concatenate(parts_v, axis=0)
+        hq = q.shape[2]
+        qg = q[0, 0].reshape(kh, hq // kh, dh)
+        sc = jnp.einsum("kgd,tkd->kgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("kgt,tkd->kgd", w, v.astype(jnp.float32))
+        return ctx.reshape(1, 1, hq, dh).astype(q.dtype)
+
+    # -- metrics ------------------------------------------------------------------
+
+    def compression_ratio(self) -> float:
+        if not self.stats["bytes_compressed"]:
+            return 1.0
+        return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
+
+    def pool_used_pages(self) -> int:
+        return (self.kd.shape[1] - 1) - len(self.free)

@@ -1,0 +1,161 @@
+"""Equivalence tests: batched device-resident engine vs the seed engine.
+
+The batched hot path (serving/engine.py) must produce token-for-token
+identical greedy output to the host-looped seed engine kept in
+serving/reference.py — including across page publishes, padded-page-table
+growth, and a CAMP preemption forced mid-decode.  Also checks the
+tail-fused paged-attention kernel against its dense dequant oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.kernels import ops, ref
+from repro.models.api import get_model
+from repro.serving.engine import PagedKVEngine
+from repro.serving.reference import ReferencePagedKVEngine
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pair(cfg, params, n_pool_pages, max_batch=8):
+    return (ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                   n_pool_pages=n_pool_pages),
+            PagedKVEngine(cfg, params, page_size=PAGE,
+                          n_pool_pages=n_pool_pages, max_batch=max_batch))
+
+
+def test_decode_batch_matches_reference_engine(small_model):
+    """Greedy output identical across ragged prompts and page publishes."""
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=96)
+    prompts = {0: [5, 9, 2, 7, 11, 3], 1: [4, 4, 8, 1],
+               2: list(range(1, 13))}
+    for sid, p in prompts.items():
+        re_.add_request(sid, p)
+        be.add_request(sid, p)
+
+    for step in range(16):
+        out = be.decode_batch()
+        for sid in prompts:
+            assert re_.decode_one(sid) == out[sid], (step, sid)
+
+    assert re_.stats == be.stats
+    assert re_.pool_used_pages() == be.pool_used_pages()
+
+
+def test_decode_batch_page_table_growth(small_model):
+    """Crossing the padded-PMAX doubling boundary keeps outputs identical."""
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=64, max_batch=2)
+    prompt = [1 + (j * 5) % (cfg.vocab - 1) for j in range(62)]
+    re_.add_request(0, prompt)
+    be.add_request(0, prompt)
+    assert be._pmax == 8                       # 7 pages/layer after prefill
+    for step in range(12):                     # crosses 8 pages -> PMAX 16
+        assert re_.decode_one(0) == be.decode_one(0), step
+    assert be._pmax == 16
+    assert re_.seqs[0].tokens == be.seqs[0].tokens
+
+
+def test_camp_preemption_mid_decode_matches_reference(small_model):
+    """A finished request's lingering KV is evicted mid-decode by both.
+
+    Pool sized so tail publishes exhaust it while three live sequences
+    decode; the `done` sequence has CAMP value -1 and is deterministically
+    the victim in both engines.  Live sequences' greedy tokens must stay
+    identical through the preemption.
+    """
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=24)
+    prompts = {0: [5, 9, 2, 7, 11, 3], 1: [3, 1, 4, 1, 5],
+               2: [2, 7, 1, 8, 2, 8], 3: list(range(1, 40))}
+    for sid, p in prompts.items():
+        re_.add_request(sid, p)
+        be.add_request(sid, p)
+    re_.seqs[3].done = True
+    be.seqs[3].done = True
+
+    live = [0, 1, 2]
+    preempt_step = None
+    for step in range(20):
+        for sid in live:
+            re_.decode_one(sid)
+        be.decode_batch(live)
+        assert re_.seqs[3].preempted == be.seqs[3].preempted, step
+        for sid in live:
+            assert re_.seqs[sid].tokens == be.seqs[sid].tokens, (step, sid)
+        if re_.seqs[3].preempted:
+            preempt_step = step
+            break
+    assert preempt_step is not None, "pool never forced a preemption"
+    assert re_.stats["preemptions"] == be.stats["preemptions"] == 1
+    assert be.stats["pages_evicted"] > 0
+
+    # decode continues correctly after the eviction freed pages
+    for step in range(4):
+        for sid in live:
+            re_.decode_one(sid)
+        be.decode_batch(live)
+    for sid in live:
+        assert re_.seqs[sid].tokens == be.seqs[sid].tokens
+
+
+def test_preempted_sequence_is_skipped(small_model):
+    cfg, params = small_model
+    _, be = _pair(cfg, params, n_pool_pages=96)
+    be.add_request(0, [1, 2, 3])
+    be.add_request(1, [4, 5, 6])
+    be.seqs[1].preempted = True
+    out = be.decode_batch()
+    assert set(out) == {0}
+
+
+def test_release_recycles_slot_and_pages(small_model):
+    cfg, params = small_model
+    _, be = _pair(cfg, params, n_pool_pages=96, max_batch=2)
+    be.add_request(0, list(range(1, 13)))      # 12 toks -> 1 page/layer
+    be.add_request(1, [4, 5, 6])
+    assert not be._free_slots                  # at capacity
+    used_before = be.pool_used_pages()
+    be.decode_batch()
+    be.release(0)
+    assert be.pool_used_pages() < used_before  # pages returned to the pool
+    be.add_request(2, [7, 8, 9, 10])           # reuses the freed slot
+    out = be.decode_batch()
+    assert set(out) == {1, 2}
+
+
+def test_paged_attention_tail_matches_ref():
+    """Tail-fused kernel == dense dequant oracle, incl. zero-page seqs."""
+    key = jax.random.PRNGKey(7)
+    bsz, kvh, g, d, page, pmax, pool = 3, 2, 4, 16, 8, 4, 12
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (bsz, kvh, g, d))
+    k = jax.random.normal(ks[1], (pool, kvh, page, d))
+    v = jax.random.normal(ks[2], (pool, kvh, page, d))
+    pages = ref.compress_kv_pages(k, v)
+    pt = jax.random.randint(ks[3], (bsz, pmax), 0, pool)
+    # seq 1 has zero published pages (tail-only attention)
+    lengths = jnp.asarray([2 * page, 0, 4 * page], jnp.int32)
+    tail_k = jax.random.normal(ks[4], (bsz, kvh, page, d))
+    tail_v = jax.random.normal(ks[5], (bsz, kvh, page, d))
+    tail_len = jnp.asarray([3, 1, page], jnp.int32)
+
+    got = ops.paged_attention_tail(q, pages, pt, lengths,
+                                   tail_k, tail_v, tail_len)
+    want = ref.paged_attention_tail_ref(q, pages, pt, lengths,
+                                        tail_k, tail_v, tail_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
