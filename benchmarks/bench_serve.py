@@ -3,11 +3,18 @@
 Measures prefill and decode tokens/sec through the LCP-paged
 compressed-KV engine at batch 1/8/32 and writes a machine-readable JSON
 snapshot to ``results/serve/`` so the perf trajectory is tracked across
-PRs.  The headline row is decode tok/s at batch 8: the batched jitted
-hot path must hold >=5x over the host-looped reference (it lands ~15x on
-CPU; more where compiled Pallas is available).
+PRs.  Two headline rows, both at batch 8: decode tok/s through the
+batched jitted hot path (>=5x over the host-looped reference; ~15-20x on
+CPU) and — new with chunked prefill — prefill tok/s through the
+chunked-batch admission path (>=5x over per-request host-loop prefill).
 
-Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+Each engine is warmed on a throwaway instance first so the timed numbers
+measure steady-state throughput, not jit tracing (the jit cache is
+global, so the timed instance reuses the warm traces).
+
+Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick | --smoke]
+CI:  the ``bench-smoke`` job runs ``--smoke`` and gates the batched rows
+against ``benchmarks/baselines/serve_ci.json`` (check_serve_regression).
 """
 
 from __future__ import annotations
@@ -26,6 +33,13 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
 PROMPT_LEN = 12
 PAGE = 8
 
+# (batches, batched decode steps, reference decode steps)
+_MODES = {
+    "full": ((1, 8, 32), 32, 8),
+    "quick": ((1, 8), 8, 4),
+    "smoke": ((1, 8), 6, 3),
+}
+
 
 def _build(cfg, params, engine: str, batch: int, pool: int):
     if engine == "batched":
@@ -37,20 +51,32 @@ def _build(cfg, params, engine: str, batch: int, pool: int):
                                   n_pool_pages=pool)
 
 
+def _prompts(cfg, batch: int) -> dict[int, list[int]]:
+    return {i: [1 + (i * 7 + j) % (cfg.vocab - 1)
+                for j in range(PROMPT_LEN)] for i in range(batch)}
+
+
 def _bench_engine(cfg, params, engine: str, batch: int,
                   decode_steps: int) -> dict:
     pool = max(256, batch * 16)
-    eng = _build(cfg, params, engine, batch, pool)
-    prompts = {i: [1 + (i * 7 + j) % (cfg.vocab - 1)
-                   for j in range(PROMPT_LEN)] for i in range(batch)}
+    prompts = _prompts(cfg, batch)
 
+    warm = _build(cfg, params, engine, batch, pool)   # pays jit tracing
+    warm.add_requests(prompts)
+    if engine == "batched":
+        for _ in range(PAGE):    # through a tail fill -> publish is traced
+            warm.decode_batch()
+    else:
+        warm.decode_one(0)
+    del warm      # free its pools; the jit trace cache is global
+
+    eng = _build(cfg, params, engine, batch, pool)
     t0 = time.time()
-    for sid, p in prompts.items():
-        eng.add_request(sid, p)
+    eng.add_requests(prompts)
     prefill_s = time.time() - t0
 
     if engine == "batched":
-        eng.decode_batch()                       # trace/compile warmup
+        eng.decode_batch()                       # steady-state entry step
         t0 = time.time()
         for _ in range(decode_steps):
             eng.decode_batch()
@@ -67,13 +93,14 @@ def _bench_engine(cfg, params, engine: str, batch: int,
     return {
         "bench": "serve", "engine": engine, "batch": batch,
         "prompt_len": PROMPT_LEN, "decode_steps": decode_steps,
+        "prefill_mode": "chunked" if engine == "batched" else "host-loop",
         "prefill_tok_s": round(batch * PROMPT_LEN / prefill_s, 1),
         "decode_tok_s": round(batch * decode_steps / decode_s, 1),
         "kv_compression_ratio": round(eng.compression_ratio(), 3),
     }
 
 
-def rows(quick: bool = False) -> list[dict]:
+def rows(mode: str = "full") -> list[dict]:
     import jax
 
     from repro.configs.registry import get_arch
@@ -83,16 +110,16 @@ def rows(quick: bool = False) -> list[dict]:
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    batches = (1, 8) if quick else (1, 8, 32)
+    batches, bat_steps, ref_steps = _MODES[mode]
     out = []
     for batch in batches:
         # reference is ~15x slower per token: fewer timed steps there
-        batched = _bench_engine(cfg, params, "batched", batch,
-                                decode_steps=8 if quick else 32)
-        refr = _bench_engine(cfg, params, "reference", batch,
-                             decode_steps=4 if quick else 8)
-        speed = round(batched["decode_tok_s"] / refr["decode_tok_s"], 2)
-        batched["decode_speedup_vs_reference"] = speed
+        batched = _bench_engine(cfg, params, "batched", batch, bat_steps)
+        refr = _bench_engine(cfg, params, "reference", batch, ref_steps)
+        batched["decode_speedup_vs_reference"] = round(
+            batched["decode_tok_s"] / refr["decode_tok_s"], 2)
+        batched["prefill_speedup_vs_reference"] = round(
+            batched["prefill_tok_s"] / refr["prefill_tok_s"], 2)
         out.extend([batched, refr])
     return out
 
@@ -109,8 +136,8 @@ def save_json(rs: list[dict]) -> str:
     return path
 
 
-def main(quick: bool = False) -> None:
-    rs = rows(quick=quick)
+def main(mode: str = "full") -> None:
+    rs = rows(mode=mode)
     for r in rs:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     path = save_json(rs)
@@ -121,4 +148,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="batch 1/8 only, fewer timed steps")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes (implies --quick)")
+    args = ap.parse_args()
+    main(mode="smoke" if args.smoke else "quick" if args.quick else "full")

@@ -1,0 +1,124 @@
+"""CI guard: fail when serving throughput regresses vs a committed baseline.
+
+Compares the ``engine="batched"`` rows of a fresh ``bench_serve`` JSON
+against ``benchmarks/baselines/serve_ci.json``, matching rows on batch
+size: both ``decode_tok_s`` and ``prefill_tok_s`` must be at least
+``(1 - max_drop)`` times the baseline value, otherwise exit 1 with a
+per-metric report.  This is what keeps wins like the 21x batched decode
+(PR #1) and the chunked-prefill speedup (PR #2) from silently rotting.
+
+Baseline values are deliberately *derated* (stored well below locally
+measured throughput) so that CI-runner speed variance does not false-fail
+the gate; the guard is tuned to catch order-of-magnitude regressions —
+losing jit on a hot path, reintroducing a host loop — not 20% noise.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_serve_regression \
+      results/serve/serve_latest.json [baseline.json] [--max-drop 0.30]
+  ... --update [--derate 0.25]   # regenerate the baseline from current
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "serve_ci.json")
+METRICS = ("decode_tok_s", "prefill_tok_s")
+
+
+def _batched_rows(payload: dict) -> dict[int, dict]:
+    return {r["batch"]: r for r in payload["rows"]
+            if r.get("engine") == "batched"}
+
+
+def check(current: dict, baseline: dict, max_drop: float) -> list[str]:
+    """Return a list of failure messages (empty == pass)."""
+    cur, base = _batched_rows(current), _batched_rows(baseline)
+    failures = []
+    for batch, brow in sorted(base.items()):
+        crow = cur.get(batch)
+        if crow is None:
+            failures.append(f"batch {batch}: missing from current results")
+            continue
+        for metric in METRICS:
+            floor = brow[metric] * (1.0 - max_drop)
+            got = crow.get(metric, 0.0)
+            if got < floor:
+                failures.append(
+                    f"batch {batch} {metric}: {got:.1f} tok/s < floor "
+                    f"{floor:.1f} (baseline {brow[metric]:.1f}, "
+                    f"max drop {max_drop:.0%})")
+    return failures
+
+
+def update_baseline(current: dict, path: str, derate: float) -> None:
+    rows = []
+    for r in current["rows"]:
+        if r.get("engine") != "batched":
+            continue
+        row = {"engine": "batched", "batch": r["batch"]}
+        for metric in METRICS:
+            row[metric] = round(r[metric] * derate, 1)
+        rows.append(row)
+    payload = {
+        "note": ("Derated serving-throughput floors for the CI bench-smoke "
+                 "gate; values are measured tok/s scaled by the derate "
+                 "factor to absorb dev-vs-CI runner speed variance (the "
+                 "gate targets order-of-magnitude rots like losing jit, "
+                 "not noise).  Regenerate with check_serve_regression "
+                 "--update after intentional perf changes — ideally from "
+                 "a bench JSON produced on an actual CI runner."),
+        "derate": derate,
+        "source_generated_at": current.get("generated_at"),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote baseline {os.path.relpath(path)}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh bench_serve JSON")
+    ap.add_argument("baseline", nargs="?", default=BASELINE)
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="max allowed fractional drop vs baseline")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current results")
+    ap.add_argument("--derate", type=float, default=0.10,
+                    help="baseline = measured * derate (with --update); "
+                         "the default absorbs dev-vs-CI runner speed gaps "
+                         "— recalibrate from a CI artifact once available")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if args.update:
+        update_baseline(current, args.baseline, args.derate)
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, args.max_drop)
+    if failures:
+        print("serving throughput regression detected:")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    for batch, brow in sorted(_batched_rows(baseline).items()):
+        crow = _batched_rows(current)[batch]
+        print(f"  ok batch {batch}: "
+              + ", ".join(f"{m}={crow[m]:.1f} "
+                          f"(floor {brow[m] * (1 - args.max_drop):.1f})"
+                          for m in METRICS))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -72,6 +72,70 @@ def _compress_kernel(x_ref, deltas_ref, base_ref, scale_ref, maskp_ref,
     enc_ref[...] = enc.astype(jnp.int32)
 
 
+def _compress_kv_kernel(x_ref, deltas_ref, base_ref, scale_ref):
+    """Single-base row codec: the KV page-fill form of BDI.
+
+    One row = one (head, token) vector of a KV page.  Base is the row's
+    first element, scale the power-of-two derived from max |residual| —
+    identical math to :func:`ref.compress_kv_pages` (and to the Step-2
+    branch of the tile kernel above), so outputs are bit-exact with the
+    jnp oracle.  No zero-base mask: KV value distributions never win it
+    (measured in benchmarks/bench_lcp.py).
+    """
+    x = x_ref[...].astype(jnp.float32)                 # [bn, d]
+    base = x[:, 0:1]
+    r = x - base
+    maxres = jnp.max(jnp.abs(r), axis=1, keepdims=True)
+    ratio = maxres / _QMAX
+    bits = jax.lax.bitcast_convert_type(ratio, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    e = e + (bits & 0x7FFFFF != 0).astype(jnp.int32)
+    scale = jnp.exp2(e.astype(jnp.float32))
+    scale = jnp.where(maxres > 0, scale, jnp.float32(1.0))
+    deltas = jnp.clip(jnp.round(r / scale), -_QMAX, _QMAX)
+
+    deltas_ref[...] = deltas.astype(jnp.int8)
+    base_ref[...] = base
+    scale_ref[...] = scale
+
+
+def bdi_compress_kv(x: jax.Array, *, block_n: int = 8,
+                    interpret: bool | None = None):
+    """x f32 [N, D] rows -> (deltas i8 [N, D], base f32 [N, 1], scale f32
+    [N, 1]): the batched page-fill entry point for the serving engines.
+
+    ``interpret=None`` resolves from the backend.  D is the head dim
+    (typically 64/128); on TPU lanes pad to 128, which is fine for a
+    fill-path kernel that runs off the decode critical path.
+    """
+    return _bdi_compress_kv(x, block_n=block_n,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _bdi_compress_kv(x: jax.Array, *, block_n: int, interpret: bool):
+    n, d = x.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    row = lambda i: (i, 0)  # noqa: E731
+    return pl.pallas_call(
+        _compress_kv_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, d), row)],
+        out_specs=[
+            pl.BlockSpec((block_n, d), row),
+            pl.BlockSpec((block_n, 1), row),
+            pl.BlockSpec((block_n, 1), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
 def bdi_compress(x: jax.Array, *, block_n: int = 8,
                  interpret: bool | None = None):
     """x f32 [N, T] -> (deltas i8, base f32, scale f32, maskp u8, enc i32).

@@ -18,6 +18,7 @@ from repro.core import bdi_value as bv
 from . import ref
 from ._backend import default_interpret, resolve_interpret  # noqa: F401
 from .bdi_compress import bdi_compress as _compress_kernel
+from .bdi_compress import bdi_compress_kv as _compress_kv_kernel
 from .bdi_decompress import bdi_decompress as _decompress_kernel
 from .paged_attention import paged_attention as _paged_attention_kernel
 from .paged_attention import paged_attention_tail as _paged_attention_tail
@@ -48,6 +49,31 @@ def decompress(p: ref.PackedTiles, *, block_n: int = 8) -> jax.Array:
     maskp, _ = _pad_rows(p.maskp, block_n)
     return _decompress_kernel(deltas, base, scale, maskp,
                               block_n=block_n)[:n]
+
+
+def compress_kv_pages(k: jax.Array, v: jax.Array, *,
+                      interpret: bool | None = None,
+                      block_n: int = 8) -> ref.CompressedKVPages:
+    """Batched KV page-fill through the Pallas row codec.
+
+    k, v: f32 [P, KVH, page, D] -> single-base compressed pages, bit-exact
+    with :func:`ref.compress_kv_pages`.  This is the chunked-prefill /
+    decode page-publish entry point: every freshly filled page of every
+    layer compresses in one kernel dispatch.
+    """
+    p, kvh, page, d = k.shape
+
+    def enc(x):
+        rows, n = _pad_rows(x.astype(jnp.float32).reshape(-1, d), block_n)
+        deltas, base, scale = _compress_kv_kernel(rows, block_n=block_n,
+                                                  interpret=interpret)
+        return (deltas[:n].reshape(p, kvh, page, d),
+                base[:n, 0].reshape(p, kvh, page),
+                scale[:n, 0].reshape(p, kvh, page))
+
+    kd, kb, ks = enc(k)
+    vd, vb, vs = enc(v)
+    return ref.CompressedKVPages(kd, kb, ks, vd, vb, vs)
 
 
 def paged_attention(q: jax.Array, pages: ref.CompressedKVPages,

@@ -1,10 +1,12 @@
 """Serving driver: batched greedy generation through the model API, or the
 LCP-paged compressed-KV engine (--paged).
 
-The paged path runs the batched device-resident hot path
-(``PagedKVEngine.decode_batch`` — one jitted step per token for the whole
-batch); ``--paged-reference`` selects the seed host-looped engine instead,
-for A/B timing.
+The paged path runs the batched device-resident hot path end to end:
+admission goes through ``PagedKVEngine.add_requests`` (one chunked-batch
+prefill pass for all prompts, ``--prefill-chunk`` sets the step width)
+and decode through ``decode_batch`` (one jitted step per token for the
+whole batch); ``--paged-reference`` selects the seed host-looped engine
+instead, for A/B timing.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
@@ -25,7 +27,8 @@ from repro.models.api import get_model
 
 def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              prompt_len: int = 16, gen: int = 16,
-             paged: bool = False, paged_reference: bool = False) -> dict:
+             paged: bool = False, paged_reference: bool = False,
+             prefill_chunk: int | None = None) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -36,22 +39,21 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                                  jnp.int32)
 
     if paged or paged_reference:
+        reqs = {b: [int(t) for t in prompts[b]] for b in range(batch)}
         t0 = time.time()
         if paged_reference:
             from repro.serving.reference import ReferencePagedKVEngine
             eng = ReferencePagedKVEngine(cfg, params, page_size=8,
                                          n_pool_pages=512)
-            for b in range(batch):
-                eng.add_request(b, [int(t) for t in prompts[b]])
+            eng.add_requests(reqs)
             for _ in range(gen):
                 for b in range(batch):
                     eng.decode_one(b)
         else:
             from repro.serving.engine import PagedKVEngine
             eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
-                                max_batch=batch)
-            for b in range(batch):
-                eng.add_request(b, [int(t) for t in prompts[b]])
+                                max_batch=batch, prefill_chunk=prefill_chunk)
+            eng.add_requests(reqs)      # one chunked-batch prefill pass
             for _ in range(gen):
                 eng.decode_batch()
         dt = time.time() - t0
@@ -88,10 +90,14 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true")
     ap.add_argument("--paged-reference", action="store_true",
                     help="seed host-looped engine (A/B baseline)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill step width in tokens "
+                         "(page-aligned; default 2x page size)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
-                   paged_reference=args.paged_reference)
+                   paged_reference=args.paged_reference,
+                   prefill_chunk=args.prefill_chunk)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:

@@ -91,29 +91,53 @@ def _chunked_attn(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :s]
 
 
+def gqa_kv(p: dict, x: jax.Array, positions: jax.Array,
+           theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """K/V projection + K-rope: the single shared projection path.
+
+    x [B, T, D] -> (k [B, T, K, Dh] roped, v [B, T, K, Dh]).  Serving
+    engines and the model-stack prefill compute K/V here exactly once and
+    hand the result both to :func:`gqa_forward` (via ``kv=``) and to the
+    cache/page write path.
+    """
+    k = L.linear(p["wk"], x)                         # [B, T, K, Dh]
+    v = L.linear(p["wv"], x)
+    k = shard(k, DP, None, MODEL, None)
+    v = shard(v, DP, None, MODEL, None)
+    if theta > 0:
+        dh = k.shape[-1]
+        cos_k, sin_k = L.rope_angles(positions, dh, theta)
+        k = L.apply_rope(k, cos_k[None, :, None, :], sin_k[None, :, None, :])
+    return k, v
+
+
 def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
                 window: jax.Array | int = 0, theta: float = 1e4,
                 causal: bool = True,
                 kv_x: jax.Array | None = None,
-                kv_positions: jax.Array | None = None) -> jax.Array:
-    """Full-sequence GQA. positions [S]. kv_x enables cross-attention."""
+                kv_positions: jax.Array | None = None,
+                kv: tuple[jax.Array, jax.Array] | None = None) -> jax.Array:
+    """Full-sequence GQA. positions [S]. kv_x enables cross-attention.
+
+    ``kv``: externally computed (k, v), each [B, T, K, Dh] with rope
+    already applied to k (see :func:`gqa_kv`) — lets callers that also
+    cache K/V project exactly once per layer.
+    """
     b, s, d = x.shape
-    kv_in = x if kv_x is None else kv_x
     kvp = positions if kv_positions is None else kv_positions
 
     q = L.linear(p["wq"], x)                         # [B, S, H, Dh]
-    k = L.linear(p["wk"], kv_in)                     # [B, T, K, Dh]
-    v = L.linear(p["wv"], kv_in)
     q = shard(q, DP, None, MODEL, None)
-    k = shard(k, DP, None, MODEL, None)
-    v = shard(v, DP, None, MODEL, None)
-
     dh = q.shape[-1]
     if theta > 0:
         cos_q, sin_q = L.rope_angles(positions, dh, theta)
         q = L.apply_rope(q, cos_q[None, :, None, :], sin_q[None, :, None, :])
-        cos_k, sin_k = L.rope_angles(kvp, dh, theta)
-        k = L.apply_rope(k, cos_k[None, :, None, :], sin_k[None, :, None, :])
+
+    if kv is not None:
+        assert kv_x is None, "kv and kv_x are mutually exclusive"
+        k, v = kv
+    else:
+        k, v = gqa_kv(p, x if kv_x is None else kv_x, kvp, theta=theta)
 
     h, kh = q.shape[2], k.shape[2]
     qg = q.reshape(b, s, kh, h // kh, dh)
@@ -176,16 +200,23 @@ def gqa_decode(p: dict, x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def gqa_prefill_cache(p: dict, x: jax.Array, positions: jax.Array,
-                      cache_len: int, *, ring: bool, theta: float = 1e4
+                      cache_len: int, *, ring: bool, theta: float = 1e4,
+                      kv: tuple[jax.Array, jax.Array] | None = None
                       ) -> tuple[jax.Array, jax.Array]:
-    """Compute K/V for a prompt and lay them out as a decode cache."""
-    k = L.linear(p["wk"], x)
-    v = L.linear(p["wv"], x)
-    dh = k.shape[-1]
-    if theta > 0:
-        cos, sin = L.rope_angles(positions, dh, theta)
-        k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
-    b, s, kh, _ = k.shape
+    """Compute K/V for a prompt and lay them out as a decode cache.
+
+    ``kv``: optional externally computed (k roped, v) from :func:`gqa_kv`
+    so callers that also run attention project only once.
+    """
+    if kv is not None:
+        k, v = kv
+    else:
+        k = L.linear(p["wk"], x)
+        v = L.linear(p["wv"], x)
+        if theta > 0:
+            cos, sin = L.rope_angles(positions, k.shape[-1], theta)
+            k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+    b, s, kh, dh = k.shape
     kc = jnp.zeros((b, cache_len, kh, dh), k.dtype)
     vc = jnp.zeros_like(kc)
     if ring:

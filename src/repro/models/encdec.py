@@ -196,14 +196,18 @@ def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
 
     def body(x, bp):
         h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        # one K/V projection per layer for both attentions, shared with
+        # the cache build (self-attn roped, cross-attn theta=0)
+        kv = A.gqa_kv(bp["attn"], h, positions, theta=cfg.rope_theta)
         kc, vc = A.gqa_prefill_cache(bp["attn"], h, positions, max_len,
-                                     ring=False, theta=cfg.rope_theta)
-        x = x + A.gqa_forward(bp["attn"], h, positions, theta=cfg.rope_theta)
+                                     ring=False, theta=cfg.rope_theta,
+                                     kv=kv)
+        x = x + A.gqa_forward(bp["attn"], h, positions,
+                              theta=cfg.rope_theta, kv=kv)
         h = L.rmsnorm(bp["lnx"], x, cfg.norm_eps)
-        ck = L.linear(bp["cross"]["wk"], memory)
-        cv = L.linear(bp["cross"]["wv"], memory)
+        ck, cv = A.gqa_kv(bp["cross"], memory, mem_pos, theta=0.0)
         x = x + A.gqa_forward(bp["cross"], h, positions, causal=False,
-                              theta=0.0, kv_x=memory, kv_positions=mem_pos)
+                              theta=0.0, kv=(ck, cv), kv_positions=mem_pos)
         h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
         return x + L.mlp(bp["ffn"], h), (kc, vc, ck, cv)
 

@@ -208,10 +208,13 @@ def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
     def body(x, xs):
         bp, w = xs
         h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        # one K/V projection per layer, shared by cache and attention
+        kv = A.gqa_kv(bp["attn"], h, positions, theta=cfg.rope_theta)
         kc, vc = A.gqa_prefill_cache(bp["attn"], h, positions, max_len,
-                                     ring=False, theta=cfg.rope_theta)
+                                     ring=False, theta=cfg.rope_theta,
+                                     kv=kv)
         attn_y = A.gqa_forward(bp["attn"], h, positions, window=w,
-                               theta=cfg.rope_theta)
+                               theta=cfg.rope_theta, kv=kv)
         ssm_y, h_last, conv_tail = S.mamba_forward(bp["mamba"], h,
                                                    cfg.ssm_state,
                                                    return_state=True)

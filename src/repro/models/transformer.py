@@ -393,10 +393,13 @@ def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int
         def body(x, xs):
             bp, w = xs
             h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            # one K/V projection per layer, shared by cache and attention
+            kv = A.gqa_kv(bp["attn"], h, positions, theta=cfg.rope_theta)
             kc, vc = A.gqa_prefill_cache(bp["attn"], h, positions, max_len,
-                                         ring=False, theta=cfg.rope_theta)
+                                         ring=False, theta=cfg.rope_theta,
+                                         kv=kv)
             attn = A.gqa_forward(bp["attn"], h, positions, window=w,
-                                 theta=cfg.rope_theta)
+                                 theta=cfg.rope_theta, kv=kv)
             x = x + attn
             h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
             return x + _ffn_apply(cfg, bp, h), (kc, vc)

@@ -12,9 +12,22 @@ The inference-side integration of all three thesis pillars:
 
 Serving hot path
 ----------------
-Decode is a single **batched, jit-compiled, device-resident step**
-(:func:`_decode_step`): all active sequences and all layers advance one
-token per dispatch.
+Both halves of the lifecycle are batched, jit-compiled and
+device-resident: prompts run through a **chunked-batch prefill**
+(:func:`_prefill_chunk` — every admitted prompt advances ``prefill_chunk``
+tokens per dispatch, one ``lax.scan`` over the stacked layer params, each
+layer's K/V projection computed exactly once and shared between attention
+and the page-fill path via ``gqa_forward(kv=...)``), and decode is a
+single batched step (:func:`_decode_step`): all active sequences and all
+layers advance one token per dispatch.
+
+Prefill keeps an exact f32 K/V scratch for the duration of the prompt
+(intra-prompt attention must read uncompressed values to stay
+token-for-token with the oracle); every page a chunk completes is
+compressed and scattered into the device pools by the same batched
+page-fill dispatch decode uses, and the final partial page lands in the
+decode tail buffers.  No per-sequence host round-trips of KV data on
+either path.
 
   * The per-layer compressed page pools (``kd/kb/ks/vd/vb/vs``) live as
     device ``jnp`` arrays for the whole engine lifetime; page publishes
@@ -189,6 +202,85 @@ def _decode_step(params, pools, tk, tv, page_table, page_cnt,
     return jnp.where(active, nxt, last_tok), tk, tv
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
+def _prefill_chunk(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
+    """One chunked-batch prefill step: C prompt tokens per slot, all layers.
+
+    tokens i32 [R, C] (one scratch row per admitted prompt, zero-padded);
+    off i32 scalar — the chunk's start position, shared by every row (the
+    chunk grid is uniform, so no per-row position table is needed; padded
+    rows compute masked garbage that is never published).  kscr/vscr f32
+    [L, R, Tmax, K, D] are the donated *exact* (uncompressed) K/V scratch
+    of previously processed chunks: intra-prefill attention must read
+    exact values to stay token-for-token with the full-sequence oracle —
+    page compression is applied only on publish, as in the reference.
+
+    One ``lax.scan`` over the stacked layer params computes each layer's
+    K/V projection exactly once (shared via ``gqa_forward(kv=...)``
+    between the scratch write and attention).  Returns the updated
+    scratch; page extraction/compression happens in follow-up dispatches
+    (:func:`_gather_prefill_blocks` + :func:`_publish_blocks`).
+    """
+    s, c = tokens.shape
+    tmax = kscr.shape[2]
+    x = L.embed(params["embed"], tokens)                     # [S, C, D]
+    qpos = off + jnp.arange(c, dtype=jnp.int32)              # [C]
+    kpos = jnp.arange(tmax, dtype=jnp.int32)                 # [Tmax]
+
+    def body(x, xs):
+        bp, kscr_l, vscr_l = xs
+        h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        k, v = A.gqa_kv(bp["attn"], h, qpos, theta=cfg.rope_theta)
+        kscr_l = jax.lax.dynamic_update_slice(
+            kscr_l, k.astype(jnp.float32), (0, off, 0, 0))
+        vscr_l = jax.lax.dynamic_update_slice(
+            vscr_l, v.astype(jnp.float32), (0, off, 0, 0))
+        # causal mask over the scratch covers both earlier chunks
+        # (kpos < off) and the current chunk (kpos <= qpos); slots past
+        # off + C hold zeros/garbage with kpos > qpos, so they mask out.
+        x = x + A.gqa_forward(bp["attn"], h, qpos, theta=cfg.rope_theta,
+                              kv=(kscr_l, vscr_l), kv_positions=kpos)
+        h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["ffn"], h2)
+        return x, (kscr_l, vscr_l)
+
+    _, (kscr, vscr) = jax.lax.scan(
+        body, x, (params["blocks"], kscr, vscr))
+    return kscr, vscr
+
+
+def _scratch_blocks(kscr, vscr, rows, blks, page: int):
+    """Gather page blocks [L, m, K, page, D] from the prefill scratch.
+
+    (rows[j], blks[j]) selects scratch row j's page ``blks[j]`` (token
+    positions blk*page..(blk+1)*page) from the [L, R, Tmax, K, D] scratch.
+    """
+    lyr, r, tmax, kvh, dh = kscr.shape
+    kp = kscr.reshape(lyr, r, tmax // page, page, kvh, dh)
+    vp = vscr.reshape(lyr, r, tmax // page, page, kvh, dh)
+    return (jnp.moveaxis(kp[:, rows, blks], 2, 3),
+            jnp.moveaxis(vp[:, rows, blks], 2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("page",))
+def _gather_prefill_blocks(kscr, vscr, rows, blks, *, page: int):
+    """Scratch -> freshly completed publish blocks [L*m, K, page, D],
+    layer-major, as :func:`_publish_blocks` expects."""
+    kb, vb = _scratch_blocks(kscr, vscr, rows, blks, page)
+    return (kb.reshape((-1,) + kb.shape[2:]),
+            vb.reshape((-1,) + vb.shape[2:]))
+
+
+@functools.partial(jax.jit, static_argnames=("page",), donate_argnums=(0, 1))
+def _write_tails(tail_k, tail_v, kscr, vscr, rows, slots, blks, *,
+                 page: int):
+    """Scatter each sequence's final partial page from the prefill scratch
+    (row ``rows[j]``) into its decode tail slot ``slots[j]`` in the
+    [L, S, K, page, D] tail buffers (donated)."""
+    kb, vb = _scratch_blocks(kscr, vscr, rows, blks, page)
+    return tail_k.at[:, slots].set(kb), tail_v.at[:, slots].set(vb)
+
+
 @jax.jit
 def _gather_tail_blocks(tk, tv, slots):
     """[L, S, K, page, D] tails -> [L*m, K, page, D] publish blocks."""
@@ -218,15 +310,21 @@ def _device_page_bytes(pg: ref.CompressedKVPages) -> jax.Array:
     return (side(pg.kd, pg.kb) + side(pg.vd, pg.vb)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids):
+@functools.partial(jax.jit, static_argnames=("use_fused",),
+                   donate_argnums=(0,))
+def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
+                    use_fused: bool = False):
     """Compress [n, K, page, D] KV blocks and scatter them into the pools.
 
     One dispatch publishes every filled page of every layer: the batched
     page-fill compression + donated in-place pool update.  Returns the
     updated pools and the device-computed per-page byte counts [n].
+    ``use_fused`` routes compression through the Pallas row codec
+    (``ops.compress_kv_pages``, bit-exact with the jnp oracle) where the
+    kernel compiles natively.
     """
-    pg = ref.compress_kv_pages(k_blocks, v_blocks)
+    compress = ops.compress_kv_pages if use_fused else ref.compress_kv_pages
+    pg = compress(k_blocks, v_blocks)
     nbytes = _device_page_bytes(pg)
     pools = ref.CompressedKVPages(
         kd=pools.kd.at[layer_idx, pids].set(pg.kd),
@@ -248,18 +346,25 @@ class PagedKVEngine:
 
     Batched device-resident hot path; see the module docstring.  The
     public surface matches the seed engine (``add_request`` /
-    ``decode_one`` / stats) plus :meth:`decode_batch`, the intended
-    entry point under load.
+    ``decode_one`` / stats) plus :meth:`add_requests` and
+    :meth:`decode_batch`, the intended entry points under load.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
                  n_pool_pages: int = 256, max_batch: int = 32,
-                 use_fused: bool | None = None):
+                 use_fused: bool | None = None,
+                 prefill_chunk: int | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         self.cfg = cfg
         self.params = params
         self.page = page_size
         self.max_batch = max_batch
+        # chunked-prefill step width (tokens per slot per dispatch); must
+        # stay page-aligned so every chunk completes whole pages
+        self.prefill_chunk = (2 * page_size if prefill_chunk is None
+                              else prefill_chunk)
+        assert self.prefill_chunk % page_size == 0, \
+            (self.prefill_chunk, page_size)
         # fused Pallas kernel where it compiles natively; jnp ref elsewhere
         self.use_fused = (not ops.default_interpret()
                           if use_fused is None else use_fused)
@@ -360,74 +465,132 @@ class PagedKVEngine:
         self._pt_dirty = True
 
     def add_request(self, sid: int, prompt: list[int]) -> None:
-        assert sid not in self.seqs, sid
-        assert self._free_slots, "engine at max_batch capacity"
+        self.add_requests({sid: prompt})
+
+    def add_requests(self, prompts: dict[int, list[int]]) -> None:
+        """Admit a batch of prompts and prefill them in one chunked pass.
+
+        This is the intended admission path under load: all prompts
+        advance together through the jitted chunked-batch prefill step
+        (continuous batching admits between ``decode_batch`` steps via
+        this entry point — slots stay compatible with in-flight decode).
+        """
+        # validate the whole batch before mutating any engine state, so a
+        # rejected admission leaves no half-admitted sequences behind
+        assert len(prompts) <= len(self._free_slots), \
+            "engine at max_batch capacity"
+        for sid, prompt in prompts.items():
+            assert sid not in self.seqs, sid
+            assert prompt, f"empty prompt for sid {sid}"
+        seqs = []
         lyr = self.cfg.n_layers
-        seq = Sequence(sid=sid, slot=self._free_slots.pop(),
-                       tokens=list(prompt),
-                       pages=[[] for _ in range(lyr)])
-        self.seqs[sid] = seq
-        self._prefill(seq)
+        for sid, prompt in prompts.items():
+            seq = Sequence(sid=sid, slot=self._free_slots.pop(),
+                           tokens=list(prompt),
+                           pages=[[] for _ in range(lyr)])
+            self.seqs[sid] = seq
+            seqs.append(seq)
+        if seqs:
+            self._prefill_batch(seqs)
 
-    def _prefill(self, seq: Sequence) -> None:
-        cfg = self.cfg
-        toks = jnp.asarray(seq.tokens, jnp.int32)[None]
-        s = len(seq.tokens)
-        x = L.embed(self.params["embed"], toks)
-        positions = jnp.arange(s, dtype=jnp.int32)
-        n_full = s // self.page
-        seq.tail_len = s - n_full * self.page
-        k_blocks, v_blocks = [], []                    # [L*n_full, K, pg, D]
-        tail_k = np.zeros(self.tail_k.shape[0:1] + self.tail_k.shape[2:],
-                          np.float32)                  # [L, K, page, D]
-        tail_v = np.zeros_like(tail_k)
-        for li in range(cfg.n_layers):
-            bp = jax.tree.map(lambda x: x[li], self.params["blocks"])
-            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
-            k = L.linear(bp["attn"]["wk"], h)
-            v = L.linear(bp["attn"]["wv"], h)
-            dh = k.shape[-1]
-            cos, sin = L.rope_angles(positions, dh, cfg.rope_theta)
-            k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
-            x = x + A.gqa_forward(bp["attn"], h, positions,
-                                  theta=cfg.rope_theta)
-            h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
-            x = x + L.mlp(bp["ffn"], h2)
+    def _prefill_batch(self, seqs: list[Sequence]) -> None:
+        """Chunked batched prefill straight into the compressed pool.
 
-            karr = np.asarray(k[0], np.float32)        # [S, K, Dh]
-            varr = np.asarray(v[0], np.float32)
-            for blk in range(n_full):
-                sl = slice(blk * self.page, (blk + 1) * self.page)
-                k_blocks.append(karr[sl].transpose(1, 0, 2))  # [K, pg, D]
-                v_blocks.append(varr[sl].transpose(1, 0, 2))
-            if seq.tail_len:
-                rest = karr[n_full * self.page:]
-                tail_k[li, :, :seq.tail_len] = rest.transpose(1, 0, 2)
-                tail_v[li, :, :seq.tail_len] = \
-                    varr[n_full * self.page:].transpose(1, 0, 2)
+        Host keeps only the chunk loop and CAMP bookkeeping; each chunk is
+        one jitted step over every admitted prompt and all layers, followed
+        by one batched page publish of the pages that chunk completed.
+        The exact-K/V scratch is sized to the longest prompt rounded up to
+        a power-of-two chunk count, so retraces stay logarithmic.
+        """
+        cfg, page, chunk = self.cfg, self.page, self.prefill_chunk
+        lyr, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        maxlen = max(len(s.tokens) for s in seqs)
+        n_chunks = -(-maxlen // chunk)
+        cap = 1
+        while cap < n_chunks:
+            cap *= 2
+        tmax = cap * chunk
+        # scratch rows cover only the admitted prompts (rounded up to a
+        # power of two, capped at max_batch, so retraces stay logarithmic)
+        # — admission cost scales with the batch actually admitted, not
+        # engine capacity; ``row`` maps each sequence to its scratch row,
+        # distinct from its decode slot
+        nrows = 1
+        while nrows < len(seqs):
+            nrows *= 2
+        nrows = min(nrows, self.max_batch)
+        row = {s.sid: r for r, s in enumerate(seqs)}
+        toks = np.zeros((nrows, tmax), np.int32)
+        for s in seqs:
+            toks[row[s.sid], :len(s.tokens)] = s.tokens
+        toks = jnp.asarray(toks)
+        kscr = jnp.zeros((lyr, nrows, tmax, kvh, dh), jnp.float32)
+        vscr = jnp.zeros_like(kscr)
 
-        self.tail_k = self.tail_k.at[:, seq.slot].set(jnp.asarray(tail_k))
-        self.tail_v = self.tail_v.at[:, seq.slot].set(jnp.asarray(tail_v))
-        if n_full:
-            # already layer-major ([L, n_full] blocks), as _publish expects
-            self._publish(jnp.asarray(np.stack(k_blocks)),
-                          jnp.asarray(np.stack(v_blocks)),
-                          [seq] * n_full)
+        for ci in range(n_chunks):
+            off = ci * chunk
+            kscr, vscr = _prefill_chunk(
+                self.params, toks[:, off:off + chunk], kscr, vscr,
+                jnp.asarray(off, jnp.int32), cfg=cfg)
+            # publish every page completed inside [off, off + chunk)
+            lo, hi = off // page, (off + chunk) // page
+            entries = [(s, blk) for s in seqs
+                       for blk in range(lo, min(hi, len(s.tokens) // page))]
+            if entries:
+                rows = jnp.asarray([row[s.sid] for s, _ in entries],
+                                   jnp.int32)
+                blks = jnp.asarray([b for _, b in entries], jnp.int32)
+                kb, vb = _gather_prefill_blocks(kscr, vscr, rows, blks,
+                                                page=page)
+                self._publish(kb, vb, [s for s, _ in entries])
+
+        # final partial pages -> decode tail buffers (exact f32, like the
+        # pool pages sourced from the same scratch)
+        tails = []
+        for s in seqs:
+            s.tail_len = 0 if s.preempted else len(s.tokens) % page
+            if s.tail_len:
+                tails.append((s, len(s.tokens) // page))
+        if tails:
+            rows = jnp.asarray([row[s.sid] for s, _ in tails], jnp.int32)
+            slots = jnp.asarray([s.slot for s, _ in tails], jnp.int32)
+            blks = jnp.asarray([b for _, b in tails], jnp.int32)
+            self.tail_k, self.tail_v = _write_tails(
+                self.tail_k, self.tail_v, kscr, vscr, rows, slots, blks,
+                page=page)
 
     def _publish(self, k_blocks, v_blocks, seqs: list[Sequence]) -> None:
         """Publish len(seqs) filled pages per layer in one dispatch.
 
         Blocks are layer-major: [L * len(seqs), K, page, D] with the
         sequence order of ``seqs`` repeating inside each layer group.
+        A sequence may appear several times (one entry per page).
+
+        CAMP quirk fix (shared with the reference): pages owned by a
+        sequence that is already preempted — or that becomes the victim
+        of this very reservation — are not attached; they go straight
+        back to the free list instead of leaking until ``release``.
         """
-        lyr, m = self.cfg.n_layers, len(seqs)
+        lyr, m_all = self.cfg.n_layers, len(seqs)
+        keep = [j for j, s in enumerate(seqs) if not s.preempted]
+        if not keep:
+            return
+        if len(keep) != m_all:
+            sel = jnp.asarray([li * m_all + j
+                               for li in range(lyr) for j in keep])
+            k_blocks, v_blocks = k_blocks[sel], v_blocks[sel]
+            seqs = [seqs[j] for j in keep]
+        m = len(seqs)
         pids = self._reserve_pages(lyr * m)
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
         self.pools, nbytes = _publish_blocks(
             self.pools, k_blocks, v_blocks, layer_idx,
-            jnp.asarray(pids, jnp.int32))
+            jnp.asarray(pids, jnp.int32), use_fused=self.use_fused)
         nbytes = np.asarray(nbytes)                    # 1 sync per publish
         for j, seq in enumerate(seqs):
+            if seq.preempted:      # victim of our own reservation
+                self.free.extend(pids[j::m])
+                continue
             self._record_publish(seq, pids[j::m], nbytes[j::m])
 
     # -- decode ------------------------------------------------------------------

@@ -109,8 +109,19 @@ class ReferencePagedKVEngine:
 
     def _publish_page(self, seq: Sequence, li: int,
                       k_blk: np.ndarray, v_blk: np.ndarray) -> None:
-        """Compress one full [page, K, Dh] block into the pool."""
+        """Compress one full [page, K, Dh] block into the pool.
+
+        CAMP quirk fix (shared with the batched engine): a preempted
+        sequence's publishes are dropped — including the in-flight
+        publish whose own allocation picked it as the victim — instead
+        of re-attaching fresh pages that would leak until ``release``.
+        """
+        if seq.preempted:
+            return
         pid = self._alloc_page()
+        if seq.preempted:          # victim of its own allocation just now
+            self.free.append(pid)
+            return
         kk = jnp.swapaxes(jnp.asarray(k_blk)[None], 1, 2)   # [1, K, page, Dh]
         vv = jnp.swapaxes(jnp.asarray(v_blk)[None], 1, 2)
         pg = ref.compress_kv_pages(kk, vv)
@@ -129,6 +140,12 @@ class ReferencePagedKVEngine:
         self.stats["bytes_compressed"] += nbytes
 
     # -- request lifecycle -----------------------------------------------------
+
+    def add_requests(self, prompts: dict[int, list[int]]) -> None:
+        """API parity with the batched engine: sequential admission (the
+        oracle semantics — one prompt prefilled at a time)."""
+        for sid, prompt in prompts.items():
+            self.add_request(sid, prompt)
 
     def add_request(self, sid: int, prompt: list[int]) -> None:
         cfg = self.cfg
@@ -154,13 +171,10 @@ class ReferencePagedKVEngine:
         for li in range(cfg.n_layers):
             bp = self._block_params(li)
             h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
-            k = L.linear(bp["attn"]["wk"], h)
-            v = L.linear(bp["attn"]["wv"], h)
-            dh = k.shape[-1]
-            cos, sin = L.rope_angles(positions, dh, cfg.rope_theta)
-            k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+            # one K/V projection per layer, shared with the page-fill path
+            k, v = A.gqa_kv(bp["attn"], h, positions, theta=cfg.rope_theta)
             x = x + A.gqa_forward(bp["attn"], h, positions,
-                                  theta=cfg.rope_theta)
+                                  theta=cfg.rope_theta, kv=(k, v))
             h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
             x = x + L.mlp(bp["ffn"], h2)
 

@@ -61,6 +61,22 @@ def test_decompress_kernel_matches_ref(n, t):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("pool,kvh,page,d", [(5, 2, 8, 64), (12, 4, 16, 32),
+                                             (3, 1, 8, 128)])
+def test_compress_kv_pages_kernel_matches_ref(pool, kvh, page, d):
+    """Pallas single-base KV row codec == jnp page-fill oracle, bit-exact."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(pool * d))
+    k = jax.random.normal(k1, (pool, kvh, page, d), jnp.float32) * 2.0
+    v = jax.random.normal(k2, (pool, kvh, page, d), jnp.float32) * 2.0
+    # include degenerate rows: all-zero and constant (maxres == 0)
+    k = k.at[0, 0, 0].set(0.0)
+    v = v.at[0, 0, 1].set(3.25)
+    got = ops.compress_kv_pages(k, v)
+    want = ref.compress_kv_pages(k, v)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_kernel_roundtrip_error_bound():
     x = jax.random.normal(jax.random.PRNGKey(3), (64, 128)) * 10
     p = ops.compress(x)

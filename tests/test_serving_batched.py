@@ -137,6 +137,121 @@ def test_release_recycles_slot_and_pages(small_model):
     assert set(out) == {1, 2}
 
 
+def test_chunked_prefill_batched_admission_matches_reference(small_model):
+    """One chunked-batch prefill pass == sequential oracle prefill.
+
+    Ragged prompts around the chunk grid (chunk = 2 * PAGE = 16): shorter
+    than a page, page-aligned, spanning a chunk boundary (19), and
+    multi-chunk (34).  Greedy decode must stay token-for-token identical
+    afterwards and CAMP accounting must match exactly.
+    """
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=96)
+    prompts = {0: [5, 9, 2, 7, 11, 3], 1: list(range(1, 20)),
+               2: [4, 4, 8, 1], 3: [1 + (j * 3) % 50 for j in range(34)]}
+    re_.add_requests(prompts)
+    be.add_requests(prompts)
+    for sid in prompts:
+        assert re_.seqs[sid].tail_len == be.seqs[sid].tail_len, sid
+    assert re_.stats == be.stats        # prefill-side page accounting
+    for step in range(12):
+        out = be.decode_batch()
+        for sid in prompts:
+            assert re_.decode_one(sid) == out[sid], (step, sid)
+    assert re_.stats == be.stats
+    assert re_.pool_used_pages() == be.pool_used_pages()
+
+
+def test_prefill_camp_preemption_mid_prefill(small_model):
+    """A prompt whose prefill exhausts the pool evicts the done victim.
+
+    Seq 0 (done, CAMP value -1) holds 10 pages; seq 1's prefill demands 10
+    more from a 14-page pool, forcing one deterministic preemption midway
+    through prefill in both engines.  Page counts, byte accounting and
+    subsequent greedy decode must match.
+    """
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=15)
+    long_a = [2 + (j * 7) % 40 for j in range(40)]    # 5 pages x 2 layers
+    long_b = [3 + (j * 5) % 40 for j in range(40)]
+    for eng in (re_, be):
+        eng.add_request(0, long_a)
+        eng.seqs[0].done = True
+        eng.add_request(1, long_b)
+        assert eng.seqs[0].preempted, "prefill never forced the preemption"
+        assert not eng.seqs[1].preempted
+    assert re_.stats == be.stats
+    assert re_.stats["preemptions"] == 1
+    assert re_.stats["pages_evicted"] == 10
+    for step in range(6):
+        out = be.decode_batch([1])
+        assert re_.decode_one(1) == out[1], step
+
+
+def test_self_preemption_publish_drops_pages(small_model):
+    """CAMP quirk fix: a sequence preempted during its own page publish
+    no longer keeps fresh pages attached.
+
+    A lone 72-token prompt needs 18 pages from an 8-page pool, so CAMP's
+    only candidate victim mid-prefill is the prefilling sequence itself.
+    Both engines must end preempted with zero attached pages and an empty
+    pool — pre-fix, post-preemption publishes kept attaching pages that
+    leaked until release().
+    """
+    cfg, params = small_model
+    re_, be = _pair(cfg, params, n_pool_pages=9)
+    prompt = [1 + (j * 11) % 60 for j in range(72)]
+    for eng in (re_, be):
+        eng.add_request(0, prompt)
+        seq = eng.seqs[0]
+        assert seq.preempted
+        assert all(not lp for lp in seq.pages), "fresh pages leaked"
+        assert seq.tail_len == 0
+        assert eng.pool_used_pages() == 0
+        assert eng.stats["preemptions"] == 1
+    for key in ("preemptions", "pages_evicted", "pages_compressed"):
+        assert re_.stats[key] == be.stats[key], key
+
+
+def test_fused_kernel_engine_matches_fallback(small_model):
+    """use_fused=True (Pallas paged-attention + page-fill codec, interpret
+    mode on CPU) decodes the same greedy tokens as the jnp fallback."""
+    cfg, params = small_model
+    base = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=64,
+                         max_batch=4, use_fused=False)
+    fused = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=64,
+                          max_batch=4, use_fused=True)
+    prompts = {0: [5, 9, 2, 7, 11, 3], 1: list(range(1, 14))}
+    base.add_requests(prompts)
+    fused.add_requests(prompts)
+    assert base.stats == fused.stats   # codec kernel is bit-exact with ref
+    for step in range(4):
+        assert base.decode_batch() == fused.decode_batch(), step
+
+
+def test_gqa_forward_external_kv_projects_once(monkeypatch):
+    """gqa_forward(kv=...) must not re-project K/V — the serving engines
+    rely on this to hit each projection exactly once per layer."""
+    from repro.models import attention as A
+    from repro.models import layers as Lmod
+
+    key = jax.random.PRNGKey(0)
+    p = A.init_gqa(key, 32, 4, 2, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32), jnp.bfloat16)
+    pos = jnp.arange(6, dtype=jnp.int32)
+
+    kv = A.gqa_kv(p, x, pos)
+    want = A.gqa_forward(p, x, pos)
+
+    calls = []
+    real = Lmod.linear
+    monkeypatch.setattr(Lmod, "linear",
+                        lambda pp, xx: calls.append(1) or real(pp, xx))
+    got = A.gqa_forward(p, x, pos, kv=kv)
+    assert len(calls) == 1             # wq only; wk/wv came from kv
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_paged_attention_tail_matches_ref():
     """Tail-fused kernel == dense dequant oracle, incl. zero-page seqs."""
     key = jax.random.PRNGKey(7)
