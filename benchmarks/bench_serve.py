@@ -12,9 +12,17 @@ Each engine is warmed on a throwaway instance first so the timed numbers
 measure steady-state throughput, not jit tracing (the jit cache is
 global, so the timed instance reuses the warm traces).
 
+Also runs the **open-loop scheduler benchmark**: requests arrive at a
+fixed rate (gap scaled to measured iteration time so "same load" holds
+on any runner) into the continuous-batching token-budget scheduler vs a
+static-batch baseline that drains each batch before admitting the next.
+Reports per-request TTFT / latency percentiles and goodput (completed
+tok/s); ``goodput_vs_static`` is the headline continuous-batching win.
+
 Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick | --smoke]
-CI:  the ``bench-smoke`` job runs ``--smoke`` and gates the batched rows
-against ``benchmarks/baselines/serve_ci.json`` (check_serve_regression).
+CI:  the ``bench-smoke`` job runs ``--smoke`` and gates the batched +
+scheduler rows against ``benchmarks/baselines/serve_ci.json``
+(check_serve_regression).
 """
 
 from __future__ import annotations
@@ -39,6 +47,14 @@ _MODES = {
     "quick": ((1, 8), 8, 4),
     "smoke": ((1, 8), 6, 3),
 }
+
+# open-loop scheduler benchmark: (n_requests, engine slots)
+_SCHED_MODES = {
+    "full": (12, 4),
+    "quick": (8, 3),
+    "smoke": (8, 3),
+}
+SCHED_BUDGET = 24
 
 
 def _build(cfg, params, engine: str, batch: int, pool: int):
@@ -100,6 +116,188 @@ def _bench_engine(cfg, params, engine: str, batch: int,
     }
 
 
+def _sched_workload(cfg, n_req: int) -> list[dict]:
+    """Deterministic convoy-prone open-loop workload: ragged prompts and
+    bimodal generation lengths (one long straggler per slot-group), the
+    shape under which static batching pays its convoy tax.  Prompt
+    lengths stay <= prefill_chunk so every cohort lands in one scratch
+    length bucket — cohort row count is then the only jit-shape degree
+    of freedom, and :func:`_warm_sched_shapes` can cover it exactly."""
+    return [{"rid": i,
+             "prompt": [1 + (i * 7 + j) % (cfg.vocab - 1)
+                        for j in range(8 + (i * 5) % 9)],
+             "max_new": 12 if i % 3 == 0 else 3}
+            for i in range(n_req)]
+
+
+def _warm_sched_shapes(cfg, params, slots: int, pool: int) -> None:
+    """Trace every dispatch shape the open-loop runs can hit, so the
+    timed runs measure steady state rather than jit compilation.
+
+    Arrival timing decides how requests group into cohorts, so the timed
+    run's cohort sizes are not predictable — warm them all: mixed
+    (decode + k-row cohort) for every k possible while a slot decodes,
+    and prefill-only admission for every k up to the slot count."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.scheduler import ContinuousScheduler
+
+    for k in range(1, slots + 1):
+        if k < slots:                 # mixed: one slot kept decoding
+            eng = PagedKVEngine(cfg, params, page_size=PAGE,
+                                n_pool_pages=pool, max_batch=slots)
+            sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
+            sched.submit(-1, [1, 2, 3], max_new_tokens=40)
+            while sched.tracks[-1].state != "running":
+                sched.step()
+            for i in range(k):
+                sched.submit(i, [1 + i] * 16, max_new_tokens=2)
+            sched.run()
+        eng = PagedKVEngine(cfg, params, page_size=PAGE,
+                            n_pool_pages=pool, max_batch=slots)
+        eng.add_requests({i: [1 + i] * 16 for i in range(k)})
+        eng.decode_batch()
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    ys = sorted(xs)
+    i = min(len(ys) - 1, int(round(q * (len(ys) - 1))))
+    return ys[i]
+
+
+def _req_metrics(t0: float, arrivals: list[float], firsts: list[float],
+                 finishes: list[float], n_tokens: int) -> dict:
+    ttft = [f - a for f, a in zip(firsts, arrivals)]
+    lat = [f - a for f, a in zip(finishes, arrivals)]
+    span = max(finishes) - t0
+    return {
+        "goodput_tok_s": round(n_tokens / span, 1),
+        "ttft_s_mean": round(sum(ttft) / len(ttft), 4),
+        "ttft_s_p95": round(_percentile(ttft, 0.95), 4),
+        "latency_s_p50": round(_percentile(lat, 0.50), 4),
+        "latency_s_p95": round(_percentile(lat, 0.95), 4),
+    }
+
+
+def _run_continuous(cfg, params, reqs, gap: float, slots: int,
+                    pool: int) -> dict:
+    """Open-loop drive of the continuous scheduler: request i arrives at
+    ``i * gap`` seconds; admit/retire between iterations."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.scheduler import ContinuousScheduler
+
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                        max_batch=slots)
+    sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
+    t0 = time.time()
+    arrivals = {r["rid"]: t0 + r["rid"] * gap for r in reqs}
+    pending = {r["rid"]: r for r in reqs}
+    while pending or not sched.idle:
+        now = time.time()
+        for rid, r in list(pending.items()):
+            if arrivals[rid] <= now:
+                sched.submit(rid, r["prompt"], max_new_tokens=r["max_new"])
+                del pending[rid]
+        if sched.idle and pending:
+            time.sleep(max(0.0, min(arrivals[r] for r in pending)
+                           - time.time()))
+            continue
+        sched.step()
+    fin = sched.finished()
+    order = [r["rid"] for r in reqs]
+    m = _req_metrics(
+        t0, [arrivals[r] for r in order],
+        [fin[r].first_token_t for r in order],
+        [fin[r].finished_t for r in order],
+        sum(len(fin[r].out_tokens) for r in order))
+    m["mixed_iterations"] = sched.stats["mixed_iterations"]
+    m["iterations"] = sched.stats["iterations"]
+    return m
+
+
+def _run_static(cfg, params, reqs, gap: float, slots: int,
+                pool: int) -> dict:
+    """Static-batch baseline at the same arrival rate: form a batch from
+    whatever has arrived (up to ``slots``), prefill it, decode until the
+    *whole batch* drains, release, repeat — the phase-wise convoy the
+    scheduler exists to kill."""
+    from repro.serving.engine import PagedKVEngine
+
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                        max_batch=slots)
+    t0 = time.time()
+    arrivals = {r["rid"]: t0 + r["rid"] * gap for r in reqs}
+    queue = list(reqs)
+    firsts: dict[int, float] = {}
+    finishes: dict[int, float] = {}
+    n_tokens = 0
+    while queue:
+        now = time.time()
+        arrived = [r for r in queue if arrivals[r["rid"]] <= now]
+        if not arrived:
+            time.sleep(max(0.0, min(arrivals[r["rid"]] for r in queue)
+                           - time.time()))
+            continue
+        batch = arrived[:slots]
+        queue = [r for r in queue if r not in batch]
+        eng.add_requests({r["rid"]: r["prompt"] for r in batch})
+        remaining = {r["rid"]: r["max_new"] for r in batch}
+        produced = {r["rid"]: 0 for r in batch}
+        while remaining:
+            out = eng.decode_batch(list(remaining))
+            now = time.time()
+            for rid in out:
+                produced[rid] += 1
+                n_tokens += 1
+                firsts.setdefault(rid, now)
+            for rid in list(remaining):
+                if produced[rid] >= remaining[rid]:
+                    finishes[rid] = now
+                    del remaining[rid]
+        for r in batch:
+            eng.release(r["rid"])
+    order = [r["rid"] for r in reqs]
+    return _req_metrics(t0, [arrivals[r] for r in order],
+                        [firsts[r] for r in order],
+                        [finishes[r] for r in order], n_tokens)
+
+
+def _bench_scheduler(cfg, params, mode: str) -> list[dict]:
+    """Open-loop arrival benchmark: continuous scheduler vs static batch
+    at the same arrival rate."""
+    n_req, slots = _SCHED_MODES[mode]
+    pool = 256
+    reqs = _sched_workload(cfg, n_req)
+
+    # warm every cohort/dispatch shape on throwaway instances (jit cache
+    # is global), then both full paths for the publish-size variants
+    _warm_sched_shapes(cfg, params, slots, pool)
+    _run_continuous(cfg, params, reqs, 0.0, slots, pool)
+    _run_static(cfg, params, reqs, 0.0, slots, pool)
+
+    # arrival gap scaled to measured iteration time so "same arrival
+    # rate" means the same *relative* load on any runner speed
+    t0 = time.time()
+    _run_continuous(cfg, params, reqs, 0.0, slots, pool)
+    iter_s = (time.time() - t0) / max(1, n_req)
+    gap = iter_s * 0.5
+
+    cont = _run_continuous(cfg, params, reqs, gap, slots, pool)
+    stat = _run_static(cfg, params, reqs, gap, slots, pool)
+    cont.update({
+        "bench": "serve_sched", "engine": "scheduler", "batch": slots,
+        "n_requests": n_req, "token_budget": SCHED_BUDGET,
+        "goodput_vs_static": round(cont["goodput_tok_s"]
+                                   / stat["goodput_tok_s"], 2),
+        # tail TTFT is where the convoy effect lives; mean TTFT can favor
+        # static (its first batch prefills at full width, un-budgeted)
+        "ttft_p95_vs_static": round(stat["ttft_s_p95"]
+                                    / max(cont["ttft_s_p95"], 1e-9), 2),
+    })
+    stat.update({"bench": "serve_sched", "engine": "static",
+                 "batch": slots, "n_requests": n_req})
+    return [cont, stat]
+
+
 def rows(mode: str = "full") -> list[dict]:
     import jax
 
@@ -121,6 +319,7 @@ def rows(mode: str = "full") -> list[dict]:
         batched["prefill_speedup_vs_reference"] = round(
             batched["prefill_tok_s"] / refr["prefill_tok_s"], 2)
         out.extend([batched, refr])
+    out.extend(_bench_scheduler(cfg, params, mode))
     return out
 
 

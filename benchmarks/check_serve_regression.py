@@ -1,11 +1,18 @@
 """CI guard: fail when serving throughput regresses vs a committed baseline.
 
-Compares the ``engine="batched"`` rows of a fresh ``bench_serve`` JSON
-against ``benchmarks/baselines/serve_ci.json``, matching rows on batch
-size: both ``decode_tok_s`` and ``prefill_tok_s`` must be at least
-``(1 - max_drop)`` times the baseline value, otherwise exit 1 with a
-per-metric report.  This is what keeps wins like the 21x batched decode
-(PR #1) and the chunked-prefill speedup (PR #2) from silently rotting.
+Compares the ``engine="batched"`` and ``engine="scheduler"`` rows of a
+fresh ``bench_serve`` JSON against
+``benchmarks/baselines/serve_ci.json``, matching rows on (engine, batch):
+every throughput metric the baseline row carries (``decode_tok_s`` /
+``prefill_tok_s`` for the batched engine, ``goodput_tok_s`` for the
+scheduler) must be at least ``(1 - max_drop)`` times the baseline value.
+The scheduler row additionally carries a *structural* gate independent
+of runner speed: ``goodput_vs_static`` (continuous batching vs the
+static-batch baseline at the same arrival rate) must stay >=
+``--min-goodput-ratio``.  Exit 1 with a per-metric report otherwise.
+This is what keeps wins like the 21x batched decode (PR #1), the
+chunked-prefill speedup (PR #2), and the continuous-batching goodput win
+(PR #3) from silently rotting.
 
 Baseline values are deliberately *derated* (stored well below locally
 measured throughput) so that CI-runner speed variance does not false-fail
@@ -27,41 +34,57 @@ import sys
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "serve_ci.json")
-METRICS = ("decode_tok_s", "prefill_tok_s")
+# throughput floors gated per engine kind (values scaled by the derate)
+METRICS = {"batched": ("decode_tok_s", "prefill_tok_s"),
+           "scheduler": ("goodput_tok_s",)}
 
 
-def _batched_rows(payload: dict) -> dict[int, dict]:
-    return {r["batch"]: r for r in payload["rows"]
-            if r.get("engine") == "batched"}
+def _gated_rows(payload: dict) -> dict[tuple[str, int], dict]:
+    return {(r["engine"], r["batch"]): r for r in payload["rows"]
+            if r.get("engine") in METRICS}
 
 
-def check(current: dict, baseline: dict, max_drop: float) -> list[str]:
+def check(current: dict, baseline: dict, max_drop: float,
+          min_goodput_ratio: float) -> list[str]:
     """Return a list of failure messages (empty == pass)."""
-    cur, base = _batched_rows(current), _batched_rows(baseline)
+    cur, base = _gated_rows(current), _gated_rows(baseline)
     failures = []
-    for batch, brow in sorted(base.items()):
-        crow = cur.get(batch)
+    for key, brow in sorted(base.items()):
+        engine, batch = key
+        crow = cur.get(key)
         if crow is None:
-            failures.append(f"batch {batch}: missing from current results")
+            failures.append(f"{engine} batch {batch}: missing from "
+                            "current results")
             continue
-        for metric in METRICS:
+        for metric in METRICS[engine]:
             floor = brow[metric] * (1.0 - max_drop)
             got = crow.get(metric, 0.0)
             if got < floor:
                 failures.append(
-                    f"batch {batch} {metric}: {got:.1f} tok/s < floor "
-                    f"{floor:.1f} (baseline {brow[metric]:.1f}, "
+                    f"{engine} batch {batch} {metric}: {got:.1f} tok/s < "
+                    f"floor {floor:.1f} (baseline {brow[metric]:.1f}, "
                     f"max drop {max_drop:.0%})")
+    # structural gate, runner-speed independent: continuous batching must
+    # out-goodput the static-batch baseline at the same arrival rate
+    for key, crow in sorted(cur.items()):
+        if key[0] != "scheduler":
+            continue
+        ratio = crow.get("goodput_vs_static", 0.0)
+        if ratio < min_goodput_ratio:
+            failures.append(
+                f"scheduler batch {key[1]} goodput_vs_static: {ratio:.2f} "
+                f"< required {min_goodput_ratio:.2f}")
     return failures
 
 
 def update_baseline(current: dict, path: str, derate: float) -> None:
     rows = []
     for r in current["rows"]:
-        if r.get("engine") != "batched":
+        engine = r.get("engine")
+        if engine not in METRICS:
             continue
-        row = {"engine": "batched", "batch": r["batch"]}
-        for metric in METRICS:
+        row = {"engine": engine, "batch": r["batch"]}
+        for metric in METRICS[engine]:
             row[metric] = round(r[metric] * derate, 1)
         rows.append(row)
     payload = {
@@ -89,6 +112,9 @@ def main() -> int:
     ap.add_argument("baseline", nargs="?", default=BASELINE)
     ap.add_argument("--max-drop", type=float, default=0.30,
                     help="max allowed fractional drop vs baseline")
+    ap.add_argument("--min-goodput-ratio", type=float, default=1.0,
+                    help="required scheduler goodput_vs_static ratio "
+                         "(structural continuous-batching win)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current results")
     ap.add_argument("--derate", type=float, default=0.10,
@@ -105,18 +131,24 @@ def main() -> int:
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    failures = check(current, baseline, args.max_drop)
+    failures = check(current, baseline, args.max_drop,
+                     args.min_goodput_ratio)
     if failures:
         print("serving throughput regression detected:")
         for msg in failures:
             print(f"  FAIL {msg}")
         return 1
-    for batch, brow in sorted(_batched_rows(baseline).items()):
-        crow = _batched_rows(current)[batch]
-        print(f"  ok batch {batch}: "
+    cur = _gated_rows(current)
+    for (engine, batch), brow in sorted(_gated_rows(baseline).items()):
+        crow = cur[(engine, batch)]
+        extra = ""
+        if engine == "scheduler":
+            extra = (f", goodput_vs_static={crow['goodput_vs_static']:.2f}"
+                     f" (>= {args.min_goodput_ratio:.2f})")
+        print(f"  ok {engine} batch {batch}: "
               + ", ".join(f"{m}={crow[m]:.1f} "
                           f"(floor {brow[m] * (1 - args.max_drop):.1f})"
-                          for m in METRICS))
+                          for m in METRICS[engine]) + extra)
     return 0
 
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bdi_value as bv
+from repro.distributed.axes import shard_map
 
 TILE = 128
 
@@ -153,8 +154,7 @@ def make_dp_train_step(loss_fn, update_fn, mesh, *, plan: dict | None = None,
 
     rep = P()
     dp0 = P("data")
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(rep, rep, dp0, dp0),
-        out_specs=(rep, rep, dp0, rep),
-        check_vma=False))
+        out_specs=(rep, rep, dp0, rep)))

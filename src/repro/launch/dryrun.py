@@ -519,6 +519,8 @@ def run(arch: str, shape: str, multi_pod: bool, out: str | None = None,
     print("=== memory_analysis ===")
     print(mem)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # older jax: one dict per program
+        cost = cost[0] if cost else {}
     print("=== cost_analysis (flops/bytes) ===")
     print({k: v for k, v in cost.items()
            if k in ("flops", "bytes accessed", "transcendentals")})

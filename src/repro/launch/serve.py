@@ -1,5 +1,6 @@
-"""Serving driver: batched greedy generation through the model API, or the
-LCP-paged compressed-KV engine (--paged).
+"""Serving driver: batched greedy generation through the model API, the
+LCP-paged compressed-KV engine (--paged), or the continuous-batching
+scheduler loop (--scheduler).
 
 The paged path runs the batched device-resident hot path end to end:
 admission goes through ``PagedKVEngine.add_requests`` (one chunked-batch
@@ -8,9 +9,16 @@ and decode through ``decode_batch`` (one jitted step per token for the
 whole batch); ``--paged-reference`` selects the seed host-looped engine
 instead, for A/B timing.
 
+``--scheduler`` drives the token-budget continuous-batching loop
+(``serving/scheduler.py``): requests are submitted with staggered
+arrivals (``--arrival-stagger`` iterations apart), admitted/retired
+between iterations, and prefill chunks piggyback on decode steps under
+``--token-budget``; the report adds per-request TTFT and latency in
+scheduler iterations.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-      --prompt-len 16 --gen 16 [--paged | --paged-reference]
+      --prompt-len 16 --gen 16 [--paged | --paged-reference | --scheduler]
 """
 
 from __future__ import annotations
@@ -28,7 +36,9 @@ from repro.models.api import get_model
 def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              prompt_len: int = 16, gen: int = 16,
              paged: bool = False, paged_reference: bool = False,
-             prefill_chunk: int | None = None) -> dict:
+             prefill_chunk: int | None = None,
+             scheduler: bool = False, token_budget: int = 64,
+             arrival_stagger: int = 2) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -37,6 +47,35 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
     key = jax.random.PRNGKey(1)
     prompts = jax.random.randint(key, (batch, prompt_len), 1, cfg.vocab,
                                  jnp.int32)
+
+    if scheduler:
+        from repro.serving.engine import PagedKVEngine
+        from repro.serving.scheduler import ContinuousScheduler
+        eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
+                            max_batch=batch, prefill_chunk=prefill_chunk)
+        sched = ContinuousScheduler(eng, token_budget=token_budget)
+        arrivals = {b: b * arrival_stagger for b in range(batch)}
+        t0 = time.time()
+        pending = dict(arrivals)
+        while pending or not sched.idle:
+            for rid, at in list(pending.items()):
+                if at <= sched.iteration:
+                    sched.submit(rid, [int(t) for t in prompts[rid]],
+                                 max_new_tokens=gen)
+                    del pending[rid]
+            sched.step()
+        dt = time.time() - t0
+        fin = sched.finished()
+        outs = [fin[b].out_tokens for b in range(batch)]
+        report = {b: {"ttft_iters": fin[b].first_token_iter
+                      - arrivals[b],
+                      "latency_iters": fin[b].finished_iter - arrivals[b],
+                      "reason": fin[b].finish_reason}
+                  for b in range(batch)}
+        return {"tokens": outs, "kv_compression_ratio":
+                eng.compression_ratio(), "stats": eng.stats,
+                "sched_stats": sched.stats, "per_request": report,
+                "tok_per_s": sum(len(o) for o in outs) / dt}
 
     if paged or paged_reference:
         reqs = {b: [int(t) for t in prompts[b]] for b in range(batch)}
@@ -93,16 +132,30 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill step width in tokens "
                          "(page-aligned; default 2x page size)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="continuous-batching token-budget loop")
+    ap.add_argument("--token-budget", type=int, default=64,
+                    help="per-iteration token budget (scheduler mode)")
+    ap.add_argument("--arrival-stagger", type=int, default=2,
+                    help="iterations between request arrivals "
+                         "(scheduler mode)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
                    paged_reference=args.paged_reference,
-                   prefill_chunk=args.prefill_chunk)
+                   prefill_chunk=args.prefill_chunk,
+                   scheduler=args.scheduler, token_budget=args.token_budget,
+                   arrival_stagger=args.arrival_stagger)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
         print(f"[serve] KV compression ratio: "
               f"{out['kv_compression_ratio']:.2f}x; stats: {out['stats']}")
+    if "sched_stats" in out:
+        print(f"[serve] scheduler: {out['sched_stats']}")
+        for rid, r in out["per_request"].items():
+            print(f"[serve]   req {rid}: ttft {r['ttft_iters']} iters, "
+                  f"latency {r['latency_iters']} iters ({r['reason']})")
 
 
 if __name__ == "__main__":

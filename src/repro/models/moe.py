@@ -128,12 +128,11 @@ def moe_ffn(p: dict, x: jax.Array, *, top_k: int, n_experts: int,
 
         expert_specs = jax.tree.map(lambda _: P("model"), p["experts"])
         router_specs = jax.tree.map(lambda _: P(), p["router"])
-        out = jax.shard_map(
+        out = AX.shard_map(
             kernel, mesh=mesh,
             in_specs=(router_specs, expert_specs, P(dp if len(dp) > 1
                                                     else dp[0], None)),
             out_specs=P(dp if len(dp) > 1 else dp[0], None),
-            check_vma=False,
         )(p["router"], p["experts"], x2d)
         y = out.reshape(b, s, d).astype(x.dtype)
 

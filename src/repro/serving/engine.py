@@ -99,6 +99,29 @@ class Sequence:
     tail_len: int = 0
     done: bool = False
     preempted: bool = False
+    prefilling: bool = False             # in-flight admission cohort member
+
+
+@dataclass
+class _Cohort:
+    """In-flight chunked-prefill admission cohort.
+
+    All members share one chunk grid: every dispatch advances the cohort
+    offset by up to ``prefill_chunk`` tokens (less when the scheduler's
+    token budget splits a chunk).  ``toks`` is the host-side zero-padded
+    prompt buffer; ``kscr/vscr`` the device-resident exact f32 K/V
+    scratch; ``pub[i]`` counts pages already published for ``seqs[i]``;
+    ``done_sids`` tracks members whose prefill completed (tail written).
+    """
+    seqs: list[Sequence]
+    row: dict[int, int]                  # sid -> scratch row
+    toks: np.ndarray                     # [nrows, tmax] i32, host
+    kscr: jax.Array                      # [L, nrows, tmax, K, D] f32
+    vscr: jax.Array
+    maxlen: int                          # longest prompt in the cohort
+    off: int = 0                         # tokens prefilled so far (grid pos)
+    pub: list[int] | None = None
+    done_sids: set[int] | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -137,19 +160,18 @@ def _attend_ref(q, kd, kb, ks, vd, vb, vs, pt, page_len, tk, tv, tail_len):
     return jnp.einsum("skgt,sktd->skgd", w, vg)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "use_fused"),
-                   donate_argnums=(2, 3))
-def _decode_step(params, pools, tk, tv, page_table, page_cnt,
+def _decode_core(params, pools, tk, tv, page_table, page_cnt,
                  last_tok, pos, tail_len, active, *, cfg: ArchConfig,
                  use_fused: bool):
     """One greedy decode step for every active sequence, all layers.
 
     pools: CompressedKVPages with leading layer dim ([L, P, K, page, D]...).
-    tk/tv f32 [L, S, K, page, D] (donated; returned updated).
-    page_table i32 [L, S, PMAX]; page_cnt/last_tok/pos/tail_len i32 [S];
-    active bool [S].
-    Returns (next_tok [S], tk', tv').
+    tk/tv f32 [L, S, K, page, D] (donated by the jit wrappers; returned
+    updated).  page_table i32 [L, S, PMAX]; page_cnt/last_tok/pos/tail_len
+    i32 [S]; active bool [S].  Returns (next_tok [S], tk', tv').
+
+    Shared trace body: dispatched standalone via :func:`_decode_step` or
+    fused with a prefill chunk via :func:`_mixed_step`.
     """
     s = last_tok.shape[0]
     kvh, dh = cfg.n_kv_heads, cfg.head_dim
@@ -202,8 +224,19 @@ def _decode_step(params, pools, tk, tv, page_table, page_cnt,
     return jnp.where(active, nxt, last_tok), tk, tv
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
-def _prefill_chunk(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "use_fused"),
+                   donate_argnums=(2, 3))
+def _decode_step(params, pools, tk, tv, page_table, page_cnt,
+                 last_tok, pos, tail_len, active, *, cfg: ArchConfig,
+                 use_fused: bool):
+    """Decode-only dispatch (no prefill chunk riding along)."""
+    return _decode_core(params, pools, tk, tv, page_table, page_cnt,
+                        last_tok, pos, tail_len, active, cfg=cfg,
+                        use_fused=use_fused)
+
+
+def _prefill_core(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
     """One chunked-batch prefill step: C prompt tokens per slot, all layers.
 
     tokens i32 [R, C] (one scratch row per admitted prompt, zero-padded);
@@ -247,6 +280,35 @@ def _prefill_chunk(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
     _, (kscr, vscr) = jax.lax.scan(
         body, x, (params["blocks"], kscr, vscr))
     return kscr, vscr
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
+def _prefill_chunk(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
+    """Prefill-only dispatch (no decode step riding along)."""
+    return _prefill_core(params, tokens, kscr, vscr, off, cfg=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_fused"),
+                   donate_argnums=(2, 3, 4, 5))
+def _mixed_step(params, pools, tk, tv, kscr, vscr, page_table, page_cnt,
+                last_tok, pos, tail_len, active, ptoks, off, *,
+                cfg: ArchConfig, use_fused: bool):
+    """Sarathi-style mixed iteration: one decode step for every active
+    batch slot **plus** one prefill chunk for the in-flight admission
+    cohort, in a single jitted dispatch.
+
+    The two halves are data-independent (decode reads the pools/tails,
+    prefill writes only its own scratch), so XLA schedules them as one
+    fused computation — the prefill chunk piggybacks on the decode
+    iteration instead of stalling it.  All shapes are static given
+    (max_batch, PMAX, cohort scratch size, prefill_chunk), so admitting
+    and retiring requests between steps never retraces.
+    """
+    nxt, tk, tv = _decode_core(params, pools, tk, tv, page_table, page_cnt,
+                               last_tok, pos, tail_len, active, cfg=cfg,
+                               use_fused=use_fused)
+    kscr, vscr = _prefill_core(params, ptoks, kscr, vscr, off, cfg=cfg)
+    return nxt, tk, tv, kscr, vscr
 
 
 def _scratch_blocks(kscr, vscr, rows, blks, page: int):
@@ -388,6 +450,7 @@ class PagedKVEngine:
         self._pmax = 8
         self._pt_dev: jax.Array | None = None
         self._pt_dirty = True
+        self._cohort: _Cohort | None = None
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
                       "preemptions": 0}
@@ -459,6 +522,11 @@ class PagedKVEngine:
     def release(self, sid: int) -> None:
         """Retire a request: free its pool pages and recycle its slot."""
         seq = self.seqs.pop(sid)
+        # a live cohort member cannot be released mid-prefill (its scratch
+        # row would keep publishing pages nobody owns); preempted members
+        # are fine — their publishes are already dropped
+        assert not (seq.prefilling and not seq.preempted), \
+            f"sid {sid} is mid-prefill; cannot release"
         for lp in seq.pages:
             self.free.extend(lp)
         self._free_slots.append(seq.slot)
@@ -468,53 +536,64 @@ class PagedKVEngine:
         self.add_requests({sid: prompt})
 
     def add_requests(self, prompts: dict[int, list[int]]) -> None:
-        """Admit a batch of prompts and prefill them in one chunked pass.
+        """Admit a batch of prompts and prefill them to completion.
 
-        This is the intended admission path under load: all prompts
-        advance together through the jitted chunked-batch prefill step
-        (continuous batching admits between ``decode_batch`` steps via
-        this entry point — slots stay compatible with in-flight decode).
+        Blocking convenience wrapper over the cohort machinery: admits all
+        prompts as one cohort and drains it with full-width chunks.  The
+        continuous-batching scheduler instead drives the same cohort one
+        budgeted chunk per iteration via :meth:`mixed_step`, so prefill
+        interleaves with decode.
         """
+        self.begin_cohort(prompts)
+        while self._cohort is not None:
+            self.mixed_step(decode_sids=[], pf_tokens=self.prefill_chunk)
+
+    def begin_cohort(self, prompts: dict[int, list[int]]) -> None:
+        """Admit prompts into a chunked-prefill cohort without running it.
+
+        Allocates batch slots and the cohort's exact-K/V scratch; no
+        model compute happens until :meth:`mixed_step` is called with a
+        nonzero ``pf_tokens``.  All cohort members share one chunk grid
+        (uniform offset), which is what keeps the mixed dispatch's shapes
+        static; requests arriving while a cohort is in flight wait for
+        the next cohort.
+        """
+        # a cohort whose live members all finished (the rest preempted)
+        # may still be nominally in flight; clear it before validating
+        self._maybe_drop_cohort()
         # validate the whole batch before mutating any engine state, so a
         # rejected admission leaves no half-admitted sequences behind
+        assert self._cohort is None, "a prefill cohort is already in flight"
         assert len(prompts) <= len(self._free_slots), \
             "engine at max_batch capacity"
         for sid, prompt in prompts.items():
             assert sid not in self.seqs, sid
             assert prompt, f"empty prompt for sid {sid}"
+        if not prompts:
+            return
+        cfg, chunk = self.cfg, self.prefill_chunk
+        lyr, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         seqs = []
-        lyr = self.cfg.n_layers
         for sid, prompt in prompts.items():
             seq = Sequence(sid=sid, slot=self._free_slots.pop(),
                            tokens=list(prompt),
-                           pages=[[] for _ in range(lyr)])
+                           pages=[[] for _ in range(lyr)], prefilling=True)
             self.seqs[sid] = seq
             seqs.append(seq)
-        if seqs:
-            self._prefill_batch(seqs)
-
-    def _prefill_batch(self, seqs: list[Sequence]) -> None:
-        """Chunked batched prefill straight into the compressed pool.
-
-        Host keeps only the chunk loop and CAMP bookkeeping; each chunk is
-        one jitted step over every admitted prompt and all layers, followed
-        by one batched page publish of the pages that chunk completed.
-        The exact-K/V scratch is sized to the longest prompt rounded up to
-        a power-of-two chunk count, so retraces stay logarithmic.
-        """
-        cfg, page, chunk = self.cfg, self.page, self.prefill_chunk
-        lyr, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         maxlen = max(len(s.tokens) for s in seqs)
-        n_chunks = -(-maxlen // chunk)
+        # scratch length: one chunk of headroom past the longest prompt so
+        # a budget-split (non-chunk-aligned) offset never pushes the
+        # static-width scratch write out of bounds, rounded up to a
+        # power-of-two chunk count so retraces stay logarithmic
+        n_chunks = -(-maxlen // chunk) + 1
         cap = 1
         while cap < n_chunks:
             cap *= 2
         tmax = cap * chunk
         # scratch rows cover only the admitted prompts (rounded up to a
-        # power of two, capped at max_batch, so retraces stay logarithmic)
-        # — admission cost scales with the batch actually admitted, not
-        # engine capacity; ``row`` maps each sequence to its scratch row,
-        # distinct from its decode slot
+        # power of two, capped at max_batch) — admission cost scales with
+        # the cohort actually admitted, not engine capacity; ``row`` maps
+        # each sequence to its scratch row, distinct from its decode slot
         nrows = 1
         while nrows < len(seqs):
             nrows *= 2
@@ -523,41 +602,73 @@ class PagedKVEngine:
         toks = np.zeros((nrows, tmax), np.int32)
         for s in seqs:
             toks[row[s.sid], :len(s.tokens)] = s.tokens
-        toks = jnp.asarray(toks)
         kscr = jnp.zeros((lyr, nrows, tmax, kvh, dh), jnp.float32)
         vscr = jnp.zeros_like(kscr)
+        self._cohort = _Cohort(seqs=seqs, row=row, toks=toks, kscr=kscr,
+                               vscr=vscr, maxlen=maxlen,
+                               pub=[0] * len(seqs), done_sids=set())
 
-        for ci in range(n_chunks):
-            off = ci * chunk
-            kscr, vscr = _prefill_chunk(
-                self.params, toks[:, off:off + chunk], kscr, vscr,
-                jnp.asarray(off, jnp.int32), cfg=cfg)
-            # publish every page completed inside [off, off + chunk)
-            lo, hi = off // page, (off + chunk) // page
-            entries = [(s, blk) for s in seqs
-                       for blk in range(lo, min(hi, len(s.tokens) // page))]
-            if entries:
-                rows = jnp.asarray([row[s.sid] for s, _ in entries],
-                                   jnp.int32)
-                blks = jnp.asarray([b for _, b in entries], jnp.int32)
-                kb, vb = _gather_prefill_blocks(kscr, vscr, rows, blks,
-                                                page=page)
-                self._publish(kb, vb, [s for s, _ in entries])
+    def _maybe_drop_cohort(self) -> None:
+        """Retire the cohort early when no live member still needs it.
 
-        # final partial pages -> decode tail buffers (exact f32, like the
-        # pool pages sourced from the same scratch)
-        tails = []
-        for s in seqs:
+        A CAMP-preempted member never completes its grid (its publishes
+        are dropped), so a cohort whose only unfinished members are
+        preempted would otherwise stay in flight forever and block the
+        next admission.
+        """
+        co = self._cohort
+        if co is not None and all(s.sid in co.done_sids or s.preempted
+                                  for s in co.seqs):
+            for s in co.seqs:
+                s.prefilling = False
+            self._cohort = None
+
+    def _advance_cohort(self, n: int) -> list[int]:
+        """Post-dispatch cohort bookkeeping for an ``n``-token advance.
+
+        Publishes every page the chunk completed (CAMP accounting rides
+        on the same batched publish path decode uses), writes the final
+        partial page of members whose prefill just finished into their
+        decode tail slots, and retires the cohort when the grid drains.
+        Returns the sids whose prefill completed this step.
+        """
+        co, page = self._cohort, self.page
+        new_off = min(co.off + n, co.maxlen)
+        entries = []
+        for i, s in enumerate(co.seqs):
+            upto = min(new_off, len(s.tokens)) // page
+            entries.extend((s, blk) for blk in range(co.pub[i], upto))
+            co.pub[i] = max(co.pub[i], upto)
+        if entries:
+            rows = jnp.asarray([co.row[s.sid] for s, _ in entries],
+                               jnp.int32)
+            blks = jnp.asarray([b for _, b in entries], jnp.int32)
+            kb, vb = _gather_prefill_blocks(co.kscr, co.vscr, rows, blks,
+                                            page=page)
+            self._publish(kb, vb, [s for s, _ in entries])
+        completed, tails = [], []
+        for s in co.seqs:
+            if s.sid in co.done_sids or len(s.tokens) > new_off:
+                continue
+            co.done_sids.add(s.sid)
+            s.prefilling = False
+            # final partial page -> decode tail buffers (exact f32, like
+            # the pool pages sourced from the same scratch)
             s.tail_len = 0 if s.preempted else len(s.tokens) % page
             if s.tail_len:
                 tails.append((s, len(s.tokens) // page))
+            completed.append(s.sid)
         if tails:
-            rows = jnp.asarray([row[s.sid] for s, _ in tails], jnp.int32)
+            rows = jnp.asarray([co.row[s.sid] for s, _ in tails], jnp.int32)
             slots = jnp.asarray([s.slot for s, _ in tails], jnp.int32)
             blks = jnp.asarray([b for _, b in tails], jnp.int32)
             self.tail_k, self.tail_v = _write_tails(
-                self.tail_k, self.tail_v, kscr, vscr, rows, slots, blks,
-                page=page)
+                self.tail_k, self.tail_v, co.kscr, co.vscr, rows, slots,
+                blks, page=page)
+        co.off = new_off
+        if new_off >= co.maxlen:
+            self._cohort = None
+        return completed
 
     def _publish(self, k_blocks, v_blocks, seqs: list[Sequence]) -> None:
         """Publish len(seqs) filled pages per layer in one dispatch.
@@ -597,13 +708,81 @@ class PagedKVEngine:
 
     def decode_batch(self, sids: list[int] | None = None) -> dict[int, int]:
         """Greedy-decode one token for every active (or given) sequence."""
-        if sids is None:
-            sids = [s.sid for s in self.seqs.values()
-                    if not (s.preempted or s.done)]
-        sids = [sid for sid in dict.fromkeys(sids)   # dedup, keep order
-                if not (self.seqs[sid].preempted or self.seqs[sid].done)]
-        if not sids:
-            return {}
+        out, _ = self.mixed_step(decode_sids=sids, pf_tokens=0)
+        return out
+
+    def mixed_step(self, decode_sids: list[int] | None = None,
+                   pf_tokens: int = 0) -> tuple[dict[int, int], list[int]]:
+        """One continuous-batching iteration.
+
+        Advances every given (default: every decodable) sequence one
+        decode token AND the in-flight prefill cohort by up to
+        ``pf_tokens`` prompt tokens (clamped to ``prefill_chunk``, one
+        dispatch's static width) — through a single jitted dispatch
+        (:func:`_mixed_step`) when both halves are present, or the
+        decode-only / prefill-only dispatch otherwise.  ``pf_tokens``
+        below ``prefill_chunk`` is a budget-split chunk: the dispatch
+        width stays static, tokens past the split are masked padding.
+
+        Returns ``(decoded {sid: next_token}, completed_prefill_sids)``.
+        """
+        if decode_sids is None:
+            decode_sids = [s.sid for s in self.seqs.values()
+                           if not (s.preempted or s.done or s.prefilling)]
+        sids = [sid for sid in dict.fromkeys(decode_sids)  # dedup in order
+                if not (self.seqs[sid].preempted or self.seqs[sid].done
+                        or self.seqs[sid].prefilling)]
+        co = self._cohort
+        # one dispatch advances at most one chunk (the static width of the
+        # prefill half); larger pf_tokens would silently skip tokens
+        n = 0 if co is None else max(0, min(pf_tokens, self.prefill_chunk,
+                                            co.maxlen - co.off))
+        if n > 0:
+            c = self.prefill_chunk
+            nrows, tmax = co.toks.shape
+            ptoks_h = np.zeros((nrows, c), np.int32)
+            w = min(c, tmax - co.off)
+            ptoks_h[:, :w] = co.toks[:, co.off:co.off + w]
+            # budget-split chunk: tokens past the valid width are zero
+            # padding — their scratch writes land beyond off+n and are
+            # rewritten by the next chunk before any valid query (always
+            # at a position < its own write offset) can attend them
+            ptoks_h[:, n:] = 0
+            ptoks = jnp.asarray(ptoks_h)
+            off_d = jnp.asarray(co.off, jnp.int32)
+        if sids:
+            page_cnt, last_tok, pos, tail_len, active = \
+                self._decode_inputs(sids)
+            if n > 0:
+                nxt, self.tail_k, self.tail_v, co.kscr, co.vscr = \
+                    _mixed_step(
+                        self.params, self.pools, self.tail_k, self.tail_v,
+                        co.kscr, co.vscr, self._page_table(), page_cnt,
+                        last_tok, pos, tail_len, active, ptoks, off_d,
+                        cfg=self.cfg, use_fused=self.use_fused)
+            else:
+                nxt, self.tail_k, self.tail_v = _decode_step(
+                    self.params, self.pools, self.tail_k, self.tail_v,
+                    self._page_table(), page_cnt, last_tok, pos, tail_len,
+                    active, cfg=self.cfg, use_fused=self.use_fused)
+            out = self._decode_post(sids, np.asarray(nxt))  # 1 sync / step
+        else:
+            out = {}
+            if n > 0:
+                co.kscr, co.vscr = _prefill_chunk(
+                    self.params, ptoks, co.kscr, co.vscr, off_d,
+                    cfg=self.cfg)
+        # decode tail publishes land first (inside _decode_post), then the
+        # chunk's completed prefill pages — the reference oracle replays
+        # the same iteration order
+        completed = self._advance_cohort(n) if n > 0 else []
+        # a decode-side publish may have preempted the cohort's last live
+        # member this very step; don't leave a dead cohort in flight
+        self._maybe_drop_cohort()
+        return out, completed
+
+    def _decode_inputs(self, sids: list[int]):
+        """Pack the padded per-slot decode state for a dispatch."""
         sb = self.max_batch
         active = np.zeros(sb, bool)
         last_tok = np.zeros(sb, np.int32)
@@ -617,15 +796,13 @@ class PagedKVEngine:
             pos[s.slot] = len(s.tokens) - 1
             tail_len[s.slot] = s.tail_len
             page_cnt[s.slot] = len(s.pages[0])
+        return (jnp.asarray(page_cnt), jnp.asarray(last_tok),
+                jnp.asarray(pos), jnp.asarray(tail_len),
+                jnp.asarray(active))
 
-        nxt, self.tail_k, self.tail_v = _decode_step(
-            self.params, self.pools, self.tail_k, self.tail_v,
-            self._page_table(), jnp.asarray(page_cnt),
-            jnp.asarray(last_tok), jnp.asarray(pos),
-            jnp.asarray(tail_len), jnp.asarray(active),
-            cfg=self.cfg, use_fused=self.use_fused)
-        nxt = np.asarray(nxt)                          # 1 sync per step
-
+    def _decode_post(self, sids: list[int], nxt: np.ndarray
+                     ) -> dict[int, int]:
+        """Append decoded tokens; publish every tail page that filled."""
         filled: list[Sequence] = []
         out: dict[int, int] = {}
         for sid in sids:
@@ -647,7 +824,8 @@ class PagedKVEngine:
         out = self.decode_batch([sid])
         if sid not in out:
             seq = self.seqs[sid]                   # KeyError for unknown sid
-            state = "preempted" if seq.preempted else "done"
+            state = ("preempted" if seq.preempted
+                     else "prefilling" if seq.prefilling else "done")
             raise ValueError(f"sequence {sid} is {state}; cannot decode")
         return out[sid]
 

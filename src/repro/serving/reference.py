@@ -50,6 +50,12 @@ class Sequence:
     tail_len: int = 0
     done: bool = False
     preempted: bool = False
+    # chunked-prefill oracle state (begin_request / prefill_advance):
+    prefilling: bool = False
+    pf_pos: int = 0                      # prompt tokens processed so far
+    pf_published: int = 0                # full pages already published
+    pf_k: np.ndarray | None = None       # [L, plen, K, Dh] f32 exact scratch
+    pf_v: np.ndarray | None = None
 
 
 class ReferencePagedKVEngine:
@@ -157,6 +163,98 @@ class ReferencePagedKVEngine:
         self.seqs[sid] = seq
         self._prefill(seq)
 
+    def release(self, sid: int) -> None:
+        """Retire a request: free its pool pages (oracle parity with the
+        batched engine's slot recycling — the reference has no slots)."""
+        seq = self.seqs.pop(sid)
+        assert not (seq.prefilling and not seq.preempted), \
+            f"sid {sid} is mid-prefill; cannot release"
+        for lp in seq.pages:
+            self.free.extend(lp)
+
+    # -- chunked-prefill oracle (mixed-schedule semantics) ---------------------
+
+    def begin_request(self, sid: int, prompt: list[int]) -> None:
+        """Admit a prompt for *chunked* prefill without running any of it.
+
+        The mixed-schedule oracle twin of ``PagedKVEngine.begin_cohort``:
+        the continuous-batching scheduler advances the prompt
+        ``prefill_advance(n)`` tokens per iteration, interleaved with
+        ``decode_one`` calls, and the result must be token-for-token
+        identical to full-prompt ``add_request`` prefill (compression is
+        applied only at page publish, so splitting the prompt across
+        chunks changes no published value).
+        """
+        cfg = self.cfg
+        lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        assert sid not in self.seqs, sid
+        assert prompt, f"empty prompt for sid {sid}"
+        plen = len(prompt)
+        self.seqs[sid] = Sequence(
+            sid=sid, tokens=list(prompt),
+            pages=[[] for _ in range(lyr)],
+            tail_k=np.zeros((lyr, self.page, k, dh), np.float32),
+            tail_v=np.zeros((lyr, self.page, k, dh), np.float32),
+            prefilling=True,
+            pf_k=np.zeros((lyr, plen, k, dh), np.float32),
+            pf_v=np.zeros((lyr, plen, k, dh), np.float32))
+
+    def prefill_advance(self, sid: int, n: int) -> bool:
+        """Advance a chunked prefill by up to ``n`` prompt tokens.
+
+        Host-looped and obviously correct: the chunk's activations attend
+        over the exact f32 K/V scratch of everything processed so far
+        (identical math to full-prompt prefill — causality makes the
+        split invisible), pages completed by the chunk publish through
+        the same CAMP-accounted path, and the final partial page lands in
+        the decode tail buffer.  Returns True when prefill completed.
+        """
+        cfg, seq, page = self.cfg, self.seqs[sid], self.page
+        assert seq.prefilling, f"sid {sid} is not prefilling"
+        plen = len(seq.tokens)
+        p = seq.pf_pos
+        n = min(n, plen - p)
+        if n > 0:
+            toks = jnp.asarray(seq.tokens[p:p + n], jnp.int32)[None]
+            x = L.embed(self.params["embed"], toks)
+            qpos = jnp.arange(p, p + n, dtype=jnp.int32)
+            kvpos = jnp.arange(p + n, dtype=jnp.int32)
+            for li in range(cfg.n_layers):
+                bp = self._block_params(li)
+                h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+                k, v = A.gqa_kv(bp["attn"], h, qpos, theta=cfg.rope_theta)
+                seq.pf_k[li, p:p + n] = np.asarray(k[0], np.float32)
+                seq.pf_v[li, p:p + n] = np.asarray(v[0], np.float32)
+                kv_all = (jnp.asarray(seq.pf_k[li, :p + n])[None],
+                          jnp.asarray(seq.pf_v[li, :p + n])[None])
+                x = x + A.gqa_forward(bp["attn"], h, qpos,
+                                      theta=cfg.rope_theta, kv=kv_all,
+                                      kv_positions=kvpos)
+                h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+                x = x + L.mlp(bp["ffn"], h2)
+            seq.pf_pos = p + n
+            # publish every page the chunk completed (block-outer order —
+            # page *sets* match the full-prefill path, and CAMP victim
+            # choice is order-independent in the supported scenarios)
+            for blk in range(seq.pf_published, seq.pf_pos // page):
+                for li in range(cfg.n_layers):
+                    sl = slice(blk * page, (blk + 1) * page)
+                    self._publish_page(seq, li, seq.pf_k[li, sl],
+                                       seq.pf_v[li, sl])
+                seq.pf_published = blk + 1
+        if seq.pf_pos < plen:
+            return False
+        seq.prefilling = False
+        seq.tail_len = 0 if seq.preempted else plen % page
+        if seq.tail_len:
+            for li in range(cfg.n_layers):
+                seq.tail_k[li, :seq.tail_len] = \
+                    seq.pf_k[li, (plen // page) * page:]
+                seq.tail_v[li, :seq.tail_len] = \
+                    seq.pf_v[li, (plen // page) * page:]
+        seq.pf_k = seq.pf_v = None       # scratch no longer needed
+        return True
+
     def _block_params(self, li: int):
         return jax.tree.map(lambda x: x[li], self.params["blocks"])
 
@@ -192,6 +290,7 @@ class ReferencePagedKVEngine:
     def decode_one(self, sid: int) -> int:
         """Greedy-decode one token for sequence sid."""
         cfg, seq = self.cfg, self.seqs[sid]
+        assert not seq.prefilling, f"sid {sid} is mid-prefill; cannot decode"
         t = len(seq.tokens)
         tok = jnp.asarray([seq.tokens[-1]], jnp.int32)
         x = L.embed(self.params["embed"], tok[:, None])

@@ -1,0 +1,340 @@
+"""Continuous-batching scheduler: token-budget mixed prefill/decode loop.
+
+The serving-side analogue of keeping compressed capacity *utilized*
+rather than merely allocated: the BDI-paged engines (PR 1-2) made both
+halves of the request lifecycle cheap, but phase-wise serving still
+idles slots whenever requests arrive or finish mid-flight.  This module
+adds the missing layer — a :class:`ContinuousScheduler` that owns the
+request queue and drives the engine one *iteration* at a time:
+
+  * **admit** — waiting requests join a chunked-prefill cohort whenever
+    no cohort is in flight and batch slots are free (FCFS; a cohort
+    shares one chunk grid, which is what keeps the mixed dispatch's
+    shapes static so admission never retraces);
+  * **mix** — every iteration packs one decode step for all running
+    sequences plus as many prefill-chunk tokens as the per-iteration
+    ``token_budget`` allows (Sarathi-style piggybacking: decodes are
+    latency-critical and always dispatched; leftover budget goes to
+    prefill, splitting a chunk at the budget boundary when needed), all
+    through the engine's single jitted mixed step;
+  * **retire** — sequences that emit ``eos_id`` or reach
+    ``max_new_tokens`` release their pages and batch slot between
+    steps; CAMP-preempted sequences retire with ``finish_reason
+    "preempted"``.
+
+The same scheduler class drives either engine: the batched
+``PagedKVEngine`` through ``begin_cohort``/``mixed_step`` (production
+path), or the host-looped ``ReferencePagedKVEngine`` through
+``begin_request``/``prefill_advance``/``decode_one`` (the mixed-schedule
+oracle) — so scheduling policy is shared by construction, and
+tests/test_scheduler.py pins token-for-token equivalence of the two
+under staggered arrivals, retirements, preemptions, and budget splits.
+
+Latency vs throughput: ``token_budget`` is the knob.  Small budgets keep
+iterations short (good inter-token latency for running sequences, slow
+prefill → worse TTFT under load); large budgets prefill fast but make
+running sequences wait through bigger chunks.  Decode steps are never
+dropped — the budget throttles prefill only (the batched step computes
+every slot anyway, so skipping decodes would save nothing).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclass
+class Track:
+    """Per-request lifecycle record (scheduler-side bookkeeping only)."""
+    req: Request
+    state: str                            # waiting|prefill|running|finished
+    submitted_iter: int
+    submitted_t: float
+    admitted_iter: int | None = None
+    prefill_done_iter: int | None = None
+    first_token_iter: int | None = None
+    first_token_t: float | None = None
+    finished_iter: int | None = None
+    finished_t: float | None = None
+    finish_reason: str | None = None      # eos | length | preempted
+    out_tokens: list[int] = field(default_factory=list)
+    pf_pos: int = 0                       # prompt tokens prefilled so far
+
+
+class ContinuousScheduler:
+    """Token-budget continuous-batching loop over a paged-KV engine.
+
+    ``engine`` is either a ``PagedKVEngine`` (batched mixed-step path)
+    or a ``ReferencePagedKVEngine`` (sequential oracle path) — detected
+    by the presence of ``mixed_step``.
+    """
+
+    def __init__(self, engine, *, token_budget: int = 64):
+        assert token_budget >= 1, token_budget
+        self.engine = engine
+        self.token_budget = token_budget
+        self._batched = hasattr(engine, "mixed_step")
+        self.waiting: deque[Request] = deque()
+        self.tracks: dict[int, Track] = {}
+        self._prefill: list[int] = []     # rids of the in-flight cohort
+        self._cohort_pos = 0              # cohort grid offset (uniform)
+        self._running: list[int] = []     # rids decoding, admission order
+        self.iteration = 0
+        self.stats = {"iterations": 0, "idle_iterations": 0,
+                      "mixed_iterations": 0, "prefill_tokens": 0,
+                      "decode_tokens": 0, "chunk_splits": 0}
+
+    # -- queue -----------------------------------------------------------------
+
+    def submit(self, rid: int, prompt: list[int], *,
+               max_new_tokens: int = 32, eos_id: int | None = None) -> None:
+        """Enqueue a request (admission happens between iterations)."""
+        assert rid not in self.tracks, rid
+        assert prompt, f"empty prompt for rid {rid}"
+        assert max_new_tokens >= 1, max_new_tokens
+        self.waiting.append(Request(rid, list(prompt), max_new_tokens,
+                                    eos_id))
+        self.tracks[rid] = Track(req=self.waiting[-1], state="waiting",
+                                 submitted_iter=self.iteration,
+                                 submitted_t=time.time())
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is waiting, prefilling, or decoding."""
+        return not (self.waiting or self._prefill or self._running)
+
+    def finished(self) -> dict[int, Track]:
+        return {rid: t for rid, t in self.tracks.items()
+                if t.state == "finished"}
+
+    # -- one iteration ---------------------------------------------------------
+
+    def step(self) -> dict:
+        """Run one scheduler iteration: admit → mixed dispatch → retire.
+
+        Returns an event dict: ``admitted`` rids, ``decoded`` {rid: tok},
+        ``prefilled`` token count, ``completed_prefills`` rids,
+        ``retired`` [(rid, reason)], and ``idle``.
+        """
+        it = self.iteration
+        admitted = self._admit()
+        decode_rids = list(self._running)
+        n_pf = self._plan_prefill_tokens(len(decode_rids))
+        if not decode_rids and n_pf == 0:
+            self.iteration += 1
+            self.stats["iterations"] += 1
+            self.stats["idle_iterations"] += 1
+            return {"iteration": it, "admitted": admitted, "decoded": {},
+                    "prefilled": 0, "completed_prefills": [], "retired": [],
+                    "idle": True}
+
+        out, completed = self._dispatch(decode_rids, n_pf)
+
+        now = time.time()
+        for rid, tok in out.items():
+            tr = self.tracks[rid]
+            tr.out_tokens.append(tok)
+            if tr.first_token_iter is None:
+                tr.first_token_iter = it
+                tr.first_token_t = now
+        self.stats["decode_tokens"] += len(out)
+        self.stats["prefill_tokens"] += n_pf
+        if decode_rids and n_pf:
+            self.stats["mixed_iterations"] += 1
+
+        for rid in completed:
+            tr = self.tracks[rid]
+            if tr.state != "prefill":     # e.g. preempted + retired earlier
+                continue
+            tr.state = "running"
+            tr.prefill_done_iter = it
+            self._running.append(rid)
+        self._prefill = [r for r in self._prefill if r not in completed]
+
+        retired = self._retire(out, now)
+        self.iteration += 1
+        self.stats["iterations"] += 1
+        return {"iteration": it, "admitted": admitted, "decoded": out,
+                "prefilled": n_pf, "completed_prefills": completed,
+                "retired": retired, "idle": False}
+
+    def run(self, *, max_iterations: int = 100_000) -> dict[int, Track]:
+        """Drive iterations until every submitted request finishes."""
+        for _ in range(max_iterations):
+            if self.idle:
+                break
+            self.step()
+        assert self.idle, f"not drained after {max_iterations} iterations"
+        return self.finished()
+
+    # -- phases ----------------------------------------------------------------
+
+    def _admit(self) -> list[int]:
+        """Pull waiting requests into a new prefill cohort (FCFS).
+
+        Only when no cohort is in flight — cohort members share one chunk
+        grid.  An admission burst larger than the engine's free slots
+        admits what fits; the rest keeps waiting.
+        """
+        if self._prefill or not self.waiting:
+            return []
+        free = (len(self.engine._free_slots) if self._batched
+                else self._ref_free_slots())
+        cohort: list[Request] = []
+        while self.waiting and len(cohort) < free:
+            cohort.append(self.waiting.popleft())
+        if not cohort:
+            return []
+        prompts = {r.rid: r.prompt for r in cohort}
+        if self._batched:
+            self.engine.begin_cohort(prompts)
+        else:
+            for rid, prompt in prompts.items():
+                self.engine.begin_request(rid, prompt)
+        for r in cohort:
+            tr = self.tracks[r.rid]
+            tr.state = "prefill"
+            tr.admitted_iter = self.iteration
+            self._prefill.append(r.rid)
+        self._cohort_pos = 0
+        return [r.rid for r in cohort]
+
+    def _ref_free_slots(self) -> int:
+        """Oracle twin of the batched engine's free-slot count."""
+        max_batch = getattr(self, "_ref_max_batch", None)
+        if max_batch is None:
+            return len(self.waiting)      # unconstrained
+        return max_batch - len(self.engine.seqs)
+
+    def set_reference_max_batch(self, max_batch: int) -> None:
+        """Pin the oracle's admission capacity to the batched engine's
+        ``max_batch`` so both produce the same schedule."""
+        self._ref_max_batch = max_batch
+
+    def _plan_prefill_tokens(self, n_decodes: int) -> int:
+        """Budget the iteration's prefill-chunk width (Sarathi packing).
+
+        Every running sequence costs one budget token; the remainder buys
+        prefill-grid tokens, splitting a chunk at the budget boundary.
+        The cohort advances uniformly, so one grid token costs one budget
+        token per member still short of that grid position.
+        """
+        if not self._prefill:
+            return 0
+        budget = max(0, self.token_budget - n_decodes)
+        if budget == 0:
+            return 0
+        chunk = self.engine.prefill_chunk if self._batched else \
+            getattr(self, "_ref_prefill_chunk", 16)
+        off = self._cohort_off()
+        rems = [len(self.tracks[r].req.prompt) - off for r in self._prefill]
+        rems = [r for r in rems if r > 0]
+        if not rems:
+            return 0
+
+        def cost(n: int) -> int:
+            return sum(min(n, r) for r in rems)
+
+        n = min(chunk, max(rems))
+        while n > 0 and cost(n) > budget:
+            n -= 1
+        # forward-progress floor: a cohort wider than the leftover budget
+        # still advances one grid token (the budget is a packing target,
+        # not a hard cap), else prefill could starve forever
+        n = max(n, 1)
+        if n < min(chunk, max(rems)):
+            self.stats["chunk_splits"] += 1
+        return n
+
+    def set_reference_prefill_chunk(self, chunk: int) -> None:
+        """Pin the oracle's chunk width to the batched engine's."""
+        self._ref_prefill_chunk = chunk
+
+    def _cohort_off(self) -> int:
+        """Current cohort grid offset (uniform across members)."""
+        return self._cohort_pos
+
+    def _dispatch(self, decode_rids: list[int], n_pf: int
+                  ) -> tuple[dict[int, int], list[int]]:
+        """Run the iteration's compute and advance prefill bookkeeping."""
+        if self._batched:
+            out, completed = self.engine.mixed_step(decode_rids, n_pf)
+        else:
+            # oracle replay of the same iteration: decodes first (the
+            # batched step publishes decode tails before prefill pages),
+            # then the cohort's chunk, member by member in cohort order
+            out = {}
+            for rid in decode_rids:
+                seq = self.engine.seqs.get(rid)
+                if seq is None or seq.preempted or seq.done:
+                    continue
+                out[rid] = self.engine.decode_one(rid)
+            completed = []
+            if n_pf > 0:
+                for rid in self._prefill:
+                    seq = self.engine.seqs.get(rid)
+                    if seq is None:
+                        continue
+                    if self.engine.prefill_advance(rid, n_pf):
+                        completed.append(rid)
+        # scheduler-side progress mirror (drives the budget planner)
+        if n_pf > 0:
+            self._cohort_pos += n_pf
+            for rid in self._prefill:
+                tr = self.tracks[rid]
+                tr.pf_pos = min(self._cohort_pos, len(tr.req.prompt))
+        return out, completed
+
+    def _retire(self, decoded: dict[int, int], now: float
+                ) -> list[tuple[int, str]]:
+        """EOS / length / preemption retirement; frees pages and slots."""
+        retired: list[tuple[int, str]] = []
+        for rid in list(self._running):
+            tr = self.tracks[rid]
+            seq = self.engine.seqs.get(rid)
+            if seq is not None and seq.preempted:
+                retired.append((rid, "preempted"))
+            elif rid in decoded and tr.req.eos_id is not None \
+                    and decoded[rid] == tr.req.eos_id:
+                retired.append((rid, "eos"))
+            elif len(tr.out_tokens) >= tr.req.max_new_tokens:
+                retired.append((rid, "length"))
+        for rid in list(self._prefill):
+            seq = self.engine.seqs.get(rid)
+            if seq is not None and seq.preempted:
+                retired.append((rid, "preempted"))
+        for rid, reason in retired:
+            tr = self.tracks[rid]
+            tr.state = "finished"
+            tr.finish_reason = reason
+            tr.finished_iter = self.iteration
+            tr.finished_t = now
+            if rid in self._running:
+                self._running.remove(rid)
+            if rid in self._prefill:
+                self._prefill.remove(rid)
+            if rid in self.engine.seqs:
+                self.engine.release(rid)
+        return retired
+
+
+def make_reference_scheduler(ref_engine, *, token_budget: int,
+                             max_batch: int, prefill_chunk: int
+                             ) -> ContinuousScheduler:
+    """Oracle scheduler over the host-looped reference engine, pinned to
+    the batched engine's capacity and chunk width so both produce the
+    identical schedule (and therefore identical tokens)."""
+    sched = ContinuousScheduler(ref_engine, token_budget=token_budget)
+    sched.set_reference_max_batch(max_batch)
+    sched.set_reference_prefill_chunk(prefill_chunk)
+    return sched

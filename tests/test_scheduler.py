@@ -1,0 +1,300 @@
+"""Continuous-batching scheduler equivalence + edge-case suite.
+
+The scheduler drives the batched mixed-step engine and must produce
+token-for-token identical output (and identical iteration-level
+lifecycle events) to the same scheduling policy replayed against the
+host-looped reference oracle — under staggered arrivals, mid-stream
+retirements, CAMP preemption while a prefill chunk is in flight, and
+budget-boundary chunk splits.  Edge cases: empty-queue idle steps,
+admission bursts larger than free slots, and same-iteration
+retire+admit slot reuse.
+"""
+
+import jax
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models.api import get_model
+from repro.serving.engine import PagedKVEngine
+from repro.serving.reference import ReferencePagedKVEngine
+from repro.serving.scheduler import (ContinuousScheduler,
+                                     make_reference_scheduler)
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pair(cfg, params, *, n_pool_pages=96, max_batch=4, token_budget=24):
+    be = PagedKVEngine(cfg, params, page_size=PAGE,
+                       n_pool_pages=n_pool_pages, max_batch=max_batch)
+    re_ = ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                 n_pool_pages=n_pool_pages)
+    bs = ContinuousScheduler(be, token_budget=token_budget)
+    rs = make_reference_scheduler(re_, token_budget=token_budget,
+                                  max_batch=max_batch,
+                                  prefill_chunk=be.prefill_chunk)
+    return bs, rs
+
+
+def _drive(sched, arrivals, *, max_iters=300, on_step=None):
+    """Open-loop drive: submit when the arrival iteration is reached."""
+    pending = dict(arrivals)
+    events = []
+    for it in range(max_iters):
+        for rid, (t, prompt, kw) in list(pending.items()):
+            if t <= it:
+                sched.submit(rid, prompt, **kw)
+                del pending[rid]
+        if not pending and sched.idle:
+            break
+        events.append(sched.step())
+        if on_step:
+            on_step(sched, events[-1])
+    assert sched.idle and not pending, "workload did not drain"
+    return events
+
+
+def _assert_equivalent(bs, rs, rids):
+    fb, fr = bs.finished(), rs.finished()
+    assert set(fb) == set(fr) == set(rids)
+    for rid in rids:
+        tb, tr = fb[rid], fr[rid]
+        assert tb.out_tokens == tr.out_tokens, (rid, tb.out_tokens,
+                                                tr.out_tokens)
+        assert tb.finish_reason == tr.finish_reason, rid
+        assert tb.finished_iter == tr.finished_iter, rid
+        assert tb.first_token_iter == tr.first_token_iter, rid
+
+
+def test_staggered_arrivals_match_reference(small_model):
+    """Token-for-token vs the oracle while requests arrive mid-flight:
+    every prefill chunk after iteration 2 piggybacks on live decodes."""
+    cfg, params = small_model
+    bs, rs = _pair(cfg, params)
+    arrivals = {
+        0: (0, [5, 9, 2, 7, 11, 3], {"max_new_tokens": 9}),
+        1: (2, list(range(1, 20)), {"max_new_tokens": 6}),
+        2: (3, [4, 4, 8, 1], {"max_new_tokens": 11}),
+        3: (7, [1 + (j * 3) % 50 for j in range(34)],
+            {"max_new_tokens": 4}),
+    }
+    _drive(bs, arrivals)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    assert bs.stats == rs.stats
+    assert bs.engine.stats == rs.engine.stats       # CAMP page accounting
+    assert bs.stats["mixed_iterations"] > 0         # schedule really mixed
+    # everything retired: pool fully drained, all slots recycled
+    assert bs.engine.pool_used_pages() == 0
+    assert len(bs.engine._free_slots) == 4
+
+
+def test_eos_retirement_matches_reference(small_model):
+    """Mid-stream EOS retirement: whichever token greedy decoding emits
+    at step 3 becomes that request's eos_id, so it retires early on both
+    paths and its slot/pages recycle identically."""
+    cfg, params = small_model
+    probe_b, probe_r = _pair(cfg, params)
+    prompt = [5, 9, 2, 7, 11, 3]
+    probe_b.submit(0, prompt, max_new_tokens=12)
+    toks = probe_b.run()[0].out_tokens
+    eos = toks[3]
+
+    bs, rs = _pair(cfg, params)
+    arrivals = {
+        0: (0, prompt, {"max_new_tokens": 12, "eos_id": eos}),
+        1: (1, list(range(1, 14)), {"max_new_tokens": 8}),
+    }
+    _drive(bs, arrivals)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    tb = bs.finished()[0]
+    assert tb.finish_reason == "eos"
+    assert tb.out_tokens[-1] == eos
+    assert len(tb.out_tokens) <= 4 + 1              # stopped early
+
+
+def test_budget_boundary_chunk_splits_match_reference(small_model):
+    """A tight token budget forces non-chunk-aligned prefill offsets;
+    output must stay identical to the oracle replaying the same splits
+    (and to an unconstrained-budget run of the same workload)."""
+    cfg, params = small_model
+    arrivals = {
+        0: (0, [5, 9, 2, 7, 11, 3], {"max_new_tokens": 8}),
+        1: (1, [1 + (j * 3) % 50 for j in range(34)],
+            {"max_new_tokens": 5}),
+        2: (4, list(range(1, 20)), {"max_new_tokens": 6}),
+    }
+    bs, rs = _pair(cfg, params, token_budget=7)     # < prefill_chunk (16)
+    _drive(bs, arrivals)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    assert bs.stats["chunk_splits"] > 0
+    assert bs.stats == rs.stats
+
+    wide, _ = _pair(cfg, params, token_budget=512)
+    _drive(wide, arrivals)
+    assert wide.stats["chunk_splits"] == 0
+    for rid in arrivals:                            # budget changes pacing,
+        assert (wide.finished()[rid].out_tokens     # never token values
+                == bs.finished()[rid].out_tokens), rid
+
+
+def test_camp_preemption_during_inflight_prefill(small_model):
+    """CAMP preempts a *running* sequence while a prefill chunk is in
+    flight: the long prompt's page demand exhausts the pool mid-prefill,
+    the running victim (deterministically lowest value) retires with
+    finish_reason "preempted", and the survivor + the prefilling request
+    stay token-for-token with the oracle."""
+    cfg, params = small_model
+    bs, rs = _pair(cfg, params, n_pool_pages=17, token_budget=20)
+    arrivals = {
+        0: (0, [2 + (j * 7) % 40 for j in range(24)],   # 3 pages x 2 layers
+            {"max_new_tokens": 30}),
+        1: (0, [3, 1, 4, 1, 5],                          # tail-only: 0 pages
+            {"max_new_tokens": 30}),
+        2: (4, [3 + (j * 5) % 40 for j in range(40)],    # 5 pages x 2 layers
+            {"max_new_tokens": 4}),
+    }
+    _drive(bs, arrivals)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    fb = bs.finished()
+    assert fb[0].finish_reason == "preempted"       # held pages, low value
+    assert fb[2].finish_reason == "length"          # prefill completed
+    assert bs.engine.stats["preemptions"] == 1
+    assert bs.engine.stats == rs.engine.stats
+    # the preemption fired while request 2's prefill was in flight (the
+    # chunk whose page demand evicted the victim may be the very chunk
+    # that completed the prefill)
+    assert fb[2].admitted_iter <= fb[0].finished_iter \
+        <= fb[2].prefill_done_iter
+
+
+def test_preempted_prefill_member_does_not_strand_cohort(small_model):
+    """CAMP preempts a *prefilling* cohort member (self-preemption: it is
+    the only page-holding candidate) — the cohort must not stay in
+    flight forever, and a later request must still be admittable.
+
+    Regression: the engine cohort used to drain only when the grid
+    reached the longest member's length, which a preempted member never
+    does; the next admission then hit the cohort-in-flight assert.
+    """
+    cfg, params = small_model
+    bs, rs = _pair(cfg, params, n_pool_pages=10, token_budget=20)
+    arrivals = {
+        0: (0, [3, 1, 4], {"max_new_tokens": 4}),    # <1 page: never a
+                                                     # preemption candidate
+        1: (1, [1 + (j * 11) % 60 for j in range(72)],   # 9 pages x 2
+            {"max_new_tokens": 5}),                      # layers: too big
+        2: (12, [7, 3, 1, 2, 9], {"max_new_tokens": 3}),
+    }
+    _drive(bs, arrivals)
+    _drive(rs, arrivals)
+    fb, fr = bs.finished(), rs.finished()
+    assert set(fb) == set(fr) == set(arrivals)
+    assert fb[1].finish_reason == fr[1].finish_reason == "preempted"
+    assert fb[1].first_token_iter is None            # died mid-prefill
+    for rid in (0, 2):                               # bystanders unharmed
+        tb, tr = fb[rid], fr[rid]
+        assert tb.out_tokens == tr.out_tokens, rid
+        assert tb.finish_reason == tr.finish_reason == "length"
+    assert bs.engine._cohort is None                 # nothing stranded
+    assert bs.engine.stats["preemptions"] >= 1
+    # engine fully operational: direct blocking admission still works
+    bs.engine.add_requests({9: [5, 9, 2, 7]})
+    assert bs.engine.decode_batch([9])
+
+
+def test_empty_queue_idle_step(small_model):
+    """Idle steps are safe no-op iterations: no dispatch, no state."""
+    cfg, params = small_model
+    bs, _ = _pair(cfg, params)
+    for _ in range(3):
+        ev = bs.step()
+        assert ev["idle"] and not ev["decoded"] and not ev["admitted"]
+    assert bs.stats["idle_iterations"] == 3
+    assert bs.engine.pool_used_pages() == 0
+    # still fully operational afterwards
+    bs.submit(0, [5, 9, 2], max_new_tokens=3)
+    out = bs.run()
+    assert len(out[0].out_tokens) == 3
+
+
+def test_admission_burst_larger_than_free_slots(small_model):
+    """A 7-request burst into a 3-slot engine: 3 admitted as the first
+    cohort, the rest wait FCFS and are admitted as slots retire."""
+    cfg, params = small_model
+    bs, rs = _pair(cfg, params, max_batch=3)
+    arrivals = {rid: (0, [1 + (rid * 7 + j) % 50 for j in range(5 + rid)],
+                      {"max_new_tokens": 3 + rid % 3})
+                for rid in range(7)}
+    seen_admits = []
+
+    def watch(sched, ev):
+        if ev["admitted"]:
+            seen_admits.append(ev["admitted"])
+        assert len(sched._prefill) + len(sched._running) <= 3
+
+    _drive(bs, arrivals, on_step=watch)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    assert seen_admits[0] == [0, 1, 2]              # burst clipped to slots
+    assert sum(len(a) for a in seen_admits) == 7
+    admits = {r: t.admitted_iter for r, t in bs.finished().items()}
+    assert admits[6] > admits[0]                    # FCFS, later wave later
+
+
+def test_same_iteration_retire_and_admit_slot_reuse(small_model):
+    """A retirement and an admission land on the same iteration and the
+    freed batch slot is reused by a later request (2-slot engine kept
+    saturated by a 4-request workload)."""
+    cfg, params = small_model
+    bs, rs = _pair(cfg, params, max_batch=2)
+    # timeline: {0,1} admitted it0 (prefill completes same iteration);
+    # rid0 retires end it2 freeing a slot; it3 admits rid2 *and* retires
+    # rid1 (its 3rd token) in the same iteration; rid3 reuses rid1's slot
+    arrivals = {
+        0: (0, [5, 9, 2], {"max_new_tokens": 2}),
+        1: (0, [4, 4, 8, 1], {"max_new_tokens": 3}),
+        2: (1, [7, 3, 1, 2, 9], {"max_new_tokens": 3}),
+        3: (2, [2, 8, 6], {"max_new_tokens": 3}),
+    }
+    same_iter = []
+
+    def watch(sched, ev):
+        if ev["admitted"] and ev["retired"]:
+            same_iter.append(ev["iteration"])
+
+    _drive(bs, arrivals, on_step=watch)
+    _drive(rs, arrivals)
+    _assert_equivalent(bs, rs, arrivals)
+    slots_used = {bs.finished()[r].req.rid for r in arrivals}
+    assert slots_used == set(arrivals)
+    assert same_iter, "no iteration saw both a retirement and an admission"
+    # the engine never grew past its two slots and ended fully recycled
+    assert len(bs.engine._free_slots) == 2
+
+
+def test_scheduler_tokens_match_blocking_engine_path(small_model):
+    """For a single request, the scheduler's output equals the plain
+    blocking add_requests + decode_batch path (chunk pacing is invisible
+    in the tokens)."""
+    cfg, params = small_model
+    prompt = [1 + (j * 3) % 50 for j in range(21)]
+    bs, _ = _pair(cfg, params, token_budget=9)      # forces chunk splits
+    bs.submit(0, prompt, max_new_tokens=7)
+    sched_toks = bs.run()[0].out_tokens
+
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=96,
+                        max_batch=4)
+    eng.add_requests({0: prompt})
+    plain = [eng.decode_batch([0])[0] for _ in range(7)]
+    assert sched_toks == plain

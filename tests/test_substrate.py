@@ -174,8 +174,8 @@ def test_compressed_all_reduce_semantics():
         return cc.all_reduce_bdi(x, "data", r)
 
     from jax.sharding import PartitionSpec as P
-    out, res = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                             out_specs=(P(), P()), check_vma=False)(
+    out, res = cc.shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                            out_specs=(P(), P()))(
         x, jnp.zeros_like(x))
     # single worker: mean == quantized(x); residual = x - quantized(x)
     np.testing.assert_allclose(np.asarray(out + res), np.asarray(x),
@@ -189,9 +189,9 @@ def test_error_feedback_unbiased_over_steps():
     grads = jax.random.normal(key, (20, 256))
     mesh = jax.make_mesh((1,), ("data",))
     from jax.sharding import PartitionSpec as P
-    f = jax.shard_map(lambda x, r: cc.all_reduce_bdi(x, "data", r),
-                      mesh=mesh, in_specs=(P(), P()),
-                      out_specs=(P(), P()), check_vma=False)
+    f = cc.shard_map(lambda x, r: cc.all_reduce_bdi(x, "data", r),
+                     mesh=mesh, in_specs=(P(), P()),
+                     out_specs=(P(), P()))
     res = jnp.zeros((256,))
     applied = jnp.zeros((256,))
     for g in grads:
