@@ -19,9 +19,16 @@ static-batch baseline that drains each batch before admitting the next.
 Reports per-request TTFT / latency percentiles and goodput (completed
 tok/s); ``goodput_vs_static`` is the headline continuous-batching win.
 
+And the **shared-system-prompt prefix-cache benchmark**: the same
+open-loop workload — every prompt = one shared system prefix + a short
+unique suffix — runs cold (no prefix cache) and warm (cache primed by
+one priming request), reporting the token-weighted prefix hit rate and
+the warm-vs-cold p95 TTFT ratio.  CI gates the structural
+``warm_ttft_p95 <= cold_ttft_p95`` win and a minimum hit rate.
+
 Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick | --smoke]
 CI:  the ``bench-smoke`` job runs ``--smoke`` and gates the batched +
-scheduler rows against ``benchmarks/baselines/serve_ci.json``
+scheduler + prefix rows against ``benchmarks/baselines/serve_ci.json``
 (check_serve_regression).
 """
 
@@ -55,6 +62,14 @@ _SCHED_MODES = {
     "smoke": (8, 3),
 }
 SCHED_BUDGET = 24
+
+# shared-system-prompt prefix-cache benchmark: (n_requests, engine slots)
+_PREFIX_MODES = {
+    "full": (10, 4),
+    "quick": (8, 3),
+    "smoke": (8, 3),
+}
+SYS_PROMPT_LEN = 41          # 5 cached pages of 8 + tail; suffixes are short
 
 
 def _build(cfg, params, engine: str, batch: int, pool: int):
@@ -179,14 +194,15 @@ def _req_metrics(t0: float, arrivals: list[float], firsts: list[float],
 
 
 def _run_continuous(cfg, params, reqs, gap: float, slots: int,
-                    pool: int) -> dict:
+                    pool: int, engine=None) -> dict:
     """Open-loop drive of the continuous scheduler: request i arrives at
-    ``i * gap`` seconds; admit/retire between iterations."""
+    ``i * gap`` seconds; admit/retire between iterations.  ``engine``
+    lets the prefix-cache scenario reuse a primed engine+cache."""
     from repro.serving.engine import PagedKVEngine
     from repro.serving.scheduler import ContinuousScheduler
 
-    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
-                        max_batch=slots)
+    eng = engine if engine is not None else PagedKVEngine(
+        cfg, params, page_size=PAGE, n_pool_pages=pool, max_batch=slots)
     sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
     t0 = time.time()
     arrivals = {r["rid"]: t0 + r["rid"] * gap for r in reqs}
@@ -261,6 +277,98 @@ def _run_static(cfg, params, reqs, gap: float, slots: int,
                         [finishes[r] for r in order], n_tokens)
 
 
+def _sys_prompt(cfg) -> list[int]:
+    """The one shared system prompt (priming and workload must agree)."""
+    return [1 + (j * 7) % (cfg.vocab - 1) for j in range(SYS_PROMPT_LEN)]
+
+
+def _prefix_workload(cfg, n_req: int, salt: int) -> list[dict]:
+    """Shared-system-prompt open-loop workload: every prompt is one
+    shared ``SYS_PROMPT_LEN``-token prefix plus a short unique suffix
+    (``salt`` varies the suffixes so the warm-up pass does not seed the
+    timed pass's suffix pages — only the system prefix is shared)."""
+    return [{"rid": i,
+             "prompt": _sys_prompt(cfg)
+             + [1 + (salt + i * 13 + j) % (cfg.vocab - 1)
+                for j in range(2 + i % 4)],
+             "max_new": 3}
+            for i in range(n_req)]
+
+
+def _primed_engine(cfg, params, slots: int, pool: int):
+    """Engine with a prefix cache primed by one system-prompt request."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.prefix_cache import PrefixCache
+
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                        max_batch=slots, prefix_cache=cache)
+    eng.add_requests({-1: _sys_prompt(cfg) + [1]})
+    eng.release(-1)          # pages stay cache-retained
+    return eng
+
+
+def _warm_prefix_shapes(cfg, params, slots: int, pool: int) -> None:
+    """Trace every dispatch shape the prefix-bench open-loop runs can
+    hit (arrival timing decides cohort row counts, so warm them all:
+    mixed and prefill-only cohorts of every size, cold and warm-start,
+    plus the warm-scratch fill)."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.scheduler import ContinuousScheduler
+
+    for primed in (False, True):
+        for k in range(1, slots + 1):
+            eng = (_primed_engine(cfg, params, slots, pool) if primed
+                   else PagedKVEngine(cfg, params, page_size=PAGE,
+                                      n_pool_pages=pool, max_batch=slots))
+            sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
+            if k < slots:             # mixed: one slot kept decoding
+                sched.submit(-2, _prefix_workload(cfg, 1, 6000)[0]["prompt"],
+                             max_new_tokens=60)
+                while sched.tracks[-2].state != "running":
+                    sched.step()
+            for r in _prefix_workload(cfg, k, 6100 + 61 * k):
+                sched.submit(r["rid"], r["prompt"],
+                             max_new_tokens=r["max_new"])
+            sched.run()
+
+
+def _bench_prefix(cfg, params, mode: str) -> list[dict]:
+    """Warm vs cold TTFT under a shared system prompt.
+
+    Cold = no prefix cache (every request prefills the full prompt);
+    warm = cache primed with the system prefix, so every request's
+    prefill shrinks to its suffix (TTFT-bound workload: 3 output
+    tokens).  Both runs see the same arrival gap."""
+    n_req, slots = _PREFIX_MODES[mode]
+    pool = 256
+
+    _warm_prefix_shapes(cfg, params, slots, pool)
+    t0 = time.time()
+    _run_continuous(cfg, params, _prefix_workload(cfg, n_req, 9000), 0.0,
+                    slots, pool)
+    gap = (time.time() - t0) / max(1, n_req) * 0.5
+
+    reqs = _prefix_workload(cfg, n_req, 0)
+    cold = _run_continuous(cfg, params, reqs, gap, slots, pool)
+    warm_eng = _primed_engine(cfg, params, slots, pool)
+    warm = _run_continuous(cfg, params, reqs, gap, slots, pool,
+                           engine=warm_eng)
+    hit_rate = warm_eng.prefix_cache.hit_rate()
+    cold.update({"bench": "serve_prefix", "engine": "prefix_cold",
+                 "batch": slots, "n_requests": n_req,
+                 "sys_prompt_len": SYS_PROMPT_LEN})
+    warm.update({
+        "bench": "serve_prefix", "engine": "prefix_warm", "batch": slots,
+        "n_requests": n_req, "sys_prompt_len": SYS_PROMPT_LEN,
+        "prefix_hit_rate": round(hit_rate, 3),
+        # structural headline: warm admission skips the cached prefix
+        "warm_vs_cold_ttft_p95": round(
+            cold["ttft_s_p95"] / max(warm["ttft_s_p95"], 1e-9), 2),
+    })
+    return [warm, cold]
+
+
 def _bench_scheduler(cfg, params, mode: str) -> list[dict]:
     """Open-loop arrival benchmark: continuous scheduler vs static batch
     at the same arrival rate."""
@@ -320,6 +428,7 @@ def rows(mode: str = "full") -> list[dict]:
             batched["prefill_tok_s"] / refr["prefill_tok_s"], 2)
         out.extend([batched, refr])
     out.extend(_bench_scheduler(cfg, params, mode))
+    out.extend(_bench_prefix(cfg, params, mode))
     return out
 
 

@@ -9,7 +9,12 @@ scheduler) must be at least ``(1 - max_drop)`` times the baseline value.
 The scheduler row additionally carries a *structural* gate independent
 of runner speed: ``goodput_vs_static`` (continuous batching vs the
 static-batch baseline at the same arrival rate) must stay >=
-``--min-goodput-ratio``.  Exit 1 with a per-metric report otherwise.
+``--min-goodput-ratio``.  The prefix-cache rows carry two more
+structural gates: the warm run's ``ttft_s_p95`` must not exceed the
+cold run's (``warm_ttft_p95 <= cold_ttft_p95`` — the cache must never
+make TTFT worse), and the warm run's token-weighted ``prefix_hit_rate``
+must stay >= ``--min-hit-rate``.  Exit 1 with a per-metric report
+otherwise.
 This is what keeps wins like the 21x batched decode (PR #1), the
 chunked-prefill speedup (PR #2), and the continuous-batching goodput win
 (PR #3) from silently rotting.
@@ -45,10 +50,11 @@ def _gated_rows(payload: dict) -> dict[tuple[str, int], dict]:
 
 
 def check(current: dict, baseline: dict, max_drop: float,
-          min_goodput_ratio: float) -> list[str]:
+          min_goodput_ratio: float, min_hit_rate: float) -> list[str]:
     """Return a list of failure messages (empty == pass)."""
     cur, base = _gated_rows(current), _gated_rows(baseline)
     failures = []
+    failures += _check_prefix_rows(current, min_hit_rate)
     for key, brow in sorted(base.items()):
         engine, batch = key
         crow = cur.get(key)
@@ -74,6 +80,33 @@ def check(current: dict, baseline: dict, max_drop: float,
             failures.append(
                 f"scheduler batch {key[1]} goodput_vs_static: {ratio:.2f} "
                 f"< required {min_goodput_ratio:.2f}")
+    return failures
+
+
+def _check_prefix_rows(current: dict, min_hit_rate: float) -> list[str]:
+    """Structural prefix-cache gates (runner-speed independent)."""
+    warm = {r["batch"]: r for r in current["rows"]
+            if r.get("engine") == "prefix_warm"}
+    cold = {r["batch"]: r for r in current["rows"]
+            if r.get("engine") == "prefix_cold"}
+    failures = []
+    if not warm:
+        failures.append("prefix_warm row missing from current results")
+    for batch, wrow in sorted(warm.items()):
+        crow = cold.get(batch)
+        if crow is None:
+            failures.append(f"prefix_cold batch {batch}: missing")
+            continue
+        if wrow["ttft_s_p95"] > crow["ttft_s_p95"]:
+            failures.append(
+                f"prefix batch {batch} warm_ttft_p95 {wrow['ttft_s_p95']:.4f}"
+                f" > cold_ttft_p95 {crow['ttft_s_p95']:.4f} (the prefix "
+                "cache made TTFT worse)")
+        hit = wrow.get("prefix_hit_rate", 0.0)
+        if hit < min_hit_rate:
+            failures.append(
+                f"prefix batch {batch} prefix_hit_rate: {hit:.3f} < "
+                f"required {min_hit_rate:.3f}")
     return failures
 
 
@@ -115,6 +148,9 @@ def main() -> int:
     ap.add_argument("--min-goodput-ratio", type=float, default=1.0,
                     help="required scheduler goodput_vs_static ratio "
                          "(structural continuous-batching win)")
+    ap.add_argument("--min-hit-rate", type=float, default=0.5,
+                    help="required warm-run token-weighted prefix hit "
+                         "rate (structural prefix-cache gate)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current results")
     ap.add_argument("--derate", type=float, default=0.10,
@@ -132,7 +168,7 @@ def main() -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
     failures = check(current, baseline, args.max_drop,
-                     args.min_goodput_ratio)
+                     args.min_goodput_ratio, args.min_hit_rate)
     if failures:
         print("serving throughput regression detected:")
         for msg in failures:
@@ -149,6 +185,12 @@ def main() -> int:
               + ", ".join(f"{m}={crow[m]:.1f} "
                           f"(floor {brow[m] * (1 - args.max_drop):.1f})"
                           for m in METRICS[engine]) + extra)
+    for row in current["rows"]:
+        if row.get("engine") == "prefix_warm":
+            print(f"  ok prefix batch {row['batch']}: "
+                  f"warm_vs_cold_ttft_p95={row['warm_vs_cold_ttft_p95']:.2f}"
+                  f" (>= 1.00), prefix_hit_rate={row['prefix_hit_rate']:.3f}"
+                  f" (>= {args.min_hit_rate:.3f})")
     return 0
 
 

@@ -9,9 +9,16 @@ comparisons (Figures 4.8/4.9, Table 4.3):
     V-Way, G-MVE, G-SIP, G-CAMP;
   * Belady's OPT (size-oblivious) for the Figure 4.1 motivating example.
 
-In the framework, the same policy objects drive the serving-side KV-page /
-prefix-cache pool manager (serving/pool.py) — compressed *page* size is the
-block size, reuse is request-stream locality.
+The serving-side prefix cache (serving/prefix_cache.py) applies the same
+ideas to live traffic: compressed *page* size is the block size, reuse is
+request-stream locality.  It reuses this module's size-bin/value helpers
+but keeps its own trie-shaped bookkeeping; the ``GlobalCache``
+pin/unpin/update_size hooks below are the trace-simulator twins of the
+two semantics that integration made necessary — refcount pinning (shared
+KV pages must never be victimized out from under a live sequence) and an
+external size feed (compressed page bytes arrive from the device-side
+codec, not from the trace) — so policy experiments here can model the
+serving constraints.
 
 Pure Python/NumPy; the unit is one cache "block" with a compressed size in
 bytes (segmented like the hardware: ceil(size/segment) segments).
@@ -50,6 +57,7 @@ class Block:
     last_use: int = 0
     reuse_ctr: int = 0         # V-Way Reuse Replacement counter
     region: int = 0
+    pins: int = 0              # refcount: pinned blocks are never evicted
 
     def segments(self, seg: int) -> int:
         return max(1, math.ceil(self.size / seg))
@@ -271,9 +279,37 @@ class GlobalCache:
             return (b.reuse_ctr + 1) / _pow2_bucket(b.size)
         return float(b.reuse_ctr)
 
-    def _evict(self, need_segments: int) -> None:
+    # -- refcount pinning + external size feed -------------------------------
+    #
+    # Trace-side model of the two live-serving semantics the prefix cache
+    # (serving/prefix_cache.py) layers onto SIP/CAMP scoring: blocks
+    # referenced by running sequences must not be victimized (pin/unpin),
+    # and a block's compressed size is only known once the device-side
+    # page-fill codec reports it (update_size).
+
+    def pin(self, addr: int) -> None:
+        """Pin a block: excluded from victim selection until unpinned."""
+        self.blocks[addr].pins += 1
+
+    def unpin(self, addr: int) -> None:
+        b = self.blocks[addr]
+        assert b.pins > 0, f"unpin of unpinned block {addr:#x}"
+        b.pins -= 1
+
+    def update_size(self, addr: int, size: int) -> None:
+        """External size feed: re-cost a resident block (e.g. when the
+        device-side compressor reports the real compressed byte count)."""
+        b = self.blocks[addr]
+        self.used_segments -= b.segments(self.segment)
+        b.size = size
+        self.used_segments += b.segments(self.segment)
+        # shrink back under capacity if it grew; no tag is being added,
+        # so a full tag store alone must not trigger an eviction here
+        self._evict(0, need_tags=0)
+
+    def _evict(self, need_segments: int, need_tags: int = 1) -> None:
         while (self.used_segments + need_segments > self.capacity_segments
-               or len(self.blocks) >= self.max_tags):
+               or len(self.blocks) + need_tags > self.max_tags):
             if not self.blocks:
                 return
             # scan a window of up to 64 candidates starting at the rotating
@@ -283,7 +319,12 @@ class GlobalCache:
             n = len(vals)
             start = self._hand % n
             cand = [vals[(start + i) % n] for i in range(min(64, n))]
-            victim = min(cand, key=self._value)
+            pool = [b for b in cand if b.pins == 0]
+            if not pool:
+                pool = [b for b in vals if b.pins == 0]
+                if not pool:
+                    return      # everything pinned: caller keeps the overflow
+            victim = min(pool, key=self._value)
             for b in cand:
                 if b is not victim and b.reuse_ctr > 0:
                     b.reuse_ctr -= 1

@@ -14,7 +14,12 @@ instead, for A/B timing.
 arrivals (``--arrival-stagger`` iterations apart), admitted/retired
 between iterations, and prefill chunks piggyback on decode steps under
 ``--token-budget``; the report adds per-request TTFT and latency in
-scheduler iterations.
+scheduler iterations.  ``--prefix-cache`` attaches the SIP-guided
+compressed prefix cache (``serving/prefix_cache.py``) so requests
+sharing a prompt prefix share KV pages (pair with ``--shared-prefix N``
+for a system-prompt workload; the per-request report shows cached
+tokens), and ``--requeue-preempted`` turns CAMP preemptions into
+recompute-from-prompt requeues instead of terminal retirements.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
@@ -38,7 +43,9 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              paged: bool = False, paged_reference: bool = False,
              prefill_chunk: int | None = None,
              scheduler: bool = False, token_budget: int = 64,
-             arrival_stagger: int = 2) -> dict:
+             arrival_stagger: int = 2, prefix_cache: bool = False,
+             shared_prefix: int = 0,
+             requeue_preempted: bool = False) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -50,10 +57,24 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
 
     if scheduler:
         from repro.serving.engine import PagedKVEngine
+        from repro.serving.prefix_cache import PrefixCache
         from repro.serving.scheduler import ContinuousScheduler
+        cache = (PrefixCache.for_model(cfg, 8) if prefix_cache else None)
         eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
-                            max_batch=batch, prefill_chunk=prefill_chunk)
-        sched = ContinuousScheduler(eng, token_budget=token_budget)
+                            max_batch=batch, prefill_chunk=prefill_chunk,
+                            prefix_cache=cache)
+        sched = ContinuousScheduler(eng, token_budget=token_budget,
+                                    requeue_preempted=requeue_preempted)
+        # shared system prompt: every request reuses the first
+        # ``shared_prefix`` prompt tokens (prefix-cache showcase)
+        if shared_prefix:
+            assert shared_prefix <= prompt_len, \
+                (f"--shared-prefix {shared_prefix} exceeds --prompt-len "
+                 f"{prompt_len}")
+            sys_toks = prompts[0][:shared_prefix]
+            prompts = jnp.concatenate(
+                [jnp.tile(sys_toks[None], (batch, 1)),
+                 prompts[:, shared_prefix:]], axis=1)
         arrivals = {b: b * arrival_stagger for b in range(batch)}
         t0 = time.time()
         pending = dict(arrivals)
@@ -67,15 +88,23 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         dt = time.time() - t0
         fin = sched.finished()
         outs = [fin[b].out_tokens for b in range(batch)]
-        report = {b: {"ttft_iters": fin[b].first_token_iter
-                      - arrivals[b],
+        # first_token_iter stays None when a request retires preempted
+        # before emitting anything (e.g. past the requeue limit)
+        report = {b: {"ttft_iters": (fin[b].first_token_iter - arrivals[b]
+                                     if fin[b].first_token_iter is not None
+                                     else None),
                       "latency_iters": fin[b].finished_iter - arrivals[b],
+                      "cached_tokens": fin[b].pf_start,
                       "reason": fin[b].finish_reason}
                   for b in range(batch)}
-        return {"tokens": outs, "kv_compression_ratio":
-                eng.compression_ratio(), "stats": eng.stats,
-                "sched_stats": sched.stats, "per_request": report,
-                "tok_per_s": sum(len(o) for o in outs) / dt}
+        out = {"tokens": outs, "kv_compression_ratio":
+               eng.compression_ratio(), "stats": eng.stats,
+               "sched_stats": sched.stats, "per_request": report,
+               "tok_per_s": sum(len(o) for o in outs) / dt}
+        if cache is not None:
+            out["prefix_cache"] = dict(cache.stats,
+                                       hit_rate=round(cache.hit_rate(), 3))
+        return out
 
     if paged or paged_reference:
         reqs = {b: [int(t) for t in prompts[b]] for b in range(batch)}
@@ -139,13 +168,26 @@ def main() -> None:
     ap.add_argument("--arrival-stagger", type=int, default=2,
                     help="iterations between request arrivals "
                          "(scheduler mode)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="SIP-guided compressed prefix cache: share "
+                         "prompt-prefix KV pages across requests "
+                         "(scheduler mode)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make every request share its first N prompt "
+                         "tokens (system-prompt workload; scheduler mode)")
+    ap.add_argument("--requeue-preempted", action="store_true",
+                    help="CAMP-preempted requests re-enter the queue "
+                         "with recompute-from-prompt instead of retiring")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
                    paged_reference=args.paged_reference,
                    prefill_chunk=args.prefill_chunk,
                    scheduler=args.scheduler, token_budget=args.token_budget,
-                   arrival_stagger=args.arrival_stagger)
+                   arrival_stagger=args.arrival_stagger,
+                   prefix_cache=args.prefix_cache,
+                   shared_prefix=args.shared_prefix,
+                   requeue_preempted=args.requeue_preempted)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
@@ -155,7 +197,10 @@ def main() -> None:
         print(f"[serve] scheduler: {out['sched_stats']}")
         for rid, r in out["per_request"].items():
             print(f"[serve]   req {rid}: ttft {r['ttft_iters']} iters, "
-                  f"latency {r['latency_iters']} iters ({r['reason']})")
+                  f"latency {r['latency_iters']} iters, "
+                  f"{r['cached_tokens']} cached ({r['reason']})")
+    if "prefix_cache" in out:
+        print(f"[serve] prefix cache: {out['prefix_cache']}")
 
 
 if __name__ == "__main__":

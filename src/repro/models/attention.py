@@ -98,7 +98,8 @@ def gqa_kv(p: dict, x: jax.Array, positions: jax.Array,
     x [B, T, D] -> (k [B, T, K, Dh] roped, v [B, T, K, Dh]).  Serving
     engines and the model-stack prefill compute K/V here exactly once and
     hand the result both to :func:`gqa_forward` (via ``kv=``) and to the
-    cache/page write path.
+    cache/page write path.  ``positions`` is [T] (shared by the batch) or
+    [B, T] (per-row, e.g. the paged engine's per-row prefill offsets).
     """
     k = L.linear(p["wk"], x)                         # [B, T, K, Dh]
     v = L.linear(p["wv"], x)
@@ -107,7 +108,9 @@ def gqa_kv(p: dict, x: jax.Array, positions: jax.Array,
     if theta > 0:
         dh = k.shape[-1]
         cos_k, sin_k = L.rope_angles(positions, dh, theta)
-        k = L.apply_rope(k, cos_k[None, :, None, :], sin_k[None, :, None, :])
+        if positions.ndim == 1:
+            cos_k, sin_k = cos_k[None], sin_k[None]
+        k = L.apply_rope(k, cos_k[:, :, None, :], sin_k[:, :, None, :])
     return k, v
 
 

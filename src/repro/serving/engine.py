@@ -22,12 +22,29 @@ single batched step (:func:`_decode_step`): all active sequences and all
 layers advance one token per dispatch.
 
 Prefill keeps an exact f32 K/V scratch for the duration of the prompt
-(intra-prompt attention must read uncompressed values to stay
-token-for-token with the oracle); every page a chunk completes is
-compressed and scattered into the device pools by the same batched
-page-fill dispatch decode uses, and the final partial page lands in the
-decode tail buffers.  No per-sequence host round-trips of KV data on
-either path.
+and attends under the **canonical-prefix contract** (shared with decode
+and the reference oracle; see serving/prefix_cache.py): each query reads
+the compress-then-dequantize round trip of every completed earlier page
+and exact values inside its own partial page.  That makes every
+published page a pure function of the token prefix it covers —
+independent of chunking, batching, or scheduling — which is what lets
+the **prefix cache** share pages across requests with bit-identical
+output.  Every page a chunk completes is compressed and scattered into
+the device pools by the same batched page-fill dispatch decode uses
+(and, when a :class:`~repro.serving.prefix_cache.PrefixCache` is
+attached, registered there for cross-request reuse); the final partial
+page lands in the decode tail buffers.  No per-sequence host round-trips
+of KV data on either path.
+
+With a prefix cache attached, admission looks up each prompt's longest
+cached page-boundary prefix, pins the entry chain, maps the shared pool
+pages straight into the new sequence's page table, and starts chunked
+prefill at the first uncached boundary — cohort members carry **per-row
+start offsets** through one shared relative chunk grid, so warm and cold
+prompts mix in the same static-shape dispatch.  Prefill stores KV for
+every prompt token but the last: the first decode step computes the last
+prompt token's K/V exactly once into the tail (this fixed the historical
+"duplicated last prompt key" oracle quirk — see serving/README.md).
 
   * The per-layer compressed page pools (``kd/kb/ks/vd/vb/vs``) live as
     device ``jnp`` arrays for the whole engine lifetime; page publishes
@@ -77,7 +94,7 @@ slightly different times.  That is inherent to batching, not a bug.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +105,8 @@ from repro.kernels import ops, ref
 from repro.kernels.paged_attention import paged_attention_tail
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.serving.prefix_cache import (PrefixCache, canonical_update,
+                                        prefix_chunk_attention)
 
 
 @dataclass
@@ -100,26 +119,39 @@ class Sequence:
     done: bool = False
     preempted: bool = False
     prefilling: bool = False             # in-flight admission cohort member
+    # prefix-cache chain: entry ids whose pages this sequence maps, in
+    # block order.  pages[li][:len(chain)] are shared (cache-owned);
+    # the rest are private and freed on release/preemption.
+    chain: list[int] = field(default_factory=list)
 
 
 @dataclass
 class _Cohort:
     """In-flight chunked-prefill admission cohort.
 
-    All members share one chunk grid: every dispatch advances the cohort
-    offset by up to ``prefill_chunk`` tokens (less when the scheduler's
-    token budget splits a chunk).  ``toks`` is the host-side zero-padded
-    prompt buffer; ``kscr/vscr`` the device-resident exact f32 K/V
-    scratch; ``pub[i]`` counts pages already published for ``seqs[i]``;
-    ``done_sids`` tracks members whose prefill completed (tail written).
+    All members share one *relative* chunk grid: every dispatch advances
+    the grid offset ``roff`` by up to ``prefill_chunk`` tokens (less when
+    the scheduler's token budget splits a chunk).  Member ``i`` starts at
+    its own absolute offset ``starts[i]`` (its prefix-cache hit boundary,
+    0 when cold), so its chunk this dispatch covers absolute positions
+    ``starts[i] + roff ..`` — per-row offsets through one static-shape
+    dispatch.  ``toks`` is the host-side zero-padded prompt buffer
+    (absolute positions); ``kscr/vscr`` the device-resident exact f32 K/V
+    scratch (absolute positions; warm rows carry the dequantized cached
+    prefix below ``starts[i]``); ``pub[i]`` counts pages already
+    published or mapped for ``seqs[i]``; ``done_sids`` tracks members
+    whose prefill completed (tail written).
     """
     seqs: list[Sequence]
     row: dict[int, int]                  # sid -> scratch row
     toks: np.ndarray                     # [nrows, tmax] i32, host
-    kscr: jax.Array                      # [L, nrows, tmax, K, D] f32
+    kscr: jax.Array                      # [L, nrows, tmax, K, D] f32 exact
     vscr: jax.Array
-    maxlen: int                          # longest prompt in the cohort
-    off: int = 0                         # tokens prefilled so far (grid pos)
+    kcan: jax.Array                      # canonical (codec round-trip) view
+    vcan: jax.Array                      # of completed pages, same shape
+    starts: list[int]                    # absolute start offset per member
+    maxrel: int                          # grid length: max stored-start
+    roff: int = 0                        # relative grid offset
     pub: list[int] | None = None
     done_sids: set[int] | None = None
 
@@ -236,63 +268,87 @@ def _decode_step(params, pools, tk, tv, page_table, page_cnt,
                         use_fused=use_fused)
 
 
-def _prefill_core(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
-    """One chunked-batch prefill step: C prompt tokens per slot, all layers.
+def _row_update(scr, val, offs):
+    """Per-row dynamic_update_slice: scr [R, T, K, D] <- val [R, C, K, D]
+    at row-specific offsets offs [R] (pre-clamped to T - C by the host)."""
+    return jax.vmap(
+        lambda s, v, o: jax.lax.dynamic_update_slice(s, v, (o, 0, 0))
+    )(scr, val, offs)
+
+
+def _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs, *,
+                  cfg: ArchConfig, page: int):
+    """One chunked-batch prefill step: C prompt tokens per row, all layers.
 
     tokens i32 [R, C] (one scratch row per admitted prompt, zero-padded);
-    off i32 scalar — the chunk's start position, shared by every row (the
-    chunk grid is uniform, so no per-row position table is needed; padded
-    rows compute masked garbage that is never published).  kscr/vscr f32
-    [L, R, Tmax, K, D] are the donated *exact* (uncompressed) K/V scratch
-    of previously processed chunks: intra-prefill attention must read
-    exact values to stay token-for-token with the full-sequence oracle —
-    page compression is applied only on publish, as in the reference.
+    offs i32 [R] — each row's absolute chunk start (``starts[i] + roff``:
+    rows advance one shared relative grid from per-row start offsets, so
+    warm prefix-cache hits and cold prompts mix in one static dispatch;
+    padded rows compute masked garbage that is never published).
+    kscr/vscr f32 [L, R, Tmax, K, D] are the donated *exact* f32 K/V
+    scratch, absolute-indexed; kcan/vcan its carried canonical view
+    (codec round trip of completed pages; warm rows carry the
+    dequantized cached prefix, filled at admission and never
+    re-compressed).
 
-    One ``lax.scan`` over the stacked layer params computes each layer's
-    K/V projection exactly once (shared via ``gqa_forward(kv=...)``
-    between the scratch write and attention).  Returns the updated
-    scratch; page extraction/compression happens in follow-up dispatches
-    (:func:`_gather_prefill_blocks` + :func:`_publish_blocks`).
+    Attention follows the canonical-prefix contract (see
+    serving/prefix_cache.py): each query reads the canonical values of
+    every completed earlier page and exact values inside its own page —
+    chunk-layout-independent, which keeps warm/cold and chunked/blocking
+    paths token-for-token identical.  Only the window of pages the chunk
+    touches is re-round-tripped (``canonical_update``), so per-prompt
+    canonicalization work is O(T), not O(T^2 / chunk).  Returns the
+    updated scratch + canonical view; page extraction/compression
+    happens in follow-up dispatches (:func:`_gather_prefill_blocks` +
+    :func:`_publish_blocks`).
     """
-    s, c = tokens.shape
-    tmax = kscr.shape[2]
-    x = L.embed(params["embed"], tokens)                     # [S, C, D]
-    qpos = off + jnp.arange(c, dtype=jnp.int32)              # [C]
-    kpos = jnp.arange(tmax, dtype=jnp.int32)                 # [Tmax]
+    r, c = tokens.shape
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    x = L.embed(params["embed"], tokens)                     # [R, C, D]
+    qpos = offs[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    cos, sin = L.rope_angles(qpos, dh, cfg.rope_theta)       # [R, C, dh/2]
+    cos_b, sin_b = cos[:, :, None, :], sin[:, :, None, :]
 
     def body(x, xs):
-        bp, kscr_l, vscr_l = xs
+        bp, kscr_l, vscr_l, kcan_l, vcan_l = xs
         h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        # one K/V projection per layer through the shared path (per-row
+        # positions), feeding both the scratch write and attention
         k, v = A.gqa_kv(bp["attn"], h, qpos, theta=cfg.rope_theta)
-        kscr_l = jax.lax.dynamic_update_slice(
-            kscr_l, k.astype(jnp.float32), (0, off, 0, 0))
-        vscr_l = jax.lax.dynamic_update_slice(
-            vscr_l, v.astype(jnp.float32), (0, off, 0, 0))
-        # causal mask over the scratch covers both earlier chunks
-        # (kpos < off) and the current chunk (kpos <= qpos); slots past
-        # off + C hold zeros/garbage with kpos > qpos, so they mask out.
-        x = x + A.gqa_forward(bp["attn"], h, qpos, theta=cfg.rope_theta,
-                              kv=(kscr_l, vscr_l), kv_positions=kpos)
+        q = L.apply_rope(L.linear(bp["attn"]["wq"], h), cos_b, sin_b)
+        kscr_l = _row_update(kscr_l, k.astype(jnp.float32), offs)
+        vscr_l = _row_update(vscr_l, v.astype(jnp.float32), offs)
+        kcan_l, vcan_l = canonical_update(kscr_l, vscr_l, kcan_l, vcan_l,
+                                          offs, page, c + page)
+        hq = q.shape[2]
+        qg = q.reshape(r, c, kvh, hq // kvh, dh).astype(jnp.float32)
+        ctx = prefix_chunk_attention(qg, qpos, kscr_l, vscr_l, kcan_l,
+                                     vcan_l, page)
+        x = x + A._proj_out(bp["attn"], ctx.reshape(r, c, hq, dh)
+                            .astype(x.dtype))
         h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
         x = x + L.mlp(bp["ffn"], h2)
-        return x, (kscr_l, vscr_l)
+        return x, (kscr_l, vscr_l, kcan_l, vcan_l)
 
-    _, (kscr, vscr) = jax.lax.scan(
-        body, x, (params["blocks"], kscr, vscr))
-    return kscr, vscr
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2, 3))
-def _prefill_chunk(params, tokens, kscr, vscr, off, *, cfg: ArchConfig):
-    """Prefill-only dispatch (no decode step riding along)."""
-    return _prefill_core(params, tokens, kscr, vscr, off, cfg=cfg)
+    _, (kscr, vscr, kcan, vcan) = jax.lax.scan(
+        body, x, (params["blocks"], kscr, vscr, kcan, vcan))
+    return kscr, vscr, kcan, vcan
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_fused"),
+@functools.partial(jax.jit, static_argnames=("cfg", "page"),
                    donate_argnums=(2, 3, 4, 5))
-def _mixed_step(params, pools, tk, tv, kscr, vscr, page_table, page_cnt,
-                last_tok, pos, tail_len, active, ptoks, off, *,
-                cfg: ArchConfig, use_fused: bool):
+def _prefill_chunk(params, tokens, kscr, vscr, kcan, vcan, offs, *,
+                   cfg: ArchConfig, page: int):
+    """Prefill-only dispatch (no decode step riding along)."""
+    return _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs,
+                         cfg=cfg, page=page)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page", "use_fused"),
+                   donate_argnums=(2, 3, 4, 5, 6, 7))
+def _mixed_step(params, pools, tk, tv, kscr, vscr, kcan, vcan, page_table,
+                page_cnt, last_tok, pos, tail_len, active, ptoks, offs, *,
+                cfg: ArchConfig, page: int, use_fused: bool):
     """Sarathi-style mixed iteration: one decode step for every active
     batch slot **plus** one prefill chunk for the in-flight admission
     cohort, in a single jitted dispatch.
@@ -302,13 +358,52 @@ def _mixed_step(params, pools, tk, tv, kscr, vscr, page_table, page_cnt,
     fused computation — the prefill chunk piggybacks on the decode
     iteration instead of stalling it.  All shapes are static given
     (max_batch, PMAX, cohort scratch size, prefill_chunk), so admitting
-    and retiring requests between steps never retraces.
+    and retiring requests between steps never retraces; per-row prefill
+    offsets arrive as traced data, so prefix-cache hit boundaries don't
+    retrace either.
     """
     nxt, tk, tv = _decode_core(params, pools, tk, tv, page_table, page_cnt,
                                last_tok, pos, tail_len, active, cfg=cfg,
                                use_fused=use_fused)
-    kscr, vscr = _prefill_core(params, ptoks, kscr, vscr, off, cfg=cfg)
-    return nxt, tk, tv, kscr, vscr
+    kscr, vscr, kcan, vcan = _prefill_core(
+        params, ptoks, kscr, vscr, kcan, vcan, offs, cfg=cfg, page=page)
+    return nxt, tk, tv, kscr, vscr, kcan, vcan
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _fill_warm_scratch(kscr, vscr, kcan, vcan, pools, wpt, wlen):
+    """Dequantize cached prefix pages into the scratch warm regions.
+
+    kscr/vscr/kcan/vcan [L, R, T, K, D] (donated); wpt i32 [L, R, WP]
+    per-layer pool ids of each row's cached prefix chain (0-padded);
+    wlen i32 [R] cached token count (page-aligned).  The written values
+    are exactly what decode-side paged attention reads for those pages —
+    canonical by construction — so both the exact scratch and the
+    canonical view receive them verbatim, and ``canonical_update`` never
+    re-compresses the warm region (its windows start at or after the hit
+    boundary).
+    """
+    lyr, r, t, kvh, dh = kscr.shape
+    wp = wpt.shape[2]
+    page = pools.kd.shape[3]
+
+    def deq(dq, b, s):
+        x = jax.vmap(lambda d_l, b_l, s_l, pt_l:
+                     ref.dequant_pages(d_l[pt_l], b_l[pt_l], s_l[pt_l])
+                     )(dq, b, s, wpt)                 # [L, R, WP, K, pg, D]
+        return jnp.moveaxis(x, 3, 4).reshape(lyr, r, wp * page, kvh, dh)
+
+    kw = deq(pools.kd, pools.kb, pools.ks)
+    vw = deq(pools.vd, pools.vb, pools.vs)
+    m = (jnp.arange(wp * page) < wlen[:, None])[None, :, :, None, None]
+    out = []
+    for buf in (kscr, kcan):
+        out.append(buf.at[:, :, :wp * page].set(
+            jnp.where(m, kw, buf[:, :, :wp * page])))
+    for buf in (vscr, vcan):
+        out.append(buf.at[:, :, :wp * page].set(
+            jnp.where(m, vw, buf[:, :, :wp * page])))
+    return out[0], out[2], out[1], out[3]
 
 
 def _scratch_blocks(kscr, vscr, rows, blks, page: int):
@@ -415,12 +510,18 @@ class PagedKVEngine:
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
                  n_pool_pages: int = 256, max_batch: int = 32,
                  use_fused: bool | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 prefix_cache: PrefixCache | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
+        if prefix_cache is not None:
+            assert prefix_cache.page == page_size \
+                and prefix_cache.n_layers == cfg.n_layers, \
+                "prefix cache shape disagrees with the engine"
         self.cfg = cfg
         self.params = params
         self.page = page_size
         self.max_batch = max_batch
+        self.prefix_cache = prefix_cache
         # chunked-prefill step width (tokens per slot per dispatch); must
         # stay page-aligned so every chunk completes whole pages
         self.prefill_chunk = (2 * page_size if prefill_chunk is None
@@ -453,7 +554,7 @@ class PagedKVEngine:
         self._cohort: _Cohort | None = None
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "prefix_pages_evicted": 0}
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -462,26 +563,64 @@ class PagedKVEngine:
         return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
 
     def _reserve_pages(self, n: int) -> list[int]:
+        """Reclaim order under pool pressure: free list, then retained
+        prefix-cache entries (SIP victim ranking — they are speculative
+        state), then CAMP preemption of the least-valuable live sequence
+        (which unpins its shared chain, possibly feeding the next round
+        of cache eviction)."""
         while len(self.free) < n:
-            self._preempt_one()
+            if not self._evict_prefix_pages(n - len(self.free)):
+                self._preempt_one()
         return [self.free.pop() for _ in range(n)]
 
+    def _evict_prefix_pages(self, need: int) -> bool:
+        if self.prefix_cache is None:
+            return False
+        pids = self.prefix_cache.evict_for(need)
+        if not pids:
+            return False
+        self.free.extend(pids)
+        self.stats["prefix_pages_evicted"] += len(pids)
+        return True
+
     def _seq_value(self, seq: Sequence) -> float:
-        """CAMP/MVE value: reuse proxy / compressed size (smaller = victim)."""
+        """CAMP/MVE value: reuse proxy / *reclaimable* compressed size
+        (smaller = victim).  Shared prefix pages count only when this
+        sequence is their sole pinner — preempting it then drops them to
+        refcount 0 (evictable next reclaim round); pages still pinned by
+        another sharer free nothing, so they must not make a warm
+        sequence look like a cheap victim."""
         if seq.done:
             return -1.0
-        size = sum(int(self.page_bytes[p]) for lp in seq.pages for p in lp)
+        ns = len(seq.chain)
+        size = sum(int(self.page_bytes[p])
+                   for lp in seq.pages for p in lp[ns:])
+        for eid in seq.chain:
+            e = self.prefix_cache.entries[eid]
+            if e.refcount == 1:
+                size += e.nbytes
         return (len(seq.tokens) + 1) / max(size, 1)
+
+    def _drop_seq_pages(self, seq: Sequence, *, count_evicted: bool) -> None:
+        """Detach a sequence from its pages: free the private ones, unpin
+        the shared prefix chain (cache-owned pages stay resident — other
+        sequences may map them; refcount-0 entries become evictable)."""
+        ns = len(seq.chain)
+        for lp in seq.pages:
+            self.free.extend(lp[ns:])
+            if count_evicted:
+                self.stats["pages_evicted"] += len(lp) - ns
+        if seq.chain:
+            self.prefix_cache.release(seq.chain)
+            seq.chain = []
+        seq.pages = [[] for _ in range(self.cfg.n_layers)]
 
     def _preempt_one(self) -> None:
         cands = [s for s in self.seqs.values()
                  if any(s.pages[li] for li in range(self.cfg.n_layers))]
         assert cands, "pool exhausted with nothing evictable"
         victim = min(cands, key=self._seq_value)
-        for lp in victim.pages:
-            self.free.extend(lp)
-            self.stats["pages_evicted"] += len(lp)
-        victim.pages = [[] for _ in range(self.cfg.n_layers)]
+        self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
         self._pt_dirty = True
@@ -520,15 +659,16 @@ class PagedKVEngine:
     # -- request lifecycle -----------------------------------------------------
 
     def release(self, sid: int) -> None:
-        """Retire a request: free its pool pages and recycle its slot."""
+        """Retire a request: free its private pool pages, unpin its shared
+        prefix chain (those pages stay cache-retained for the next request
+        that shares the prefix), and recycle its slot."""
         seq = self.seqs.pop(sid)
         # a live cohort member cannot be released mid-prefill (its scratch
         # row would keep publishing pages nobody owns); preempted members
         # are fine — their publishes are already dropped
         assert not (seq.prefilling and not seq.preempted), \
             f"sid {sid} is mid-prefill; cannot release"
-        for lp in seq.pages:
-            self.free.extend(lp)
+        self._drop_seq_pages(seq, count_evicted=False)
         self._free_slots.append(seq.slot)
         self._pt_dirty = True
 
@@ -548,15 +688,22 @@ class PagedKVEngine:
         while self._cohort is not None:
             self.mixed_step(decode_sids=[], pf_tokens=self.prefill_chunk)
 
-    def begin_cohort(self, prompts: dict[int, list[int]]) -> None:
+    def begin_cohort(self, prompts: dict[int, list[int]]
+                     ) -> dict[int, int]:
         """Admit prompts into a chunked-prefill cohort without running it.
+
+        With a prefix cache attached, each prompt's longest cached
+        page-boundary prefix is looked up, pinned, and mapped into the
+        new sequence's page table; the member starts chunked prefill at
+        the first uncached boundary (full hits skip prefill entirely and
+        are decodable immediately).  Returns ``{sid: cached_tokens}``.
 
         Allocates batch slots and the cohort's exact-K/V scratch; no
         model compute happens until :meth:`mixed_step` is called with a
-        nonzero ``pf_tokens``.  All cohort members share one chunk grid
-        (uniform offset), which is what keeps the mixed dispatch's shapes
-        static; requests arriving while a cohort is in flight wait for
-        the next cohort.
+        nonzero ``pf_tokens``.  All cohort members share one *relative*
+        chunk grid from their per-row start offsets, which keeps the
+        mixed dispatch's shapes static; requests arriving while a cohort
+        is in flight wait for the next cohort.
         """
         # a cohort whose live members all finished (the rest preempted)
         # may still be nominally in flight; clear it before validating
@@ -569,23 +716,45 @@ class PagedKVEngine:
         for sid, prompt in prompts.items():
             assert sid not in self.seqs, sid
             assert prompt, f"empty prompt for sid {sid}"
+        cached: dict[int, int] = {}
         if not prompts:
-            return
-        cfg, chunk = self.cfg, self.prefill_chunk
+            return cached
+        cfg, chunk, page = self.cfg, self.prefill_chunk, self.page
         lyr, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        seqs = []
+        seqs, starts = [], []
         for sid, prompt in prompts.items():
+            start, chain = 0, []
+            if self.prefix_cache is not None:
+                start, chain = self.prefix_cache.lookup(prompt)
+                self.prefix_cache.pin(chain)
+            ent = [self.prefix_cache.entries[e] for e in chain]
             seq = Sequence(sid=sid, slot=self._free_slots.pop(),
                            tokens=list(prompt),
-                           pages=[[] for _ in range(lyr)], prefilling=True)
+                           pages=[[e.pages[li] for e in ent]
+                                  for li in range(lyr)],
+                           chain=list(chain), prefilling=True)
             self.seqs[sid] = seq
+            cached[sid] = start
+            if start >= len(prompt) - 1:
+                # full prefix hit: every stored token is already paged in
+                # — no prefill work, straight to decode (tail is empty:
+                # a full hit implies the stored length is page-aligned)
+                seq.prefilling = False
+                continue
             seqs.append(seq)
-        maxlen = max(len(s.tokens) for s in seqs)
-        # scratch length: one chunk of headroom past the longest prompt so
-        # a budget-split (non-chunk-aligned) offset never pushes the
-        # static-width scratch write out of bounds, rounded up to a
+            starts.append(start)
+        self._pt_dirty = True
+        if not seqs:
+            return cached
+        # the grid covers *stored* positions only (prompt minus the last
+        # token, whose K/V the first decode step computes into the tail)
+        maxstored = max(len(s.tokens) - 1 for s in seqs)
+        maxrel = max(len(s.tokens) - 1 - st for s, st in zip(seqs, starts))
+        # scratch length: one chunk of headroom past the longest stored
+        # prefix so a budget-split (non-chunk-aligned) offset never pushes
+        # the static-width scratch write out of bounds, rounded up to a
         # power-of-two chunk count so retraces stay logarithmic
-        n_chunks = -(-maxlen // chunk) + 1
+        n_chunks = -(-maxstored // chunk) + 1
         cap = 1
         while cap < n_chunks:
             cap *= 2
@@ -604,9 +773,36 @@ class PagedKVEngine:
             toks[row[s.sid], :len(s.tokens)] = s.tokens
         kscr = jnp.zeros((lyr, nrows, tmax, kvh, dh), jnp.float32)
         vscr = jnp.zeros_like(kscr)
+        kcan = jnp.zeros_like(kscr)
+        vcan = jnp.zeros_like(kscr)
+        if any(starts):
+            # dequantize each warm row's cached chain into its scratch
+            # prefix region (canonical by construction); WP rounds up to
+            # a power of two so retraces stay logarithmic, capped at the
+            # scratch's page count (starts <= maxstored < tmax, so the
+            # cap never cuts below the deepest chain — without it a
+            # non-power-of-two prefill_chunk/page ratio could push the
+            # fill block past the scratch length)
+            wp = 1
+            while wp < max(starts) // page:
+                wp *= 2
+            wp = min(wp, tmax // page)
+            wpt = np.zeros((lyr, nrows, wp), np.int32)
+            wlen = np.zeros(nrows, np.int32)
+            for s, st in zip(seqs, starts):
+                r = row[s.sid]
+                wlen[r] = st
+                for li in range(lyr):
+                    wpt[li, r, :st // page] = s.pages[li][:st // page]
+            kscr, vscr, kcan, vcan = _fill_warm_scratch(
+                kscr, vscr, kcan, vcan, self.pools, jnp.asarray(wpt),
+                jnp.asarray(wlen))
         self._cohort = _Cohort(seqs=seqs, row=row, toks=toks, kscr=kscr,
-                               vscr=vscr, maxlen=maxlen,
-                               pub=[0] * len(seqs), done_sids=set())
+                               vscr=vscr, kcan=kcan, vcan=vcan,
+                               starts=starts, maxrel=maxrel,
+                               pub=[st // page for st in starts],
+                               done_sids=set())
+        return cached
 
     def _maybe_drop_cohort(self) -> None:
         """Retire the cohort early when no live member still needs it.
@@ -627,16 +823,18 @@ class PagedKVEngine:
         """Post-dispatch cohort bookkeeping for an ``n``-token advance.
 
         Publishes every page the chunk completed (CAMP accounting rides
-        on the same batched publish path decode uses), writes the final
-        partial page of members whose prefill just finished into their
-        decode tail slots, and retires the cohort when the grid drains.
-        Returns the sids whose prefill completed this step.
+        on the same batched publish path decode uses; prompt pages also
+        register in the prefix cache), writes the final partial page of
+        members whose prefill just finished into their decode tail slots,
+        and retires the cohort when the relative grid drains.  Returns
+        the sids whose prefill completed this step.
         """
         co, page = self._cohort, self.page
-        new_off = min(co.off + n, co.maxlen)
+        new_roff = min(co.roff + n, co.maxrel)
         entries = []
         for i, s in enumerate(co.seqs):
-            upto = min(new_off, len(s.tokens)) // page
+            stored = len(s.tokens) - 1
+            upto = min(co.starts[i] + new_roff, stored) // page
             entries.extend((s, blk) for blk in range(co.pub[i], upto))
             co.pub[i] = max(co.pub[i], upto)
         if entries:
@@ -645,18 +843,21 @@ class PagedKVEngine:
             blks = jnp.asarray([b for _, b in entries], jnp.int32)
             kb, vb = _gather_prefill_blocks(co.kscr, co.vscr, rows, blks,
                                             page=page)
-            self._publish(kb, vb, [s for s, _ in entries])
+            self._publish(kb, vb, [s for s, _ in entries],
+                          blocks=[b for _, b in entries])
         completed, tails = [], []
-        for s in co.seqs:
-            if s.sid in co.done_sids or len(s.tokens) > new_off:
+        for i, s in enumerate(co.seqs):
+            stored = len(s.tokens) - 1
+            if s.sid in co.done_sids or co.starts[i] + new_roff < stored:
                 continue
             co.done_sids.add(s.sid)
             s.prefilling = False
             # final partial page -> decode tail buffers (exact f32, like
-            # the pool pages sourced from the same scratch)
-            s.tail_len = 0 if s.preempted else len(s.tokens) % page
+            # the pool pages sourced from the same scratch); the first
+            # decode step appends the last prompt token's K/V here
+            s.tail_len = 0 if s.preempted else stored % page
             if s.tail_len:
-                tails.append((s, len(s.tokens) // page))
+                tails.append((s, stored // page))
             completed.append(s.sid)
         if tails:
             rows = jnp.asarray([co.row[s.sid] for s, _ in tails], jnp.int32)
@@ -665,17 +866,27 @@ class PagedKVEngine:
             self.tail_k, self.tail_v = _write_tails(
                 self.tail_k, self.tail_v, co.kscr, co.vscr, rows, slots,
                 blks, page=page)
-        co.off = new_off
-        if new_off >= co.maxlen:
+        co.roff = new_roff
+        if new_roff >= co.maxrel:
             self._cohort = None
         return completed
 
-    def _publish(self, k_blocks, v_blocks, seqs: list[Sequence]) -> None:
+    def _publish(self, k_blocks, v_blocks, seqs: list[Sequence],
+                 blocks: list[int] | None = None) -> None:
         """Publish len(seqs) filled pages per layer in one dispatch.
 
         Blocks are layer-major: [L * len(seqs), K, page, D] with the
         sequence order of ``seqs`` repeating inside each layer group.
         A sequence may appear several times (one entry per page).
+
+        ``blocks[j]`` carries the absolute page index of entry ``j`` for
+        *prompt* publishes: those pages register in the prefix cache
+        (pinned by the publisher) so later requests can share them.  Two
+        same-prefix prompts in one cohort dedup here — the second
+        publisher's fresh pages go back to the free list and its page
+        table maps the first publisher's entry instead (the bits are
+        identical by the canonical-prefix contract).  Decode tail
+        publishes pass ``blocks=None`` and stay private.
 
         CAMP quirk fix (shared with the reference): pages owned by a
         sequence that is already preempted — or that becomes the victim
@@ -691,6 +902,8 @@ class PagedKVEngine:
                                for li in range(lyr) for j in keep])
             k_blocks, v_blocks = k_blocks[sel], v_blocks[sel]
             seqs = [seqs[j] for j in keep]
+            if blocks is not None:
+                blocks = [blocks[j] for j in keep]
         m = len(seqs)
         pids = self._reserve_pages(lyr * m)
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
@@ -703,6 +916,34 @@ class PagedKVEngine:
                 self.free.extend(pids[j::m])
                 continue
             self._record_publish(seq, pids[j::m], nbytes[j::m])
+            if blocks is not None and self.prefix_cache is not None:
+                self._register_prompt_page(seq, blocks[j], pids[j::m],
+                                           int(nbytes[j::m].sum()))
+
+    def _register_prompt_page(self, seq: Sequence, blk: int,
+                              pids: list[int], nbytes: int) -> None:
+        """Attach a freshly published prompt page to the prefix cache."""
+        page, cache = self.page, self.prefix_cache
+        assert blk == len(seq.chain), (blk, len(seq.chain))
+        parent = seq.chain[-1] if seq.chain else 0
+        toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
+        eid, created = cache.insert(parent, toks, pids, nbytes)
+        cache.pin([eid])
+        seq.chain.append(eid)
+        if not created:            # in-cohort dedup: map the shared pages
+            ent = cache.entries[eid]
+            for li in range(self.cfg.n_layers):
+                assert seq.pages[li][blk] == pids[li]
+                seq.pages[li][blk] = ent.pages[li]
+            self.free.extend(pids)
+            self._pt_dirty = True
+            # the duplicate never lands in the pool: reverse its
+            # _record_publish accounting so compression stats count each
+            # resident page once (mirrored in the reference oracle)
+            lyr = self.cfg.n_layers
+            self.stats["pages_compressed"] -= lyr
+            self.stats["bytes_raw"] -= self.page_raw_bytes() * lyr
+            self.stats["bytes_compressed"] -= nbytes
 
     # -- decode ------------------------------------------------------------------
 
@@ -736,30 +977,39 @@ class PagedKVEngine:
         # one dispatch advances at most one chunk (the static width of the
         # prefill half); larger pf_tokens would silently skip tokens
         n = 0 if co is None else max(0, min(pf_tokens, self.prefill_chunk,
-                                            co.maxlen - co.off))
+                                            co.maxrel - co.roff))
         if n > 0:
             c = self.prefill_chunk
             nrows, tmax = co.toks.shape
             ptoks_h = np.zeros((nrows, c), np.int32)
-            w = min(c, tmax - co.off)
-            ptoks_h[:, :w] = co.toks[:, co.off:co.off + w]
+            offs_h = np.zeros(nrows, np.int32)
+            for i, s in enumerate(co.seqs):
+                r = co.row[s.sid]
+                # per-row absolute chunk start; clamped so the static-
+                # width scratch write stays in bounds for rows already
+                # past their stored length (their writes are garbage the
+                # grid never publishes or attends)
+                off = min(co.starts[i] + co.roff, tmax - c)
+                offs_h[r] = off
+                ptoks_h[r] = co.toks[r, off:off + c]
             # budget-split chunk: tokens past the valid width are zero
             # padding — their scratch writes land beyond off+n and are
             # rewritten by the next chunk before any valid query (always
             # at a position < its own write offset) can attend them
             ptoks_h[:, n:] = 0
             ptoks = jnp.asarray(ptoks_h)
-            off_d = jnp.asarray(co.off, jnp.int32)
+            offs_d = jnp.asarray(offs_h)
         if sids:
             page_cnt, last_tok, pos, tail_len, active = \
                 self._decode_inputs(sids)
             if n > 0:
-                nxt, self.tail_k, self.tail_v, co.kscr, co.vscr = \
-                    _mixed_step(
-                        self.params, self.pools, self.tail_k, self.tail_v,
-                        co.kscr, co.vscr, self._page_table(), page_cnt,
-                        last_tok, pos, tail_len, active, ptoks, off_d,
-                        cfg=self.cfg, use_fused=self.use_fused)
+                (nxt, self.tail_k, self.tail_v, co.kscr, co.vscr,
+                 co.kcan, co.vcan) = _mixed_step(
+                    self.params, self.pools, self.tail_k, self.tail_v,
+                    co.kscr, co.vscr, co.kcan, co.vcan,
+                    self._page_table(), page_cnt, last_tok, pos,
+                    tail_len, active, ptoks, offs_d, cfg=self.cfg,
+                    page=self.page, use_fused=self.use_fused)
             else:
                 nxt, self.tail_k, self.tail_v = _decode_step(
                     self.params, self.pools, self.tail_k, self.tail_v,
@@ -769,9 +1019,9 @@ class PagedKVEngine:
         else:
             out = {}
             if n > 0:
-                co.kscr, co.vscr = _prefill_chunk(
-                    self.params, ptoks, co.kscr, co.vscr, off_d,
-                    cfg=self.cfg)
+                co.kscr, co.vscr, co.kcan, co.vcan = _prefill_chunk(
+                    self.params, ptoks, co.kscr, co.vscr, co.kcan,
+                    co.vcan, offs_d, cfg=self.cfg, page=self.page)
         # decode tail publishes land first (inside _decode_post), then the
         # chunk's completed prefill pages — the reference oracle replays
         # the same iteration order

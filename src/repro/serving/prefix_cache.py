@@ -1,0 +1,384 @@
+"""SIP-guided compressed prefix cache: cross-request sharing of KV pages.
+
+The serving-side realization of the thesis' second contribution (Chapter
+4): the Size-based Insertion Policy uses a block's *compressed size* as a
+reuse predictor.  Here the "blocks" are BDI-compressed KV pages already
+sitting in the engines' device pools, and the insight carries over
+directly — a prompt prefix that compresses well is exactly the one that
+is cheap to *retain* after its request finishes, so it should be kept
+for the next request that shares the prefix (the shared-system-prompt
+workload every production serving system sees).
+
+Three pieces live here:
+
+  * :class:`PrefixCache` — a page-granularity, content-addressed index
+    over completed compressed KV pages.  Entries form a trie keyed by
+    ``(parent, page_token_ids)``: the chained keys realize a rolling
+    hash of the token prefix ending at each page boundary, and the trie
+    edge comparison makes lookups exact (no collision risk).  One entry
+    spans all layers (``pages[li]`` = pool id of layer ``li``'s page),
+    because a token prefix determines every layer's KV.  Entries are refcounted:
+    live sequences pin the chain they map; ``refcount == 0`` entries are
+    *retained* — still resident in the pool, evictable under pressure.
+  * :class:`SIPRetention` — the victim-selection policy over retained
+    entries, reusing ``core/camp.py`` machinery: G-CAMP's value function
+    ``(reuse + priority + 1) / pow2_bucket(compressed_bytes)`` with SIP
+    size-bin priority learned from observed lookup hits.  Sizes are the
+    *device-reported* compressed byte counts fed by the engines' batched
+    page-fill codec.  Refcount pinning is absolute: a pinned entry is
+    never a victim (the serving twin of ``camp.GlobalCache.pin``).
+  * The **canonical-prefix attention** helpers shared by both engines
+    (:func:`canonical_update`, :func:`prefix_chunk_attention`).
+
+Canonical-prefix contract
+-------------------------
+Cross-request sharing is only sound if a page's content is a pure
+function of the token prefix it covers — independent of how the request
+that produced it was chunked, batched, or scheduled.  The engines
+guarantee this with one uniform attention rule, applied identically in
+prefill and decode:
+
+    a query at position ``p`` attends **canonical** K/V (the
+    compress-then-dequantize round trip of the exact values — bit-equal
+    to what decode reads from the pool) for every *completed earlier
+    page*, and **exact** f32 K/V for positions inside its own partial
+    page.
+
+Because each page's published bits depend only on the token prefix, a
+warm request that maps cached pages and starts prefill at the first
+uncached page boundary computes bit-identical suffix KV — and therefore
+bit-identical greedy tokens — to a cold request prefilling from scratch.
+Copy-on-write reduces to the partial tail: pages are immutable and
+shared read-only; only the sub-page tail is ever private to a sequence.
+
+Lifecycle (both engines speak the same protocol):
+
+    lookup(prompt) -> (n_cached_tokens, chain)   # longest page-boundary hit
+    pin(chain)                                   # refcount++ before mapping
+    insert(parent, toks, pages, nbytes)          # publish a prompt page
+    release(chain)                               # retire/preempt: refcount--
+    evict_for(n)                                 # pool pressure: SIP victims
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.camp import N_SIZE_BINS, _pow2_bucket, size_bin
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# canonical-prefix attention (shared by engine.py and reference.py)
+# ---------------------------------------------------------------------------
+
+def _roundtrip_window(kw: jax.Array, vw: jax.Array, page: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Compress-then-dequantize one [W, K, D] scratch window page-wise."""
+    w, kvh, d = kw.shape
+
+    def to_pages(x):
+        return jnp.swapaxes(x.reshape(w // page, page, kvh, d), 1, 2)
+
+    pg = ref.compress_kv_pages(to_pages(kw), to_pages(vw))
+
+    def back(dq, b, s):
+        return jnp.swapaxes(ref.dequant_pages(dq, b, s), 1, 2) \
+            .reshape(w, kvh, d)
+
+    return back(pg.kd, pg.kb, pg.ks), back(pg.vd, pg.vb, pg.vs)
+
+
+def canonical_update(kscr: jax.Array, vscr: jax.Array,
+                     kcan: jax.Array, vcan: jax.Array,
+                     offs: jax.Array, page: int, width: int
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Refresh the canonical view for the pages a chunk just touched.
+
+    kscr/vscr f32 [R, T, K, D] exact scratch; kcan/vcan its carried
+    canonical view (codec round trip of every completed page — what
+    decode-side paged attention reads); offs i32 [R] the chunk's per-row
+    start; ``width`` the static window span (chunk width + one page, so
+    it covers every page the chunk wrote, including a leading partial
+    one).  Only the window is recompressed — earlier pages' canonical
+    values are already resident (written when their chunk completed
+    them, or dequantized from the pool for a warm prefix) and
+    re-compressing them would both waste O(T) work per chunk and violate
+    the no-reroundtrip rule for warm pages (the codec is not assumed
+    idempotent).  Round-tripped values for pages the chunk left
+    incomplete are garbage, but attention only ever selects canonical
+    values for pages strictly before a query's own, which are complete.
+    """
+    kvh, d = kscr.shape[2], kscr.shape[3]
+    wstart = jnp.minimum((offs // page) * page, kscr.shape[1] - width)
+
+    def upd(ks, vs, kc, vc, w0):
+        kw = jax.lax.dynamic_slice(ks, (w0, 0, 0), (width, kvh, d))
+        vw = jax.lax.dynamic_slice(vs, (w0, 0, 0), (width, kvh, d))
+        kr, vr = _roundtrip_window(kw, vw, page)
+        return (jax.lax.dynamic_update_slice(kc, kr, (w0, 0, 0)),
+                jax.lax.dynamic_update_slice(vc, vr, (w0, 0, 0)))
+
+    return jax.vmap(upd)(kscr, vscr, kcan, vcan, wstart)
+
+
+def prefix_chunk_attention(q: jax.Array, qpos: jax.Array,
+                           kscr: jax.Array, vscr: jax.Array,
+                           kcan: jax.Array, vcan: jax.Array,
+                           page: int) -> jax.Array:
+    """Causal chunk attention under the canonical-prefix contract.
+
+    q f32 [R, C, K, G, D]; qpos i32 [R, C] absolute positions; kscr/vscr
+    the exact scratch [R, T, K, D]; kcan/vcan its canonical view (from
+    :func:`canonical_update`).  Each query reads canonical K/V for keys in
+    strictly earlier pages and exact K/V for keys inside its own page
+    (``kpos <= qpos``); everything else is masked.  Masked score slots
+    contribute exact zeros, so scratch padding is bit-invisible — the
+    property that keeps warm/cold and chunked/blocking paths identical.
+    """
+    r, c, kvh, g, d = q.shape
+    t = kscr.shape[1]
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    kpage = kpos // page                               # [T]
+    qpage = qpos // page                               # [R, C]
+    m_can = (kpage[None, None, :] < qpage[:, :, None])[:, :, None, None, :]
+    m_own = ((kpage[None, None, :] == qpage[:, :, None])
+             & (kpos[None, None, :] <= qpos[:, :, None]))[:, :, None, None, :]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s_c = jnp.einsum("rckgd,rtkd->rckgt", q, kcan) * scale
+    s_e = jnp.einsum("rckgd,rtkd->rckgt", q, kscr) * scale
+    sc = jnp.where(m_can, s_c, jnp.where(m_own, s_e, -jnp.inf))
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = (jnp.einsum("rckgt,rtkd->rckgd", jnp.where(m_can, w, 0.0), vcan)
+           + jnp.einsum("rckgt,rtkd->rckgd", jnp.where(m_own, w, 0.0),
+                        vscr))
+    # fusion barrier: without it XLA fuses the attention chain into the
+    # downstream rmsnorm/MLP cluster when this runs inside the engines'
+    # big jitted step, reassociating reductions and breaking bit-equality
+    # with the op-by-op reference oracle (the pre-prefix-cache code had
+    # the same barrier implicitly — its attention lived inside lax.map)
+    return jax.lax.optimization_barrier(ctx)
+
+
+# ---------------------------------------------------------------------------
+# SIP retention policy
+# ---------------------------------------------------------------------------
+
+class SIPRetention:
+    """Size-based retention priority over refcount-0 prefix entries.
+
+    The G-CAMP value function from ``core/camp.py`` — reuse divided by
+    the power-of-two size bucket of the *compressed* byte count — with
+    SIP's learned size-bin priority on top: every ``train_period``
+    lookups, size bins whose entries drew chain hits become high-priority
+    (insertion-time boost), the rest reset.  Victim = minimum value among
+    unpinned entries, FIFO insertion order as the deterministic tiebreak.
+    Before any training commits, compressed size alone ranks entries, so
+    highly-compressible pages are retained longest from the first evict.
+    """
+
+    PRIORITY_BOOST = 2
+
+    def __init__(self, raw_entry_bytes: int, train_period: int = 64):
+        assert raw_entry_bytes >= N_SIZE_BINS, raw_entry_bytes
+        self.line = raw_entry_bytes          # uncompressed entry size
+        self.train_period = train_period
+        self.priority = np.zeros(N_SIZE_BINS, dtype=bool)
+        self.hit_ctr = np.zeros(N_SIZE_BINS, dtype=np.int64)
+        self.lookups = 0
+
+    def bin(self, nbytes: int) -> int:
+        return size_bin(nbytes, self.line)
+
+    def on_hit(self, nbytes: int) -> None:
+        self.hit_ctr[self.bin(nbytes)] += 1
+
+    def on_lookup(self) -> None:
+        self.lookups += 1
+        if self.lookups % self.train_period == 0:
+            self.priority = self.hit_ctr > 0
+            self.hit_ctr[:] = 0
+
+    def value(self, hits: int, nbytes: int) -> float:
+        boost = self.PRIORITY_BOOST if self.priority[self.bin(nbytes)] else 0
+        return (hits + boost + 1) / _pow2_bucket(max(nbytes, 1))
+
+
+# ---------------------------------------------------------------------------
+# the cache
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Entry:
+    """One cached page boundary: all layers' pages for one token page."""
+    eid: int
+    parent: int                  # parent eid (0 = root)
+    depth: int                   # page/block index (boundary = (depth+1)*page)
+    toks: tuple[int, ...]        # this page's token ids (trie edge label)
+    pages: list[int] = field(default_factory=list)   # [L] pool ids
+    nbytes: int = 0              # device-reported compressed bytes, all layers
+    refcount: int = 0            # live sequences mapping this entry
+    children: int = 0            # resident child entries (evict leaf-first)
+    hits: int = 0                # chain-hit reuse counter (SIP/CAMP feed)
+    born: int = 0                # insertion clock (deterministic tiebreak)
+
+
+class PrefixCache:
+    """Content-addressed, refcounted cache of compressed prompt pages.
+
+    Host-side metadata only — the page *data* stays wherever the owning
+    engine keeps its pools (device jnp arrays for ``PagedKVEngine``,
+    numpy for the reference oracle); entries carry pool ids.  Each engine
+    instance owns one cache; sharing happens across *requests*, not
+    across engines.
+    """
+
+    def __init__(self, n_layers: int, page_size: int, raw_entry_bytes: int,
+                 policy: SIPRetention | None = None):
+        self.n_layers = n_layers
+        self.page = page_size
+        self.policy = policy or SIPRetention(raw_entry_bytes)
+        self.entries: dict[int, Entry] = {}
+        self._child: dict[tuple[int, tuple[int, ...]], int] = {}
+        self._next_eid = 1
+        self._clock = 0
+        self.stats = {"lookups": 0, "lookup_tokens": 0, "hits": 0,
+                      "hit_tokens": 0, "inserted": 0, "deduped": 0,
+                      "evicted": 0}
+
+    @classmethod
+    def for_model(cls, cfg, page_size: int, **kw) -> "PrefixCache":
+        """Cache sized for a model config (raw bytes = K+V bf16, all
+        layers, one page)."""
+        raw = 2 * page_size * cfg.n_kv_heads * cfg.head_dim * 2
+        return cls(cfg.n_layers, page_size, raw * cfg.n_layers, **kw)
+
+    # -- lookup / pin / release ---------------------------------------------
+
+    def lookup(self, prompt: list[int]) -> tuple[int, list[int]]:
+        """Longest cached page-boundary prefix of ``prompt``.
+
+        Returns ``(n_tokens, chain)``: the number of cached prompt tokens
+        (a multiple of ``page``) and the entry chain covering them.  The
+        walk is capped at ``len(prompt) - 1`` tokens — the engines store
+        KV for every prompt token but the last (whose K/V the first
+        decode step computes), so a deeper hit could never be consumed.
+        """
+        stored = len(prompt) - 1
+        page = self.page
+        chain: list[int] = []
+        parent = 0
+        b = 0
+        while (b + 1) * page <= stored:
+            toks = tuple(prompt[b * page:(b + 1) * page])
+            eid = self._child.get((parent, toks))
+            if eid is None:
+                break
+            chain.append(eid)
+            parent = eid
+            b += 1
+        self.stats["lookups"] += 1
+        self.stats["lookup_tokens"] += max(stored, 0)
+        if chain:
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += b * page
+            for eid in chain:
+                e = self.entries[eid]
+                e.hits += 1
+                self.policy.on_hit(e.nbytes)
+        self.policy.on_lookup()
+        return b * page, chain
+
+    def pin(self, chain: list[int]) -> None:
+        for eid in chain:
+            self.entries[eid].refcount += 1
+
+    def release(self, chain: list[int]) -> None:
+        for eid in chain:
+            e = self.entries[eid]
+            assert e.refcount > 0, f"release of unpinned entry {eid}"
+            e.refcount -= 1
+
+    # -- publish -------------------------------------------------------------
+
+    def insert(self, parent: int, toks: tuple[int, ...], pages: list[int],
+               nbytes: int) -> tuple[int, bool]:
+        """Register a freshly published prompt page.
+
+        ``pages`` are the pool ids (one per layer) the publisher just
+        wrote; ``nbytes`` the device-reported compressed byte total.
+        Returns ``(eid, created)`` — ``created=False`` means an identical
+        page is already resident (same parent chain, same token ids): the
+        caller should free its duplicate pool pages and map the existing
+        entry instead (in-cohort dedup of same-prefix prompts).
+        """
+        assert len(toks) == self.page and len(pages) == self.n_layers
+        eid = self._child.get((parent, toks))
+        if eid is not None:
+            self.stats["deduped"] += 1
+            return eid, False
+        self._clock += 1
+        e = Entry(eid=self._next_eid, parent=parent,
+                  depth=(self.entries[parent].depth + 1 if parent else 0),
+                  toks=toks, pages=list(pages), nbytes=int(nbytes),
+                  born=self._clock)
+        self._next_eid += 1
+        self.entries[e.eid] = e
+        self._child[(parent, toks)] = e.eid
+        if parent:
+            self.entries[parent].children += 1
+        self.stats["inserted"] += 1
+        return e.eid, True
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evictable(self) -> list[Entry]:
+        """Unpinned leaves.  Pins cover whole chains (a sequence pins
+        every ancestor of the deepest entry it maps), so an entry with a
+        pinned descendant always has ``refcount > 0`` itself; leaf-first
+        eviction keeps every resident chain reachable from the root."""
+        return [e for e in self.entries.values()
+                if e.refcount == 0 and e.children == 0]
+
+    def evict_for(self, n_pages: int) -> list[int]:
+        """Free >= ``n_pages`` pool pages from retained entries if
+        possible; returns the freed pool ids ([] when nothing is
+        evictable).  Victim order is the SIP/CAMP value ranking —
+        least-valuable (big, cold, unprioritized) entries go first."""
+        freed: list[int] = []
+        while len(freed) < n_pages:
+            cands = self._evictable()
+            if not cands:
+                break
+            victim = min(cands, key=lambda e:
+                         (self.policy.value(e.hits, e.nbytes), e.born))
+            freed.extend(self._drop(victim))
+        return freed
+
+    def _drop(self, e: Entry) -> list[int]:
+        del self._child[(e.parent, e.toks)]
+        del self.entries[e.eid]
+        if e.parent:
+            self.entries[e.parent].children -= 1
+        self.stats["evicted"] += 1
+        return e.pages
+
+    # -- metrics -------------------------------------------------------------
+
+    def resident_pages(self) -> int:
+        return self.n_layers * len(self.entries)
+
+    def retained_pages(self) -> int:
+        """Pages held only by the cache (refcount 0): reclaimable."""
+        return self.n_layers * sum(1 for e in self.entries.values()
+                                   if e.refcount == 0)
+
+    def hit_rate(self) -> float:
+        """Token-weighted prefix hit rate across lookups so far."""
+        if not self.stats["lookup_tokens"]:
+            return 0.0
+        return self.stats["hit_tokens"] / self.stats["lookup_tokens"]

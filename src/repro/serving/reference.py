@@ -1,33 +1,54 @@
-"""Reference (seed) serving engine: host-looped, one token / seq / layer.
+"""Reference serving engine: host-looped, one sequence / layer at a time.
 
-This is the original ``PagedKVEngine`` kept verbatim as the behavioral
-oracle: ``serving/engine.py`` now runs the batched device-resident hot
-path and must produce token-for-token identical greedy output to this
-implementation (tests/test_serving_batched.py).  It is also the baseline
-that ``benchmarks/bench_serve.py`` measures speedups against.  Do not
-optimize this file — its value is being the slow, obviously-correct path.
+This is the behavioral oracle: ``serving/engine.py`` runs the batched
+device-resident hot path and must produce token-for-token identical
+greedy output to this implementation (tests/test_serving_batched.py,
+tests/test_scheduler.py, tests/test_prefix_cache.py).  It is also the
+baseline that ``benchmarks/bench_serve.py`` measures speedups against.
+Do not optimize this file — its value is being the slow, obviously
+correct path.
 
-The inference-side integration of all three thesis pillars:
+The inference-side integration of the thesis pillars:
 
   * KV pages are stored **compressed** (B+Delta int8 form, the layout the
     fused Pallas decode kernel reads — kernels/paged_attention.py);
   * page addressing is **LCP**: fixed target size per page, page table ->
     pool index, one shift to locate a token (no prefix sums);
   * the finite HBM page pool is managed by **CAMP**-style value scoring:
-    when the pool is full, the least-valuable sequence (value =
-    reuse-proxy / compressed size, the MVE function) is preempted.
+    when the pool is full, retained prefix-cache entries evict first
+    (SIP value ranking), then the least-valuable sequence (value =
+    reuse-proxy / compressed size, the MVE function) is preempted;
+  * completed prompt pages are shared across requests through the
+    **prefix cache** (serving/prefix_cache.py): lookup/pin at admission,
+    insert at publish, release at retirement — the same protocol the
+    batched engine speaks, so warm-cache paths stay token-for-token.
 
-Decode flow per sequence: tokens accumulate in an *uncompressed tail* page
-(the write buffer); when the tail fills, it is compressed and published to
-the pool — compression happens at page-fill granularity, off the critical
-path, exactly like the thesis' cache-fill-side compression.  Attention
-runs over [compressed pages + tail].
+Prefill stores KV for every prompt token but the last; the first decode
+step computes the last prompt token's K/V exactly once into the tail
+(the historical "duplicated last prompt key" quirk is fixed in both
+engines).  Prefill attention follows the canonical-prefix contract: a
+query reads the compress-then-dequantize round trip of every completed
+earlier page and exact f32 values inside its own page — which makes
+published pages pure functions of the token prefix and is what makes
+cross-request page sharing sound.  Decode attends [compressed pages +
+exact tail], the same rule at tail granularity.
 
+Prefill *numerics* route through the same jitted chunk dispatch the
+batched engine uses (``engine._prefill_chunk``, at one scratch row).
+This is deliberate, and new with the prefix cache: the canonical
+contract feeds quantized page values back into prefill attention, so
+any cross-implementation float noise (XLA fuses a jitted graph
+differently than op-by-op dispatch) would be amplified through the
+int8 quantizer into token divergence.  The dispatch is bit-invariant
+to row count, scratch length, chunk width, and grid offsets (pinned by
+tests/test_prefix_cache.py), which is exactly the property the oracle
+exercises by replaying a different schedule shape.  Everything else —
+paging, CAMP accounting, cache pin/insert/release, publishes into a
+numpy pool, decode — is independently reimplemented host-side.
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 import jax
@@ -38,6 +59,8 @@ from repro.configs.base import ArchConfig
 from repro.kernels import ref
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.serving import engine as _E
+from repro.serving.prefix_cache import PrefixCache
 
 
 @dataclass
@@ -52,21 +75,40 @@ class Sequence:
     preempted: bool = False
     # chunked-prefill oracle state (begin_request / prefill_advance):
     prefilling: bool = False
+    pf_start: int = 0                    # prefix-cache hit boundary
     pf_pos: int = 0                      # prompt tokens processed so far
-    pf_published: int = 0                # full pages already published
-    pf_k: np.ndarray | None = None       # [L, plen, K, Dh] f32 exact scratch
-    pf_v: np.ndarray | None = None
+    pf_published: int = 0                # full pages published or mapped
+    pf_k: jax.Array | None = None        # [L, 1, Tpad, K, Dh] f32 scratch
+    pf_v: jax.Array | None = None
+    pf_kc: jax.Array | None = None       # carried canonical view (same
+    pf_vc: jax.Array | None = None       # shape; see engine._Cohort)
+    # prefix-cache chain (entry ids, block order); pages[li][:len(chain)]
+    # are shared, the rest private
+    chain: list[int] = field(default_factory=list)
 
 
 class ReferencePagedKVEngine:
-    """Greedy-decoding engine over a dense-GQA transformer (seed path)."""
+    """Greedy-decoding engine over a dense-GQA transformer (oracle path)."""
 
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
-                 n_pool_pages: int = 256):
+                 n_pool_pages: int = 256,
+                 prefix_cache: PrefixCache | None = None,
+                 prefill_chunk: int | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
+        if prefix_cache is not None:
+            assert prefix_cache.page == page_size \
+                and prefix_cache.n_layers == cfg.n_layers, \
+                "prefix cache shape disagrees with the engine"
         self.cfg = cfg
         self.params = params
         self.page = page_size
+        self.prefix_cache = prefix_cache
+        # dispatch width of the shared jitted prefill step (bit-invariant
+        # to the choice; kept as a knob for jit-cache reuse with an
+        # engine of a different width)
+        self.prefill_chunk = (2 * page_size if prefill_chunk is None
+                              else prefill_chunk)
+        assert self.prefill_chunk % page_size == 0
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         # compressed page pools (the LCP target-size + metadata regions)
         self.kd = np.zeros((lyr, n_pool_pages, k, page_size, dh), np.int8)
@@ -80,7 +122,7 @@ class ReferencePagedKVEngine:
         self.seqs: dict[int, Sequence] = {}
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0}
+                      "preemptions": 0, "prefix_pages_evicted": 0}
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -89,26 +131,55 @@ class ReferencePagedKVEngine:
         return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
 
     def _alloc_page(self) -> int:
-        if not self.free:
-            self._preempt_one()
+        """Mirror of the batched engine's reclaim order: free list, then
+        retained prefix-cache entries, then CAMP preemption."""
+        while not self.free:
+            if not self._evict_prefix_pages(1):
+                self._preempt_one()
         return self.free.pop()
 
+    def _evict_prefix_pages(self, need: int) -> bool:
+        if self.prefix_cache is None:
+            return False
+        pids = self.prefix_cache.evict_for(need)
+        if not pids:
+            return False
+        self.free.extend(pids)
+        self.stats["prefix_pages_evicted"] += len(pids)
+        return True
+
     def _seq_value(self, seq: Sequence) -> float:
-        """CAMP/MVE value: reuse proxy / compressed size (smaller = victim)."""
+        """CAMP/MVE value: reuse proxy / *reclaimable* compressed size
+        (smaller = victim; mirror of the batched engine — shared prefix
+        pages count only when this sequence is their sole pinner)."""
         if seq.done:
             return -1.0
-        size = sum(int(self.page_bytes[p]) for lp in seq.pages for p in lp)
+        ns = len(seq.chain)
+        size = sum(int(self.page_bytes[p])
+                   for lp in seq.pages for p in lp[ns:])
+        for eid in seq.chain:
+            e = self.prefix_cache.entries[eid]
+            if e.refcount == 1:
+                size += e.nbytes
         return (len(seq.tokens) + 1) / max(size, 1)
+
+    def _drop_seq_pages(self, seq: Sequence, *, count_evicted: bool) -> None:
+        ns = len(seq.chain)
+        for lp in seq.pages:
+            self.free.extend(lp[ns:])
+            if count_evicted:
+                self.stats["pages_evicted"] += len(lp) - ns
+        if seq.chain:
+            self.prefix_cache.release(seq.chain)
+            seq.chain = []
+        seq.pages = [[] for _ in range(self.cfg.n_layers)]
 
     def _preempt_one(self) -> None:
         cands = [s for s in self.seqs.values()
                  if any(s.pages[li] for li in range(self.cfg.n_layers))]
         assert cands, "pool exhausted with nothing evictable"
         victim = min(cands, key=self._seq_value)
-        for lp in victim.pages:
-            self.free.extend(lp)
-            self.stats["pages_evicted"] += len(lp)
-        victim.pages = [[] for _ in range(self.cfg.n_layers)]
+        self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
         self.stats["preemptions"] += 1
@@ -145,6 +216,35 @@ class ReferencePagedKVEngine:
         self.stats["bytes_raw"] += self.page_raw_bytes()
         self.stats["bytes_compressed"] += nbytes
 
+    def _publish_block(self, seq: Sequence, k_blk: np.ndarray,
+                       v_blk: np.ndarray, blk: int | None = None) -> None:
+        """Publish one block across all layers; register prompt pages
+        (``blk`` = absolute page index) in the prefix cache, deduping
+        against an already-resident identical page."""
+        for li in range(self.cfg.n_layers):
+            self._publish_page(seq, li, k_blk[li], v_blk[li])
+        if blk is None or seq.preempted or self.prefix_cache is None:
+            return
+        page, cache, lyr = self.page, self.prefix_cache, self.cfg.n_layers
+        assert blk == len(seq.chain), (blk, len(seq.chain))
+        parent = seq.chain[-1] if seq.chain else 0
+        toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
+        pids = [seq.pages[li][blk] for li in range(lyr)]
+        nbytes = sum(int(self.page_bytes[p]) for p in pids)
+        eid, created = cache.insert(parent, toks, pids, nbytes)
+        cache.pin([eid])
+        seq.chain.append(eid)
+        if not created:            # dedup: map the shared pages instead
+            ent = cache.entries[eid]
+            for li in range(lyr):
+                self.free.append(seq.pages[li][blk])
+                seq.pages[li][blk] = ent.pages[li]
+            # reverse the duplicate's publish accounting (mirror of the
+            # batched engine): stats count each resident page once
+            self.stats["pages_compressed"] -= lyr
+            self.stats["bytes_raw"] -= self.page_raw_bytes() * lyr
+            self.stats["bytes_compressed"] -= nbytes
+
     # -- request lifecycle -----------------------------------------------------
 
     def add_requests(self, prompts: dict[int, list[int]]) -> None:
@@ -154,136 +254,152 @@ class ReferencePagedKVEngine:
             self.add_request(sid, prompt)
 
     def add_request(self, sid: int, prompt: list[int]) -> None:
-        cfg = self.cfg
-        lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        seq = Sequence(sid=sid, tokens=list(prompt),
-                       pages=[[] for _ in range(lyr)],
-                       tail_k=np.zeros((lyr, self.page, k, dh), np.float32),
-                       tail_v=np.zeros((lyr, self.page, k, dh), np.float32))
-        self.seqs[sid] = seq
-        self._prefill(seq)
+        """Blocking admission: chunked prefill driven to completion.  The
+        canonical-prefix attention rule is chunk-layout-independent, so
+        one full-width advance equals any budgeted chunking."""
+        self.begin_request(sid, prompt)
+        while self.seqs[sid].prefilling:
+            self.prefill_advance(sid, len(prompt))
 
     def release(self, sid: int) -> None:
-        """Retire a request: free its pool pages (oracle parity with the
-        batched engine's slot recycling — the reference has no slots)."""
+        """Retire a request: free its private pool pages and unpin its
+        shared prefix chain (oracle parity with the batched engine's slot
+        recycling — the reference has no slots)."""
         seq = self.seqs.pop(sid)
         assert not (seq.prefilling and not seq.preempted), \
             f"sid {sid} is mid-prefill; cannot release"
-        for lp in seq.pages:
-            self.free.extend(lp)
+        self._drop_seq_pages(seq, count_evicted=False)
 
     # -- chunked-prefill oracle (mixed-schedule semantics) ---------------------
 
-    def begin_request(self, sid: int, prompt: list[int]) -> None:
+    def begin_request(self, sid: int, prompt: list[int]) -> int:
         """Admit a prompt for *chunked* prefill without running any of it.
 
         The mixed-schedule oracle twin of ``PagedKVEngine.begin_cohort``:
-        the continuous-batching scheduler advances the prompt
+        consults the prefix cache, pins and maps the cached chain, and
+        arranges for prefill to start at the hit boundary.  Returns the
+        number of cached prompt tokens (0 when cold / no cache).  The
+        continuous-batching scheduler advances the prompt
         ``prefill_advance(n)`` tokens per iteration, interleaved with
         ``decode_one`` calls, and the result must be token-for-token
-        identical to full-prompt ``add_request`` prefill (compression is
-        applied only at page publish, so splitting the prompt across
-        chunks changes no published value).
+        identical to full-prompt ``add_request`` prefill.
         """
         cfg = self.cfg
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         assert sid not in self.seqs, sid
         assert prompt, f"empty prompt for sid {sid}"
-        plen = len(prompt)
-        self.seqs[sid] = Sequence(
+        page = self.page
+        stored = len(prompt) - 1
+        start, chain = 0, []
+        if self.prefix_cache is not None:
+            start, chain = self.prefix_cache.lookup(prompt)
+            self.prefix_cache.pin(chain)
+        ent = [self.prefix_cache.entries[e] for e in chain]
+        seq = Sequence(
             sid=sid, tokens=list(prompt),
-            pages=[[] for _ in range(lyr)],
-            tail_k=np.zeros((lyr, self.page, k, dh), np.float32),
-            tail_v=np.zeros((lyr, self.page, k, dh), np.float32),
-            prefilling=True,
-            pf_k=np.zeros((lyr, plen, k, dh), np.float32),
-            pf_v=np.zeros((lyr, plen, k, dh), np.float32))
+            pages=[[e.pages[li] for e in ent] for li in range(lyr)],
+            tail_k=np.zeros((lyr, page, k, dh), np.float32),
+            tail_v=np.zeros((lyr, page, k, dh), np.float32),
+            chain=list(chain), pf_start=start, pf_pos=start,
+            pf_published=start // page)
+        self.seqs[sid] = seq
+        if start >= stored:
+            return start           # full prefix hit: straight to decode
+        seq.prefilling = True
+        # scratch sizing mirrors the batched engine's formula (any
+        # page-aligned size is bit-equivalent; matching it maximizes jit
+        # cache reuse when both engines run side by side)
+        chunk = self.prefill_chunk
+        n_chunks = -(-stored // chunk) + 1
+        cap = 1
+        while cap < n_chunks:
+            cap *= 2
+        tpad = cap * chunk
+        pf_k = np.zeros((lyr, 1, tpad, k, dh), np.float32)
+        pf_v = np.zeros((lyr, 1, tpad, k, dh), np.float32)
+        # dequantize the cached prefix into the scratch warm region: the
+        # canonical values decode-side attention reads for those pages
+        # (same codec helper as decode; elementwise, so bit-equal to the
+        # engine's jitted fill)
+        for b in range(start // page):
+            sl = slice(b * page, (b + 1) * page)
+            for li in range(lyr):
+                pid = seq.pages[li][b]
+                kk = ref.dequant_pages(jnp.asarray(self.kd[li, pid][None]),
+                                       jnp.asarray(self.kb[li, pid][None]),
+                                       jnp.asarray(self.ks[li, pid][None]))
+                vv = ref.dequant_pages(jnp.asarray(self.vd[li, pid][None]),
+                                       jnp.asarray(self.vb[li, pid][None]),
+                                       jnp.asarray(self.vs[li, pid][None]))
+                pf_k[li, 0, sl] = np.swapaxes(np.asarray(kk[0]), 0, 1)
+                pf_v[li, 0, sl] = np.swapaxes(np.asarray(vv[0]), 0, 1)
+        seq.pf_k = jnp.asarray(pf_k)
+        seq.pf_v = jnp.asarray(pf_v)
+        # the warm region is canonical by construction; the rest of the
+        # canonical view fills in window-by-window as chunks complete
+        seq.pf_kc = jnp.asarray(pf_k)
+        seq.pf_vc = jnp.asarray(pf_v)
+        return start
 
     def prefill_advance(self, sid: int, n: int) -> bool:
         """Advance a chunked prefill by up to ``n`` prompt tokens.
 
-        Host-looped and obviously correct: the chunk's activations attend
-        over the exact f32 K/V scratch of everything processed so far
-        (identical math to full-prompt prefill — causality makes the
-        split invisible), pages completed by the chunk publish through
-        the same CAMP-accounted path, and the final partial page lands in
-        the decode tail buffer.  Returns True when prefill completed.
+        The chunk's compute runs through the shared jitted dispatch
+        (``engine._prefill_chunk``, one scratch row — see the module
+        docstring for why numerics must be shared); pages completed by
+        the chunk publish through this engine's own CAMP-accounted
+        numpy-pool path and register in the prefix cache, and the final
+        partial page lands in the decode tail buffer.  Returns True when
+        prefill completed.
         """
         cfg, seq, page = self.cfg, self.seqs[sid], self.page
         assert seq.prefilling, f"sid {sid} is not prefilling"
-        plen = len(seq.tokens)
-        p = seq.pf_pos
-        n = min(n, plen - p)
-        if n > 0:
-            toks = jnp.asarray(seq.tokens[p:p + n], jnp.int32)[None]
-            x = L.embed(self.params["embed"], toks)
-            qpos = jnp.arange(p, p + n, dtype=jnp.int32)
-            kvpos = jnp.arange(p + n, dtype=jnp.int32)
-            for li in range(cfg.n_layers):
-                bp = self._block_params(li)
-                h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
-                k, v = A.gqa_kv(bp["attn"], h, qpos, theta=cfg.rope_theta)
-                seq.pf_k[li, p:p + n] = np.asarray(k[0], np.float32)
-                seq.pf_v[li, p:p + n] = np.asarray(v[0], np.float32)
-                kv_all = (jnp.asarray(seq.pf_k[li, :p + n])[None],
-                          jnp.asarray(seq.pf_v[li, :p + n])[None])
-                x = x + A.gqa_forward(bp["attn"], h, qpos,
-                                      theta=cfg.rope_theta, kv=kv_all,
-                                      kv_positions=kvpos)
-                h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
-                x = x + L.mlp(bp["ffn"], h2)
-            seq.pf_pos = p + n
+        stored = len(seq.tokens) - 1
+        chunk = self.prefill_chunk
+        n = min(n, stored - seq.pf_pos)
+        while n > 0:
+            step = min(n, chunk)
+            p = seq.pf_pos
+            tpad = seq.pf_k.shape[2]
+            off = min(p, tpad - chunk)
+            pt = np.zeros((1, chunk), np.int32)
+            w = min(chunk, len(seq.tokens) - off)
+            pt[0, :w] = seq.tokens[off:off + w]
+            pt[0, step:] = 0                  # budget-split masking
+            seq.pf_k, seq.pf_v, seq.pf_kc, seq.pf_vc = _E._prefill_chunk(
+                self.params, jnp.asarray(pt), seq.pf_k, seq.pf_v,
+                seq.pf_kc, seq.pf_vc, jnp.asarray([off], jnp.int32),
+                cfg=cfg, page=page)
+            seq.pf_pos = p + step
+            n -= step
             # publish every page the chunk completed (block-outer order —
-            # page *sets* match the full-prefill path, and CAMP victim
-            # choice is order-independent in the supported scenarios)
+            # page *sets* match the batched path, and CAMP victim choice
+            # is order-independent in the supported scenarios)
             for blk in range(seq.pf_published, seq.pf_pos // page):
-                for li in range(cfg.n_layers):
-                    sl = slice(blk * page, (blk + 1) * page)
-                    self._publish_page(seq, li, seq.pf_k[li, sl],
-                                       seq.pf_v[li, sl])
+                sl = slice(blk * page, (blk + 1) * page)
+                self._publish_block(seq,
+                                    np.asarray(seq.pf_k[:, 0, sl]),
+                                    np.asarray(seq.pf_v[:, 0, sl]),
+                                    blk=blk)
                 seq.pf_published = blk + 1
-        if seq.pf_pos < plen:
+            if seq.preempted:
+                break
+        if seq.pf_pos < stored and not seq.preempted:
             return False
         seq.prefilling = False
-        seq.tail_len = 0 if seq.preempted else plen % page
+        seq.tail_len = 0 if seq.preempted else stored % page
         if seq.tail_len:
+            base = (stored // page) * page
+            tk = np.asarray(seq.pf_k[:, 0, base:stored])
+            tv = np.asarray(seq.pf_v[:, 0, base:stored])
             for li in range(cfg.n_layers):
-                seq.tail_k[li, :seq.tail_len] = \
-                    seq.pf_k[li, (plen // page) * page:]
-                seq.tail_v[li, :seq.tail_len] = \
-                    seq.pf_v[li, (plen // page) * page:]
-        seq.pf_k = seq.pf_v = None       # scratch no longer needed
+                seq.tail_k[li, :seq.tail_len] = tk[li]
+                seq.tail_v[li, :seq.tail_len] = tv[li]
+        seq.pf_k = seq.pf_v = seq.pf_kc = seq.pf_vc = None
         return True
 
     def _block_params(self, li: int):
         return jax.tree.map(lambda x: x[li], self.params["blocks"])
-
-    def _prefill(self, seq: Sequence) -> None:
-        cfg = self.cfg
-        toks = jnp.asarray(seq.tokens, jnp.int32)[None]
-        s = len(seq.tokens)
-        x = L.embed(self.params["embed"], toks)
-        positions = jnp.arange(s, dtype=jnp.int32)
-        n_full = s // self.page
-        seq.tail_len = s - n_full * self.page
-        for li in range(cfg.n_layers):
-            bp = self._block_params(li)
-            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
-            # one K/V projection per layer, shared with the page-fill path
-            k, v = A.gqa_kv(bp["attn"], h, positions, theta=cfg.rope_theta)
-            x = x + A.gqa_forward(bp["attn"], h, positions,
-                                  theta=cfg.rope_theta, kv=(k, v))
-            h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
-            x = x + L.mlp(bp["ffn"], h2)
-
-            karr = np.asarray(k[0], np.float32)       # [S, K, Dh]
-            varr = np.asarray(v[0], np.float32)
-            for blk in range(n_full):
-                sl = slice(blk * self.page, (blk + 1) * self.page)
-                self._publish_page(seq, li, karr[sl], varr[sl])
-            if seq.tail_len:
-                seq.tail_k[li, :seq.tail_len] = karr[n_full * self.page:]
-                seq.tail_v[li, :seq.tail_len] = varr[n_full * self.page:]
 
     # -- decode ------------------------------------------------------------------
 
@@ -294,7 +410,6 @@ class ReferencePagedKVEngine:
         t = len(seq.tokens)
         tok = jnp.asarray([seq.tokens[-1]], jnp.int32)
         x = L.embed(self.params["embed"], tok[:, None])
-        tails_full = False
         for li in range(cfg.n_layers):
             bp = self._block_params(li)
             h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
@@ -316,8 +431,7 @@ class ReferencePagedKVEngine:
             x = x + L.mlp(bp["ffn"], h2)
         seq.tail_len += 1
         if seq.tail_len == self.page:
-            for li in range(cfg.n_layers):
-                self._publish_page(seq, li, seq.tail_k[li], seq.tail_v[li])
+            self._publish_block(seq, seq.tail_k, seq.tail_v)
             seq.tail_len = 0
 
         x = L.rmsnorm(self.params["final_norm"], x, cfg.norm_eps)

@@ -19,8 +19,19 @@ request queue and drives the engine one *iteration* at a time:
     through the engine's single jitted mixed step;
   * **retire** — sequences that emit ``eos_id`` or reach
     ``max_new_tokens`` release their pages and batch slot between
-    steps; CAMP-preempted sequences retire with ``finish_reason
-    "preempted"``.
+    steps; CAMP-preempted sequences either retire with ``finish_reason
+    "preempted"`` or — with ``requeue_preempted=True`` — re-enter the
+    waiting queue with *recompute-from-prompt*: the request's prompt
+    grows by the tokens already generated and admission re-prefills it.
+    With a prefix cache attached, that recompute is mostly a re-pin of
+    the request's unevicted pages, so preemption costs only the evicted
+    suffix.
+
+Prefix-cache awareness: admission consults the engine's cache
+(``begin_cohort`` / ``begin_request`` return each prompt's cached-token
+count), requests whose stored prefix is fully cached skip the prefill
+phase entirely (decodable the same iteration — the warm-TTFT win), and
+the token budget only pays for *uncached* prompt tokens.
 
 The same scheduler class drives either engine: the batched
 ``PagedKVEngine`` through ``begin_cohort``/``mixed_step`` (production
@@ -69,6 +80,9 @@ class Track:
     finish_reason: str | None = None      # eos | length | preempted
     out_tokens: list[int] = field(default_factory=list)
     pf_pos: int = 0                       # prompt tokens prefilled so far
+    pf_start: int = 0                     # prefix-cache hit boundary
+    requeues: int = 0                     # preemption requeue count
+    absorbed: int = 0                     # out tokens folded into the prompt
 
 
 class ContinuousScheduler:
@@ -79,20 +93,24 @@ class ContinuousScheduler:
     by the presence of ``mixed_step``.
     """
 
-    def __init__(self, engine, *, token_budget: int = 64):
+    def __init__(self, engine, *, token_budget: int = 64,
+                 requeue_preempted: bool = False, max_requeues: int = 3):
         assert token_budget >= 1, token_budget
         self.engine = engine
         self.token_budget = token_budget
+        self.requeue_preempted = requeue_preempted
+        self.max_requeues = max_requeues
         self._batched = hasattr(engine, "mixed_step")
         self.waiting: deque[Request] = deque()
         self.tracks: dict[int, Track] = {}
         self._prefill: list[int] = []     # rids of the in-flight cohort
-        self._cohort_pos = 0              # cohort grid offset (uniform)
+        self._cohort_pos = 0              # cohort grid offset (relative)
         self._running: list[int] = []     # rids decoding, admission order
         self.iteration = 0
         self.stats = {"iterations": 0, "idle_iterations": 0,
                       "mixed_iterations": 0, "prefill_tokens": 0,
-                      "decode_tokens": 0, "chunk_splits": 0}
+                      "decode_tokens": 0, "chunk_splits": 0,
+                      "requeues": 0, "prefix_cached_tokens": 0}
 
     # -- queue -----------------------------------------------------------------
 
@@ -184,7 +202,10 @@ class ContinuousScheduler:
 
         Only when no cohort is in flight — cohort members share one chunk
         grid.  An admission burst larger than the engine's free slots
-        admits what fits; the rest keeps waiting.
+        admits what fits; the rest keeps waiting.  Prefix-cache hits
+        shorten each member's grid (per-row start offsets); a *full* hit
+        skips the prefill phase entirely and starts decoding this very
+        iteration.
         """
         if self._prefill or not self.waiting:
             return []
@@ -197,15 +218,23 @@ class ContinuousScheduler:
             return []
         prompts = {r.rid: r.prompt for r in cohort}
         if self._batched:
-            self.engine.begin_cohort(prompts)
+            starts = self.engine.begin_cohort(prompts)
         else:
-            for rid, prompt in prompts.items():
-                self.engine.begin_request(rid, prompt)
+            starts = {rid: self.engine.begin_request(rid, prompt)
+                      for rid, prompt in prompts.items()}
         for r in cohort:
             tr = self.tracks[r.rid]
-            tr.state = "prefill"
             tr.admitted_iter = self.iteration
-            self._prefill.append(r.rid)
+            tr.pf_start = starts[r.rid]
+            tr.pf_pos = starts[r.rid]
+            self.stats["prefix_cached_tokens"] += starts[r.rid]
+            if starts[r.rid] >= len(r.prompt) - 1:
+                tr.state = "running"          # full hit: no prefill phase
+                tr.prefill_done_iter = self.iteration
+                self._running.append(r.rid)
+            else:
+                tr.state = "prefill"
+                self._prefill.append(r.rid)
         self._cohort_pos = 0
         return [r.rid for r in cohort]
 
@@ -226,8 +255,10 @@ class ContinuousScheduler:
 
         Every running sequence costs one budget token; the remainder buys
         prefill-grid tokens, splitting a chunk at the budget boundary.
-        The cohort advances uniformly, so one grid token costs one budget
-        token per member still short of that grid position.
+        The cohort advances one *relative* grid from per-member start
+        offsets, so one grid token costs one budget token per member
+        still short of that grid position — cached prompt tokens were
+        never entered into the grid and cost nothing.
         """
         if not self._prefill:
             return 0
@@ -237,7 +268,8 @@ class ContinuousScheduler:
         chunk = self.engine.prefill_chunk if self._batched else \
             getattr(self, "_ref_prefill_chunk", 16)
         off = self._cohort_off()
-        rems = [len(self.tracks[r].req.prompt) - off for r in self._prefill]
+        rems = [len(self.tracks[r].req.prompt) - 1
+                - self.tracks[r].pf_start - off for r in self._prefill]
         rems = [r for r in rems if r > 0]
         if not rems:
             return 0
@@ -292,49 +324,92 @@ class ContinuousScheduler:
             self._cohort_pos += n_pf
             for rid in self._prefill:
                 tr = self.tracks[rid]
-                tr.pf_pos = min(self._cohort_pos, len(tr.req.prompt))
+                tr.pf_pos = min(tr.pf_start + self._cohort_pos,
+                                len(tr.req.prompt) - 1)
         return out, completed
 
     def _retire(self, decoded: dict[int, int], now: float
                 ) -> list[tuple[int, str]]:
-        """EOS / length / preemption retirement; frees pages and slots."""
+        """EOS / length / preemption retirement; frees pages and slots.
+
+        With ``requeue_preempted``, a CAMP-preempted request that still
+        has work left re-enters the waiting queue instead of finishing:
+        its prompt absorbs the tokens generated so far
+        (recompute-from-prompt) and admission re-prefills it — which,
+        with a prefix cache, re-pins whatever pages survived eviction.
+        Requeued requests go to the queue *front* (they arrived
+        earliest); ``max_requeues`` bounds preemption livelock.
+        """
         retired: list[tuple[int, str]] = []
+        requeued: list[int] = []
         for rid in list(self._running):
             tr = self.tracks[rid]
             seq = self.engine.seqs.get(rid)
+            eos_hit = rid in decoded and tr.req.eos_id is not None \
+                and decoded[rid] == tr.req.eos_id
+            len_hit = len(tr.out_tokens) >= tr.req.max_new_tokens
             if seq is not None and seq.preempted:
-                retired.append((rid, "preempted"))
-            elif rid in decoded and tr.req.eos_id is not None \
-                    and decoded[rid] == tr.req.eos_id:
+                if eos_hit:                   # work already complete
+                    retired.append((rid, "eos"))
+                elif len_hit:
+                    retired.append((rid, "length"))
+                elif self.requeue_preempted \
+                        and tr.requeues < self.max_requeues:
+                    requeued.append(rid)
+                else:
+                    retired.append((rid, "preempted"))
+            elif eos_hit:
                 retired.append((rid, "eos"))
-            elif len(tr.out_tokens) >= tr.req.max_new_tokens:
+            elif len_hit:
                 retired.append((rid, "length"))
         for rid in list(self._prefill):
             seq = self.engine.seqs.get(rid)
             if seq is not None and seq.preempted:
-                retired.append((rid, "preempted"))
+                tr = self.tracks[rid]
+                if self.requeue_preempted \
+                        and tr.requeues < self.max_requeues:
+                    requeued.append(rid)
+                else:
+                    retired.append((rid, "preempted"))
         for rid, reason in retired:
             tr = self.tracks[rid]
             tr.state = "finished"
             tr.finish_reason = reason
             tr.finished_iter = self.iteration
             tr.finished_t = now
-            if rid in self._running:
-                self._running.remove(rid)
-            if rid in self._prefill:
-                self._prefill.remove(rid)
-            if rid in self.engine.seqs:
-                self.engine.release(rid)
+            self._detach(rid)
+        for rid in requeued:
+            tr = self.tracks[rid]
+            self._detach(rid)
+            # recompute-from-prompt: fold the not-yet-absorbed output
+            # tokens into the prompt so re-prefill reconstructs the full
+            # sequence state (prompt pages re-enter the prefix cache)
+            tr.req.prompt.extend(tr.out_tokens[tr.absorbed:])
+            tr.absorbed = len(tr.out_tokens)
+            tr.requeues += 1
+            tr.state = "waiting"
+            self.stats["requeues"] += 1
+        self.waiting.extendleft(self.tracks[rid].req
+                                for rid in reversed(requeued))
         return retired
+
+    def _detach(self, rid: int) -> None:
+        if rid in self._running:
+            self._running.remove(rid)
+        if rid in self._prefill:
+            self._prefill.remove(rid)
+        if rid in self.engine.seqs:
+            self.engine.release(rid)
 
 
 def make_reference_scheduler(ref_engine, *, token_budget: int,
-                             max_batch: int, prefill_chunk: int
-                             ) -> ContinuousScheduler:
+                             max_batch: int, prefill_chunk: int,
+                             **kw) -> ContinuousScheduler:
     """Oracle scheduler over the host-looped reference engine, pinned to
     the batched engine's capacity and chunk width so both produce the
     identical schedule (and therefore identical tokens)."""
-    sched = ContinuousScheduler(ref_engine, token_budget=token_budget)
+    sched = ContinuousScheduler(ref_engine, token_budget=token_budget,
+                                **kw)
     sched.set_reference_max_batch(max_batch)
     sched.set_reference_prefill_chunk(prefill_chunk)
     return sched

@@ -83,3 +83,62 @@ def test_compressed_cache_beats_uncompressed():
     uncomp = camp.run_policy([(a, 64) for a, _ in tr], "rrip",
                              capacity_bytes=cap)
     assert comp["miss_rate"] < uncomp["miss_rate"] - 0.1
+
+
+def test_global_pinning_excludes_blocks_from_eviction():
+    """Refcount pinning (the serving-side prefix-cache hook): pinned
+    blocks survive any pressure; unpinning restores evictability."""
+    cache = camp.GlobalCache(1 << 10, "gcamp", segment=8)
+    cache.access(0x1000, 512)
+    cache.pin(0x1000)
+    cache.pin(0x1000)                       # refcounted: two pins
+    for i in range(1, 64):                  # churn far past capacity
+        cache.access(0x1000 + i * 64, 512)
+    assert 0x1000 in cache.blocks           # pinned: never a victim
+    cache.unpin(0x1000)
+    assert 0x1000 in cache.blocks           # still one pin outstanding
+    cache.unpin(0x1000)
+    for i in range(64, 160):
+        cache.access(0x1000 + i * 64, 512)
+    assert 0x1000 not in cache.blocks       # unpinned: evictable again
+
+
+def test_global_all_pinned_keeps_overflow():
+    """When every resident block is pinned, eviction backs off instead of
+    corrupting live state; capacity re-converges after unpinning."""
+    cache = camp.GlobalCache(1 << 10, "gcamp", segment=8)
+    for i in range(4):
+        cache.access(0x2000 + i * 64, 512)
+        cache.pin(0x2000 + i * 64)
+    cache.access(0x9000, 512)               # no unpinned victim: overflows
+    assert 0x9000 in cache.blocks
+    assert cache.used_segments > cache.capacity_segments
+    for i in range(4):
+        cache.unpin(0x2000 + i * 64)
+    cache.access(0xa000, 512)               # next insert drains the overflow
+    assert cache.used_segments <= cache.capacity_segments
+
+
+def test_global_external_size_feed():
+    """update_size (device-reported compressed bytes) re-costs a resident
+    block and sheds capacity if the block grew."""
+    cache = camp.GlobalCache(1 << 10, "gcamp", segment=8)
+    cache.access(0x3000, 8)
+    cache.access(0x4000, 8)
+    used = cache.used_segments
+    cache.update_size(0x3000, 800)
+    assert cache.blocks[0x3000].size == 800
+    assert cache.used_segments == used - 1 + 100
+    cache.update_size(0x3000, 8000)         # grows past capacity: evicts
+    assert cache.used_segments <= cache.capacity_segments or \
+        all(b.pins for b in cache.blocks.values())
+
+
+def test_global_size_feed_shrink_never_evicts():
+    """Regression: re-costing a block on a tag-full cache must not evict
+    an unrelated resident block when no tag is being inserted."""
+    cache = camp.GlobalCache(1 << 20, "gcamp", segment=8, max_tags=4)
+    for i in range(4):
+        cache.access(0x5000 + i * 64, 512)  # tag store exactly full
+    cache.update_size(0x5000, 8)            # shrink: nothing to shed
+    assert len(cache.blocks) == 4

@@ -1,0 +1,495 @@
+"""SIP-guided compressed prefix cache: correctness + policy suite.
+
+Covers the cache subsystem end to end: warm-vs-cold token-for-token
+equivalence (same prompt twice, partial-prefix hits, hits at
+non-chunk-aligned page boundaries, full hits that skip prefill),
+refcount safety under CAMP preemption of a sharing sequence, SIP
+eviction ordering, preempted-request requeue round trips, refcount-leak
+freedom after retire/preempt/requeue, and the jitted-dispatch shape
+invariances the shared-numerics oracle contract rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models.api import get_model
+from repro.serving import engine as E
+from repro.serving.engine import PagedKVEngine
+from repro.serving.prefix_cache import PrefixCache, SIPRetention
+from repro.serving.reference import ReferencePagedKVEngine
+from repro.serving.scheduler import (ContinuousScheduler,
+                                     make_reference_scheduler)
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, cache, *, pool=96, max_batch=4):
+    return PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                         max_batch=max_batch, prefix_cache=cache)
+
+
+def _run(eng, sid, prompt, steps):
+    eng.add_requests({sid: prompt})
+    return [eng.decode_batch([sid])[sid] for _ in range(steps)]
+
+
+def _assert_no_refcounts(cache):
+    assert all(e.refcount == 0 for e in cache.entries.values()), \
+        {e.eid: e.refcount for e in cache.entries.values() if e.refcount}
+
+
+def _assert_pool_consistent(eng):
+    """Every non-free page is accounted for by a sequence or the cache."""
+    cache = eng.prefix_cache
+    held = {p for s in eng.seqs.values() for lp in s.pages for p in lp}
+    if cache is not None:
+        held |= {p for e in cache.entries.values() for p in e.pages}
+    n_pool = (eng.pools.kd.shape[1] if hasattr(eng, "pools")
+              else eng.kd.shape[1])
+    assert len(eng.free) == len(set(eng.free))          # no double free
+    assert held.isdisjoint(eng.free)
+    assert len(held) + len(eng.free) == n_pool - 1      # page 0 reserved
+
+
+# ---------------------------------------------------------------------------
+# warm-vs-cold equivalence
+# ---------------------------------------------------------------------------
+
+def test_same_prompt_twice_warm_equals_cold(small_model):
+    """The second submission of a prompt hits the cache at the deepest
+    page boundary, skips the cached prefill work, and still produces
+    bit-identical greedy tokens — also identical to a cache-less
+    engine."""
+    cfg, params = small_model
+    prompt = [1 + (j * 3) % 50 for j in range(34)]      # 33 stored: 4 pages
+    cold_plain = _run(_engine(cfg, params, None), 0, prompt, 8)
+
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = _engine(cfg, params, cache)
+    cold = _run(eng, 0, prompt, 8)
+    assert cold == cold_plain                  # cache changes no tokens
+    eng.release(0)
+    assert cache.retained_pages() == cache.resident_pages() == 8
+    _assert_no_refcounts(cache)
+
+    starts = eng.begin_cohort({1: prompt})
+    assert starts == {1: 32}                   # deepest boundary cached
+    while eng._cohort is not None:
+        eng.mixed_step(decode_sids=[], pf_tokens=eng.prefill_chunk)
+    warm = [eng.decode_batch([1])[1] for _ in range(8)]
+    assert warm == cold
+    assert cache.stats["hits"] == 1 and cache.stats["hit_tokens"] == 32
+    eng.release(1)
+    _assert_no_refcounts(cache)
+    _assert_pool_consistent(eng)
+
+
+def test_partial_hit_at_non_chunk_aligned_boundary(small_model):
+    """A prompt sharing exactly one page (boundary 8, chunk 16) starts
+    prefill at a page boundary that is *not* chunk-aligned; warm output
+    must equal a cold engine's."""
+    cfg, params = small_model
+    base = [1 + (j * 3) % 50 for j in range(34)]
+    fork = base[:8] + [41, 17, 3, 9, 28, 7, 2]          # shares page 0 only
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = _engine(cfg, params, cache)
+    _run(eng, 0, base, 2)
+    eng.release(0)
+
+    starts = eng.begin_cohort({1: fork})
+    assert starts == {1: 8}                    # page-aligned, chunk-split
+    while eng._cohort is not None:
+        eng.mixed_step(decode_sids=[], pf_tokens=eng.prefill_chunk)
+    warm = [eng.decode_batch([1])[1] for _ in range(8)]
+    cold = _run(_engine(cfg, params, None), 0, fork, 8)
+    assert warm == cold
+
+
+def test_full_hit_skips_prefill_entirely(small_model):
+    """A prompt whose stored prefix is fully page-aligned and cached is
+    decodable immediately after admission — zero prefill dispatches."""
+    cfg, params = small_model
+    prompt = [2 + (j * 5) % 40 for j in range(33)]      # 32 stored: 4 pages
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = _engine(cfg, params, cache)
+    cold = _run(eng, 0, prompt, 6)
+    eng.release(0)
+
+    starts = eng.begin_cohort({1: prompt})
+    assert starts == {1: 32}
+    assert eng._cohort is None                 # nothing to prefill
+    assert not eng.seqs[1].prefilling
+    warm = [eng.decode_batch([1])[1] for _ in range(6)]
+    assert warm == cold
+
+
+def test_warm_path_scheduler_equivalence(small_model):
+    """Scheduler-driven warm paths: the same shared-prefix workload runs
+    against both engines (each with its own cache) and stays
+    token-for-token, with the warm request admitted straight to running
+    (full hit) or with a shortened prefill (partial hit)."""
+    cfg, params = small_model
+    sys_prompt = [7 + (j * 11) % 45 for j in range(25)]
+    mk = lambda sfx: sys_prompt + sfx
+    arrivals = {
+        0: (0, mk([9, 1, 4]), {"max_new_tokens": 6}),
+        1: (8, mk([3, 3, 8, 2, 6]), {"max_new_tokens": 5}),
+        2: (16, mk([1]), {"max_new_tokens": 5}),
+        3: (24, list(sys_prompt), {"max_new_tokens": 4}),
+    }
+    be = _engine(cfg, params, PrefixCache.for_model(cfg, PAGE))
+    re_ = ReferencePagedKVEngine(
+        cfg, params, page_size=PAGE, n_pool_pages=96,
+        prefix_cache=PrefixCache.for_model(cfg, PAGE))
+    bs = ContinuousScheduler(be, token_budget=24)
+    rs = make_reference_scheduler(re_, token_budget=24, max_batch=4,
+                                  prefill_chunk=be.prefill_chunk)
+
+    for sched in (bs, rs):
+        pending = dict(arrivals)
+        for it in range(300):
+            for rid, (t, prompt, kw) in list(pending.items()):
+                if t <= it:
+                    sched.submit(rid, list(prompt), **kw)
+                    del pending[rid]
+            if not pending and sched.idle:
+                break
+            sched.step()
+        assert sched.idle and not pending
+
+    fb, fr = bs.finished(), rs.finished()
+    for rid in arrivals:
+        assert fb[rid].out_tokens == fr[rid].out_tokens, rid
+        assert fb[rid].first_token_iter == fr[rid].first_token_iter, rid
+        assert fb[rid].pf_start == fr[rid].pf_start, rid
+    assert bs.stats == rs.stats
+    assert be.stats == re_.stats
+    assert be.prefix_cache.stats == re_.prefix_cache.stats
+    assert bs.stats["prefix_cached_tokens"] > 0
+    # later arrivals hit the shared system prompt at its page boundary
+    assert fb[1].pf_start == 24 and fb[3].pf_start == 24
+    _assert_no_refcounts(be.prefix_cache)
+    _assert_pool_consistent(be)
+
+
+def test_in_cohort_same_prefix_dedup(small_model):
+    """Two identical prompts admitted in ONE cohort publish each page
+    once: the second publisher's pages dedup onto the first's cache
+    entries, and both sequences decode identically."""
+    cfg, params = small_model
+    prompt = [1 + (j * 3) % 50 for j in range(20)]      # 19 stored: 2 pages
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = _engine(cfg, params, cache)
+    eng.add_requests({0: list(prompt), 1: list(prompt)})
+    assert cache.stats["deduped"] == 2                  # 2 shared pages
+    assert cache.resident_pages() == 4                  # 2 blocks x 2 layers
+    # dedup reversed the duplicates' accounting: 2 blocks x 2 layers,
+    # counted once despite two publishers
+    assert eng.stats["pages_compressed"] == 4
+    for li in range(cfg.n_layers):
+        assert eng.seqs[0].pages[li][:2] == eng.seqs[1].pages[li][:2]
+    out = [eng.decode_batch() for _ in range(6)]
+    assert all(o[0] == o[1] for o in out)
+    cold = _run(_engine(cfg, params, None), 0, list(prompt), 6)
+    assert [o[0] for o in out] == cold
+    eng.release(0)
+    eng.release(1)
+    _assert_no_refcounts(cache)
+    _assert_pool_consistent(eng)
+
+
+# ---------------------------------------------------------------------------
+# refcount safety under preemption
+# ---------------------------------------------------------------------------
+
+def test_refcount_safety_under_camp_preemption_of_sharer(small_model):
+    """CAMP preempts one of two sequences sharing a cached prefix chain:
+    the shared pages must survive (pinned by the sharer), the survivor's
+    greedy output must stay correct, and only the victim's private
+    suffix pages are freed."""
+    cfg, params = small_model
+    base = [2 + (j * 7) % 40 for j in range(33)]        # 4 shared pages
+    longer = base + [5, 9, 2, 7, 11, 3, 1, 8]           # +1 private page
+    cache = PrefixCache.for_model(cfg, PAGE)
+    # pool: 8 shared + 2 private (seq1) = 10 of 12 usable; seq0's decode
+    # tail publishes (2 pages at step 8, 2 more at step 16) force one
+    # preemption at the step-16 reservation
+    eng = _engine(cfg, params, cache, pool=13)
+    cold = _run(_engine(cfg, params, None, pool=96), 0, list(base), 16)
+    eng.add_requests({0: list(base)})
+    eng.add_requests({1: list(longer)})                 # warm: shares chain
+    chain = list(eng.seqs[1].chain)
+    assert chain[:4] == eng.seqs[0].chain               # 4 shared entries
+    assert all(cache.entries[e].refcount == 2 for e in chain[:4])
+    eng.seqs[1].done = True                             # deterministic victim
+
+    toks0, preempted_at = [], None
+    for step in range(16):
+        toks0.append(eng.decode_batch([0])[0])
+        if eng.seqs[1].preempted and preempted_at is None:
+            preempted_at = step
+    assert preempted_at is not None, "pool never forced a preemption"
+    assert not eng.seqs[0].preempted            # survivor kept its pages
+    assert toks0 == cold                        # tokens unharmed throughout
+    # victim's pins dropped; shared entries survive, pinned by seq 0 only
+    assert all(cache.entries[e].refcount == 1 for e in chain[:4])
+    assert not eng.seqs[1].pages[0] and not eng.seqs[1].chain
+    eng.release(1)
+    eng.release(0)
+    _assert_no_refcounts(cache)
+    _assert_pool_consistent(eng)
+
+
+def test_retained_entries_evict_before_live_preemption(small_model):
+    """Pool pressure reclaims refcount-0 cache entries (SIP order) before
+    CAMP ever preempts a live sequence."""
+    cfg, params = small_model
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = _engine(cfg, params, cache, pool=16)
+    a = [1 + (j * 3) % 50 for j in range(33)]           # 4 pages x 2 layers
+    _run(eng, 0, a, 1)
+    eng.release(0)                                      # 8 retained pages
+    assert cache.retained_pages() == 8
+    b = [9 + (j * 5) % 40 for j in range(41)]           # 5 pages x 2 layers
+    _run(eng, 1, b, 1)                                  # needs 10, 7 free
+    assert eng.stats["prefix_pages_evicted"] > 0
+    assert eng.stats["preemptions"] == 0                # no live victim
+    assert not eng.seqs[1].preempted
+    _assert_pool_consistent(eng)
+
+
+# ---------------------------------------------------------------------------
+# SIP retention policy
+# ---------------------------------------------------------------------------
+
+def _mk_cache(n_layers=1, page=4, raw=1024):
+    return PrefixCache(n_layers, page, raw,
+                       policy=SIPRetention(raw, train_period=4))
+
+
+def test_eviction_order_follows_size_bins():
+    """With no reuse signal, eviction order is size-based: the biggest
+    (least-compressible) entries go first, smallest are retained
+    longest — SIP's size-as-reuse-predictor seed behavior."""
+    c = _mk_cache()
+    eids = {}
+    for i, nbytes in enumerate([900, 60, 400]):
+        eid, created = c.insert(0, (i, i, i, i), [10 + i], nbytes)
+        assert created
+        eids[nbytes] = eid
+    order = [c.evict_for(1)[0] for _ in range(3)]
+    assert order == [10 + 0, 10 + 2, 10 + 1]    # 900B, 400B, then 60B
+
+
+def test_eviction_respects_sip_priority_bins():
+    """After training commits, a size bin that drew lookup hits outranks
+    an equally-sized cold bin."""
+    c = _mk_cache()
+    hot, _ = c.insert(0, (1, 2, 3, 4), [11], 512)
+    cold, _ = c.insert(0, (5, 6, 7, 8), [12], 512)
+    # drive lookups: the hot entry's prefix is looked up repeatedly (the
+    # 5-token prompts cap the walk at 4 stored tokens = 1 page)
+    for _ in range(4):
+        n, chain = c.lookup([1, 2, 3, 4, 99])
+        assert n == 4 and chain == [hot]
+    assert c.policy.priority[c.policy.bin(512)]          # bin trained hot
+    # equal sizes, but the hot entry's hits dominate the value ranking
+    assert c.evict_for(1) == [12]
+    assert hot in c.entries
+
+
+def test_eviction_is_leaf_first():
+    """A chain parent is never evicted while its child is resident, so
+    every resident chain stays reachable from the root."""
+    c = _mk_cache()
+    parent, _ = c.insert(0, (1, 2, 3, 4), [11], 64)     # small: high value
+    child, _ = c.insert(parent, (5, 6, 7, 8), [12], 900)
+    assert c.evict_for(1) == [12]                       # leaf goes first
+    assert parent in c.entries and child not in c.entries
+    assert c.evict_for(1) == [11]                       # then the parent
+
+
+def test_pinned_entries_are_never_victims():
+    c = _mk_cache()
+    eid, _ = c.insert(0, (1, 2, 3, 4), [11], 900)
+    c.pin([eid])
+    assert c.evict_for(1) == []                         # pinned: no victim
+    c.release([eid])
+    assert c.evict_for(1) == [11]
+
+
+# ---------------------------------------------------------------------------
+# preempted-request requeue
+# ---------------------------------------------------------------------------
+
+def _drive_pair(cfg, params, arrivals, *, pool, budget=20, max_batch=4,
+                with_cache=True, requeue=True, max_iters=400):
+    mkcache = (lambda: PrefixCache.for_model(cfg, PAGE)) if with_cache \
+        else (lambda: None)
+    be = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                       max_batch=max_batch, prefix_cache=mkcache())
+    re_ = ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                 n_pool_pages=pool, prefix_cache=mkcache())
+    bs = ContinuousScheduler(be, token_budget=budget,
+                             requeue_preempted=requeue)
+    rs = make_reference_scheduler(re_, token_budget=budget,
+                                  max_batch=max_batch,
+                                  prefill_chunk=be.prefill_chunk,
+                                  requeue_preempted=requeue)
+    for sched in (bs, rs):
+        pending = dict(arrivals)
+        for it in range(max_iters):
+            for rid, (t, prompt, kw) in list(pending.items()):
+                if t <= it:
+                    sched.submit(rid, list(prompt), **kw)
+                    del pending[rid]
+            if not pending and sched.idle:
+                break
+            sched.step()
+        assert sched.idle and not pending, "workload did not drain"
+    return bs, rs
+
+
+# requeue round-trip workload: rid 0 (5 pages x 2 layers) decodes long;
+# rid 1's huge prompt hits pool pressure early in its prefill, while it
+# still holds few pages itself — its CAMP value (tokens/size) is then
+# far above rid 0's, so rid 0 is deterministically the victim in both
+# engines.  rid 1 finishes after one token; rid 0's recompute-from-
+# prompt re-prefill is then fed by evicting rid 1's retained entries
+# (never another preemption) and finishes with its full token budget.
+_REQUEUE_ARRIVALS = {
+    0: (0, [2 + (j * 7) % 40 for j in range(41)],       # 5 pages x 2
+        {"max_new_tokens": 30}),
+    1: (4, [1 + (j * 11) % 60 for j in range(73)],      # 9 pages x 2
+        {"max_new_tokens": 1}),
+}
+
+
+def test_requeue_after_preemption_round_trip(small_model):
+    """A CAMP-preempted decoding request re-enters the queue, re-prefills
+    prompt+generated (recompute-from-prompt re-pins whatever cached
+    prefix survived eviction) and finishes with its full token budget —
+    identically on both engines."""
+    cfg, params = small_model
+    bs, rs = _drive_pair(cfg, params, _REQUEUE_ARRIVALS, pool=21)
+    fb, fr = bs.finished(), rs.finished()
+    assert set(fb) == set(fr) == set(_REQUEUE_ARRIVALS)
+    assert bs.stats["requeues"] >= 1
+    assert bs.stats == rs.stats
+    for rid in _REQUEUE_ARRIVALS:
+        assert fb[rid].out_tokens == fr[rid].out_tokens, rid
+        assert fb[rid].finish_reason == fr[rid].finish_reason, rid
+        # nothing retires as "preempted" anymore: requeue absorbed it
+        assert fb[rid].finish_reason in ("length", "eos"), rid
+    assert fb[0].requeues >= 1
+    assert len(fb[0].out_tokens) == 30          # full budget despite requeue
+    # the recompute prompt folded in the pre-preemption output tokens
+    assert fb[0].req.prompt[41:] == fb[0].out_tokens[:fb[0].absorbed]
+    # the re-admission re-pinned surviving cached pages (warm recompute)
+    assert bs.stats["prefix_cached_tokens"] > 0
+    _assert_no_refcounts(bs.engine.prefix_cache)
+    _assert_pool_consistent(bs.engine)
+
+
+def test_requeue_without_cache_still_completes(small_model):
+    """Requeue works with no prefix cache attached: recompute-from-prompt
+    simply re-prefills everything."""
+    cfg, params = small_model
+    bs, rs = _drive_pair(cfg, params, _REQUEUE_ARRIVALS, pool=21,
+                         with_cache=False)
+    fb, fr = bs.finished(), rs.finished()
+    assert bs.stats["requeues"] >= 1
+    for rid in _REQUEUE_ARRIVALS:
+        assert fb[rid].out_tokens == fr[rid].out_tokens, rid
+        assert fb[rid].finish_reason in ("length", "eos"), rid
+    assert len(fb[0].out_tokens) == 30
+
+
+def test_requeue_limit_falls_back_to_preempted_finish(small_model):
+    """When max_requeues is exhausted the request retires with
+    finish_reason "preempted" exactly like the non-requeue path."""
+    cfg, params = small_model
+    prompt = [1 + (j * 11) % 60 for j in range(73)]     # 9 pages x 2 > pool
+    be = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=10,
+                       max_batch=2)
+    bs = ContinuousScheduler(be, token_budget=24, requeue_preempted=True,
+                             max_requeues=2)
+    bs.submit(0, prompt, max_new_tokens=4)
+    for _ in range(200):
+        if bs.idle:
+            break
+        bs.step()
+    tr = bs.finished()[0]
+    assert tr.finish_reason == "preempted"
+    assert tr.requeues == 2
+    assert bs.stats["requeues"] == 2
+
+
+# ---------------------------------------------------------------------------
+# shared-dispatch shape invariances (the oracle contract)
+# ---------------------------------------------------------------------------
+
+def test_prefill_dispatch_shape_invariance(small_model):
+    """The jitted prefill dispatch is bit-invariant to scratch row count,
+    scratch length, and chunk-grid splits — the property that lets the
+    reference oracle replay a different schedule shape through the same
+    kernel and still match token-for-token."""
+    cfg, params = small_model
+    prompt = [1 + (j * 3) % 50 for j in range(34)]
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def run(chunks, nrows, tmax):
+        kscr = jnp.zeros((cfg.n_layers, nrows, tmax, kvh, dh), jnp.float32)
+        vscr = jnp.zeros_like(kscr)
+        kcan = jnp.zeros_like(kscr)
+        vcan = jnp.zeros_like(kscr)
+        buf = np.zeros((nrows, tmax), np.int32)
+        buf[:, :34] = prompt
+        off = 0
+        for n in chunks:
+            pt = np.zeros((nrows, 16), np.int32)
+            o = min(off, tmax - 16)
+            pt[:, :16] = buf[:, o:o + 16]
+            pt[:, n:] = 0
+            kscr, vscr, kcan, vcan = E._prefill_chunk(
+                params, jnp.asarray(pt), kscr, vscr, kcan, vcan,
+                jnp.full((nrows,), o, jnp.int32), cfg=cfg, page=PAGE)
+            off += n
+        return np.asarray(kscr[:, 0, :33])
+
+    base = run([16, 16, 1], 1, 64)
+    np.testing.assert_array_equal(base, run([16, 16, 1], 4, 64))
+    np.testing.assert_array_equal(base, run([16, 16, 1], 1, 128))
+    np.testing.assert_array_equal(base, run([9, 7, 16, 1], 1, 64))
+    np.testing.assert_array_equal(base, run([5, 11, 16, 1], 1, 64))
+
+
+def test_warm_hit_with_non_pow2_chunk_ratio(small_model):
+    """Regression: a deep cached chain plus a page-aligned but
+    non-power-of-two prefill_chunk/page ratio used to push the rounded
+    warm-scratch fill block past the scratch length."""
+    cfg, params = small_model
+    cache = PrefixCache.for_model(cfg, PAGE)
+    prompt = [1 + (j * 3) % 50 for j in range(145)]      # 18 cached pages
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=96,
+                        max_batch=4, prefill_chunk=3 * PAGE,
+                        prefix_cache=cache)
+    _run(eng, 0, prompt, 2)
+    eng.release(0)
+    fork = prompt + [5, 9, 2, 7, 11]
+    warm = _run(eng, 1, fork, 4)                         # deep warm start
+    cold = _run(PagedKVEngine(cfg, params, page_size=PAGE,
+                              n_pool_pages=96, max_batch=4,
+                              prefill_chunk=3 * PAGE), 0, fork, 4)
+    assert warm == cold

@@ -155,12 +155,12 @@ def test_camp_preemption_during_inflight_prefill(small_model):
     stay token-for-token with the oracle."""
     cfg, params = small_model
     bs, rs = _pair(cfg, params, n_pool_pages=17, token_budget=20)
-    arrivals = {
-        0: (0, [2 + (j * 7) % 40 for j in range(24)],   # 3 pages x 2 layers
+    arrivals = {                       # page counts are (len-1)//PAGE
+        0: (0, [2 + (j * 7) % 40 for j in range(25)],   # 3 pages x 2 layers
             {"max_new_tokens": 30}),
         1: (0, [3, 1, 4, 1, 5],                          # tail-only: 0 pages
             {"max_new_tokens": 30}),
-        2: (4, [3 + (j * 5) % 40 for j in range(40)],    # 5 pages x 2 layers
+        2: (4, [3 + (j * 5) % 40 for j in range(41)],    # 5 pages x 2 layers
             {"max_new_tokens": 4}),
     }
     _drive(bs, arrivals)

@@ -172,8 +172,10 @@ def test_prefill_camp_preemption_mid_prefill(small_model):
     """
     cfg, params = small_model
     re_, be = _pair(cfg, params, n_pool_pages=15)
-    long_a = [2 + (j * 7) % 40 for j in range(40)]    # 5 pages x 2 layers
-    long_b = [3 + (j * 5) % 40 for j in range(40)]
+    # 41 tokens -> 40 stored -> 5 pages x 2 layers (prefill stores every
+    # prompt token but the last; decode writes the last one into the tail)
+    long_a = [2 + (j * 7) % 40 for j in range(41)]
+    long_b = [3 + (j * 5) % 40 for j in range(41)]
     for eng in (re_, be):
         eng.add_request(0, long_a)
         eng.seqs[0].done = True

@@ -284,7 +284,7 @@ def test_paged_engine_compression_ratio(served_model):
     from repro.serving.engine import PagedKVEngine
     cfg, _, params = served_model
     eng = PagedKVEngine(cfg, params, page_size=4, n_pool_pages=64)
-    eng.add_request(0, list(range(1, 17)))
+    eng.add_request(0, list(range(1, 18)))     # 16 stored -> 4 full pages
     assert eng.stats["pages_compressed"] >= cfg.n_layers * 4
     r = eng.compression_ratio()
     assert 1.3 < r < 2.2            # int8+meta vs bf16
@@ -294,8 +294,8 @@ def test_paged_engine_pool_preemption(served_model):
     from repro.serving.engine import PagedKVEngine
     cfg, _, params = served_model
     eng = PagedKVEngine(cfg, params, page_size=4, n_pool_pages=8)
-    eng.add_request(0, list(range(1, 9)))
-    eng.add_request(1, list(range(3, 11)))
-    eng.add_request(2, list(range(5, 13)))   # must preempt someone
+    eng.add_request(0, list(range(1, 10)))   # 8 stored -> 2 pages/layer
+    eng.add_request(1, list(range(3, 12)))
+    eng.add_request(2, list(range(5, 14)))   # must preempt someone
     assert eng.stats["preemptions"] >= 1
     assert eng.pool_used_pages() <= 7
