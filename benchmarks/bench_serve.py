@@ -26,6 +26,10 @@ one priming request), reporting the token-weighted prefix hit rate and
 the warm-vs-cold p95 TTFT ratio.  CI gates the structural
 ``warm_ttft_p95 <= cold_ttft_p95`` win and a minimum hit rate.
 
+Every row is labeled with the KV page codec in use (``--codec`` /
+``REPRO_CODEC``; default bdi) and its measured compression ratio, so
+``results/serve/`` JSONs stay comparable across PRs and codecs.
+
 Run: PYTHONPATH=src python -m benchmarks.bench_serve [--quick | --smoke]
 CI:  the ``bench-smoke`` job runs ``--smoke`` and gates the batched +
 scheduler + prefix rows against ``benchmarks/baselines/serve_ci.json``
@@ -72,14 +76,16 @@ _PREFIX_MODES = {
 SYS_PROMPT_LEN = 41          # 5 cached pages of 8 + tail; suffixes are short
 
 
-def _build(cfg, params, engine: str, batch: int, pool: int):
+def _build(cfg, params, engine: str, batch: int, pool: int,
+           codec: str | None = None):
     if engine == "batched":
         from repro.serving.engine import PagedKVEngine
         return PagedKVEngine(cfg, params, page_size=PAGE,
-                             n_pool_pages=pool, max_batch=batch)
+                             n_pool_pages=pool, max_batch=batch,
+                             codec=codec)
     from repro.serving.reference import ReferencePagedKVEngine
     return ReferencePagedKVEngine(cfg, params, page_size=PAGE,
-                                  n_pool_pages=pool)
+                                  n_pool_pages=pool, codec=codec)
 
 
 def _prompts(cfg, batch: int) -> dict[int, list[int]]:
@@ -88,11 +94,11 @@ def _prompts(cfg, batch: int) -> dict[int, list[int]]:
 
 
 def _bench_engine(cfg, params, engine: str, batch: int,
-                  decode_steps: int) -> dict:
+                  decode_steps: int, codec: str | None = None) -> dict:
     pool = max(256, batch * 16)
     prompts = _prompts(cfg, batch)
 
-    warm = _build(cfg, params, engine, batch, pool)   # pays jit tracing
+    warm = _build(cfg, params, engine, batch, pool, codec)  # jit tracing
     warm.add_requests(prompts)
     if engine == "batched":
         for _ in range(PAGE):    # through a tail fill -> publish is traced
@@ -101,7 +107,7 @@ def _bench_engine(cfg, params, engine: str, batch: int,
         warm.decode_one(0)
     del warm      # free its pools; the jit trace cache is global
 
-    eng = _build(cfg, params, engine, batch, pool)
+    eng = _build(cfg, params, engine, batch, pool, codec)
     t0 = time.time()
     eng.add_requests(prompts)
     prefill_s = time.time() - t0
@@ -123,6 +129,7 @@ def _bench_engine(cfg, params, engine: str, batch: int,
 
     return {
         "bench": "serve", "engine": engine, "batch": batch,
+        "codec": eng.codec.name,
         "prompt_len": PROMPT_LEN, "decode_steps": decode_steps,
         "prefill_mode": "chunked" if engine == "batched" else "host-loop",
         "prefill_tok_s": round(batch * PROMPT_LEN / prefill_s, 1),
@@ -145,7 +152,8 @@ def _sched_workload(cfg, n_req: int) -> list[dict]:
             for i in range(n_req)]
 
 
-def _warm_sched_shapes(cfg, params, slots: int, pool: int) -> None:
+def _warm_sched_shapes(cfg, params, slots: int, pool: int,
+                       codec: str | None = None) -> None:
     """Trace every dispatch shape the open-loop runs can hit, so the
     timed runs measure steady state rather than jit compilation.
 
@@ -159,7 +167,8 @@ def _warm_sched_shapes(cfg, params, slots: int, pool: int) -> None:
     for k in range(1, slots + 1):
         if k < slots:                 # mixed: one slot kept decoding
             eng = PagedKVEngine(cfg, params, page_size=PAGE,
-                                n_pool_pages=pool, max_batch=slots)
+                                n_pool_pages=pool, max_batch=slots,
+                                codec=codec)
             sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
             sched.submit(-1, [1, 2, 3], max_new_tokens=40)
             while sched.tracks[-1].state != "running":
@@ -168,7 +177,8 @@ def _warm_sched_shapes(cfg, params, slots: int, pool: int) -> None:
                 sched.submit(i, [1 + i] * 16, max_new_tokens=2)
             sched.run()
         eng = PagedKVEngine(cfg, params, page_size=PAGE,
-                            n_pool_pages=pool, max_batch=slots)
+                            n_pool_pages=pool, max_batch=slots,
+                            codec=codec)
         eng.add_requests({i: [1 + i] * 16 for i in range(k)})
         eng.decode_batch()
 
@@ -194,7 +204,8 @@ def _req_metrics(t0: float, arrivals: list[float], firsts: list[float],
 
 
 def _run_continuous(cfg, params, reqs, gap: float, slots: int,
-                    pool: int, engine=None) -> dict:
+                    pool: int, engine=None,
+                    codec: str | None = None) -> dict:
     """Open-loop drive of the continuous scheduler: request i arrives at
     ``i * gap`` seconds; admit/retire between iterations.  ``engine``
     lets the prefix-cache scenario reuse a primed engine+cache."""
@@ -202,7 +213,8 @@ def _run_continuous(cfg, params, reqs, gap: float, slots: int,
     from repro.serving.scheduler import ContinuousScheduler
 
     eng = engine if engine is not None else PagedKVEngine(
-        cfg, params, page_size=PAGE, n_pool_pages=pool, max_batch=slots)
+        cfg, params, page_size=PAGE, n_pool_pages=pool, max_batch=slots,
+        codec=codec)
     sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
     t0 = time.time()
     arrivals = {r["rid"]: t0 + r["rid"] * gap for r in reqs}
@@ -227,11 +239,13 @@ def _run_continuous(cfg, params, reqs, gap: float, slots: int,
         sum(len(fin[r].out_tokens) for r in order))
     m["mixed_iterations"] = sched.stats["mixed_iterations"]
     m["iterations"] = sched.stats["iterations"]
+    m["codec"] = eng.codec.name
+    m["kv_compression_ratio"] = round(eng.compression_ratio(), 3)
     return m
 
 
 def _run_static(cfg, params, reqs, gap: float, slots: int,
-                pool: int) -> dict:
+                pool: int, codec: str | None = None) -> dict:
     """Static-batch baseline at the same arrival rate: form a batch from
     whatever has arrived (up to ``slots``), prefill it, decode until the
     *whole batch* drains, release, repeat — the phase-wise convoy the
@@ -239,7 +253,7 @@ def _run_static(cfg, params, reqs, gap: float, slots: int,
     from repro.serving.engine import PagedKVEngine
 
     eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
-                        max_batch=slots)
+                        max_batch=slots, codec=codec)
     t0 = time.time()
     arrivals = {r["rid"]: t0 + r["rid"] * gap for r in reqs}
     queue = list(reqs)
@@ -272,9 +286,12 @@ def _run_static(cfg, params, reqs, gap: float, slots: int,
         for r in batch:
             eng.release(r["rid"])
     order = [r["rid"] for r in reqs]
-    return _req_metrics(t0, [arrivals[r] for r in order],
-                        [firsts[r] for r in order],
-                        [finishes[r] for r in order], n_tokens)
+    m = _req_metrics(t0, [arrivals[r] for r in order],
+                     [firsts[r] for r in order],
+                     [finishes[r] for r in order], n_tokens)
+    m["codec"] = eng.codec.name
+    m["kv_compression_ratio"] = round(eng.compression_ratio(), 3)
+    return m
 
 
 def _sys_prompt(cfg) -> list[int]:
@@ -295,20 +312,22 @@ def _prefix_workload(cfg, n_req: int, salt: int) -> list[dict]:
             for i in range(n_req)]
 
 
-def _primed_engine(cfg, params, slots: int, pool: int):
+def _primed_engine(cfg, params, slots: int, pool: int,
+                   codec: str | None = None):
     """Engine with a prefix cache primed by one system-prompt request."""
     from repro.serving.engine import PagedKVEngine
     from repro.serving.prefix_cache import PrefixCache
 
     cache = PrefixCache.for_model(cfg, PAGE)
     eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
-                        max_batch=slots, prefix_cache=cache)
+                        max_batch=slots, prefix_cache=cache, codec=codec)
     eng.add_requests({-1: _sys_prompt(cfg) + [1]})
     eng.release(-1)          # pages stay cache-retained
     return eng
 
 
-def _warm_prefix_shapes(cfg, params, slots: int, pool: int) -> None:
+def _warm_prefix_shapes(cfg, params, slots: int, pool: int,
+                        codec: str | None = None) -> None:
     """Trace every dispatch shape the prefix-bench open-loop runs can
     hit (arrival timing decides cohort row counts, so warm them all:
     mixed and prefill-only cohorts of every size, cold and warm-start,
@@ -318,9 +337,11 @@ def _warm_prefix_shapes(cfg, params, slots: int, pool: int) -> None:
 
     for primed in (False, True):
         for k in range(1, slots + 1):
-            eng = (_primed_engine(cfg, params, slots, pool) if primed
+            eng = (_primed_engine(cfg, params, slots, pool, codec)
+                   if primed
                    else PagedKVEngine(cfg, params, page_size=PAGE,
-                                      n_pool_pages=pool, max_batch=slots))
+                                      n_pool_pages=pool, max_batch=slots,
+                                      codec=codec))
             sched = ContinuousScheduler(eng, token_budget=SCHED_BUDGET)
             if k < slots:             # mixed: one slot kept decoding
                 sched.submit(-2, _prefix_workload(cfg, 1, 6000)[0]["prompt"],
@@ -333,7 +354,8 @@ def _warm_prefix_shapes(cfg, params, slots: int, pool: int) -> None:
             sched.run()
 
 
-def _bench_prefix(cfg, params, mode: str) -> list[dict]:
+def _bench_prefix(cfg, params, mode: str,
+                  codec: str | None = None) -> list[dict]:
     """Warm vs cold TTFT under a shared system prompt.
 
     Cold = no prefix cache (every request prefills the full prompt);
@@ -343,15 +365,16 @@ def _bench_prefix(cfg, params, mode: str) -> list[dict]:
     n_req, slots = _PREFIX_MODES[mode]
     pool = 256
 
-    _warm_prefix_shapes(cfg, params, slots, pool)
+    _warm_prefix_shapes(cfg, params, slots, pool, codec)
     t0 = time.time()
     _run_continuous(cfg, params, _prefix_workload(cfg, n_req, 9000), 0.0,
-                    slots, pool)
+                    slots, pool, codec=codec)
     gap = (time.time() - t0) / max(1, n_req) * 0.5
 
     reqs = _prefix_workload(cfg, n_req, 0)
-    cold = _run_continuous(cfg, params, reqs, gap, slots, pool)
-    warm_eng = _primed_engine(cfg, params, slots, pool)
+    cold = _run_continuous(cfg, params, reqs, gap, slots, pool,
+                           codec=codec)
+    warm_eng = _primed_engine(cfg, params, slots, pool, codec)
     warm = _run_continuous(cfg, params, reqs, gap, slots, pool,
                            engine=warm_eng)
     hit_rate = warm_eng.prefix_cache.hit_rate()
@@ -369,7 +392,8 @@ def _bench_prefix(cfg, params, mode: str) -> list[dict]:
     return [warm, cold]
 
 
-def _bench_scheduler(cfg, params, mode: str) -> list[dict]:
+def _bench_scheduler(cfg, params, mode: str,
+                     codec: str | None = None) -> list[dict]:
     """Open-loop arrival benchmark: continuous scheduler vs static batch
     at the same arrival rate."""
     n_req, slots = _SCHED_MODES[mode]
@@ -378,19 +402,20 @@ def _bench_scheduler(cfg, params, mode: str) -> list[dict]:
 
     # warm every cohort/dispatch shape on throwaway instances (jit cache
     # is global), then both full paths for the publish-size variants
-    _warm_sched_shapes(cfg, params, slots, pool)
-    _run_continuous(cfg, params, reqs, 0.0, slots, pool)
-    _run_static(cfg, params, reqs, 0.0, slots, pool)
+    _warm_sched_shapes(cfg, params, slots, pool, codec)
+    _run_continuous(cfg, params, reqs, 0.0, slots, pool, codec=codec)
+    _run_static(cfg, params, reqs, 0.0, slots, pool, codec)
 
     # arrival gap scaled to measured iteration time so "same arrival
     # rate" means the same *relative* load on any runner speed
     t0 = time.time()
-    _run_continuous(cfg, params, reqs, 0.0, slots, pool)
+    _run_continuous(cfg, params, reqs, 0.0, slots, pool, codec=codec)
     iter_s = (time.time() - t0) / max(1, n_req)
     gap = iter_s * 0.5
 
-    cont = _run_continuous(cfg, params, reqs, gap, slots, pool)
-    stat = _run_static(cfg, params, reqs, gap, slots, pool)
+    cont = _run_continuous(cfg, params, reqs, gap, slots, pool,
+                           codec=codec)
+    stat = _run_static(cfg, params, reqs, gap, slots, pool, codec)
     cont.update({
         "bench": "serve_sched", "engine": "scheduler", "batch": slots,
         "n_requests": n_req, "token_budget": SCHED_BUDGET,
@@ -406,7 +431,7 @@ def _bench_scheduler(cfg, params, mode: str) -> list[dict]:
     return [cont, stat]
 
 
-def rows(mode: str = "full") -> list[dict]:
+def rows(mode: str = "full", codec: str | None = None) -> list[dict]:
     import jax
 
     from repro.configs.registry import get_arch
@@ -420,15 +445,17 @@ def rows(mode: str = "full") -> list[dict]:
     out = []
     for batch in batches:
         # reference is ~15x slower per token: fewer timed steps there
-        batched = _bench_engine(cfg, params, "batched", batch, bat_steps)
-        refr = _bench_engine(cfg, params, "reference", batch, ref_steps)
+        batched = _bench_engine(cfg, params, "batched", batch, bat_steps,
+                                codec)
+        refr = _bench_engine(cfg, params, "reference", batch, ref_steps,
+                             codec)
         batched["decode_speedup_vs_reference"] = round(
             batched["decode_tok_s"] / refr["decode_tok_s"], 2)
         batched["prefill_speedup_vs_reference"] = round(
             batched["prefill_tok_s"] / refr["prefill_tok_s"], 2)
         out.extend([batched, refr])
-    out.extend(_bench_scheduler(cfg, params, mode))
-    out.extend(_bench_prefix(cfg, params, mode))
+    out.extend(_bench_scheduler(cfg, params, mode, codec))
+    out.extend(_bench_prefix(cfg, params, mode, codec))
     return out
 
 
@@ -444,8 +471,8 @@ def save_json(rs: list[dict]) -> str:
     return path
 
 
-def main(mode: str = "full") -> None:
-    rs = rows(mode=mode)
+def main(mode: str = "full", codec: str | None = None) -> None:
+    rs = rows(mode=mode, codec=codec)
     for r in rs:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     path = save_json(rs)
@@ -458,5 +485,12 @@ if __name__ == "__main__":
                     help="batch 1/8 only, fewer timed steps")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sizes (implies --quick)")
+    ap.add_argument("--codec", default=None,
+                    help="KV page codec for every engine in the bench "
+                         "(bdi | zero | raw; default: REPRO_CODEC or "
+                         "bdi) — rows carry the codec name + measured "
+                         "compression ratio so trajectories stay "
+                         "comparable across PRs")
     args = ap.parse_args()
-    main(mode="smoke" if args.smoke else "quick" if args.quick else "full")
+    main(mode="smoke" if args.smoke else "quick" if args.quick else "full",
+         codec=args.codec)

@@ -62,6 +62,14 @@ def check(current: dict, baseline: dict, max_drop: float,
             failures.append(f"{engine} batch {batch}: missing from "
                             "current results")
             continue
+        # codec-labeled rows must match the baseline's codec (when the
+        # baseline records one) — a bdi floor says nothing about raw/zero
+        if brow.get("codec") and crow.get("codec") \
+                and brow["codec"] != crow["codec"]:
+            failures.append(
+                f"{engine} batch {batch}: codec {crow['codec']!r} does "
+                f"not match baseline codec {brow['codec']!r}")
+            continue
         for metric in METRICS[engine]:
             floor = brow[metric] * (1.0 - max_drop)
             got = crow.get(metric, 0.0)
@@ -117,6 +125,8 @@ def update_baseline(current: dict, path: str, derate: float) -> None:
         if engine not in METRICS:
             continue
         row = {"engine": engine, "batch": r["batch"]}
+        if r.get("codec"):
+            row["codec"] = r["codec"]
         for metric in METRICS[engine]:
             row[metric] = round(r[metric] * derate, 1)
         rows.append(row)

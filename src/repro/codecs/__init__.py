@@ -1,0 +1,30 @@
+"""Pluggable KV page codecs for the serving stack.
+
+``PageCodec`` (base.py) is the seam the LCP paper promises — "any
+compression algorithm can be adapted to fit the requirements of LCP" —
+made concrete: the paged engines, reference oracle, prefix cache, and
+benchmarks consume this protocol and never name a codec directly.
+
+Registered instances (importing this package registers all built-ins):
+
+  * ``bdi``  — single-base B+Delta int8 rows with Pallas fused kernels
+    (the thesis codec; the default);
+  * ``zero`` — zero/repeated-value fast path with exact exception
+    payloads (LCP's zero-page case; lossless);
+  * ``raw``  — verbatim pages, compressed size == raw size (LCP's
+    exception story; lossless).
+
+``REPRO_CODEC=bdi|zero|raw`` picks the process-wide default; see
+README.md here for how to add a codec.
+"""
+
+from .base import (PageCodec, available, default_name, get, register,
+                   resolve)
+from .bdi import BDI, BDICodec
+from .raw import RAW, RawCodec
+from .zero import ZERO, ZeroRepCodec
+
+__all__ = [
+    "PageCodec", "available", "default_name", "get", "register", "resolve",
+    "BDI", "BDICodec", "RAW", "RawCodec", "ZERO", "ZeroRepCodec",
+]

@@ -6,6 +6,11 @@ dispatch: on TPU the Pallas path compiles natively; elsewhere kernels run in
 The policy lives in :func:`default_interpret` (re-exported from
 ``kernels._backend``): False on TPU backends, True otherwise, with a
 ``REPRO_PALLAS_INTERPRET`` env override.
+
+This module is the **BDI instance's** kernel surface: the serving stack
+never imports it directly anymore — it consumes the
+:class:`repro.codecs.PageCodec` protocol, and ``codecs/bdi.py`` adapts
+these entry points to it.
 """
 
 from __future__ import annotations
@@ -41,11 +46,19 @@ def compress(x: jax.Array, *, block_n: int = 8) -> ref.PackedTiles:
 
 
 def decompress(p: ref.PackedTiles, *, block_n: int = 8) -> jax.Array:
-    """Decompress PackedTiles to f32 [N, T] with the Pallas decompressor."""
+    """Decompress PackedTiles to f32 [N, T] with the Pallas decompressor.
+
+    No scale patch-up here: the compressors guarantee a valid scale for
+    every tile — all-constant (incl. all-zero) tiles have zero max
+    residual and emit scale 1.0 (``_pow2_scale``'s ``maxres > 0`` guard,
+    reproduced bit-exactly in the Pallas kernel); pad rows appended
+    below are sliced off before anything reads them.  Pinned by the
+    all-zeros/all-constant roundtrip tests in tests/test_kernels.py.
+    """
     n = p.deltas.shape[0]
     deltas, _ = _pad_rows(p.deltas, block_n)
     base, _ = _pad_rows(p.base, block_n)
-    scale, _ = _pad_rows(jnp.where(p.scale == 0, 1.0, p.scale), block_n)
+    scale, _ = _pad_rows(p.scale, block_n)
     maskp, _ = _pad_rows(p.maskp, block_n)
     return _decompress_kernel(deltas, base, scale, maskp,
                               block_n=block_n)[:n]

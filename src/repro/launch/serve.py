@@ -21,6 +21,11 @@ for a system-prompt workload; the per-request report shows cached
 tokens), and ``--requeue-preempted`` turns CAMP preemptions into
 recompute-from-prompt requeues instead of terminal retirements.
 
+``--codec`` selects the KV page codec (``bdi`` | ``zero`` | ``raw``;
+see ``repro.codecs``); every paged mode reports the aggregate and — in
+scheduler mode — per-request compression ratio (raw vs device-reported
+compressed bytes), labeled by codec name.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
       --prompt-len 16 --gen 16 [--paged | --paged-reference | --scheduler]
@@ -45,7 +50,8 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              scheduler: bool = False, token_budget: int = 64,
              arrival_stagger: int = 2, prefix_cache: bool = False,
              shared_prefix: int = 0,
-             requeue_preempted: bool = False) -> dict:
+             requeue_preempted: bool = False,
+             codec: str | None = None) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -62,7 +68,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         cache = (PrefixCache.for_model(cfg, 8) if prefix_cache else None)
         eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
                             max_batch=batch, prefill_chunk=prefill_chunk,
-                            prefix_cache=cache)
+                            prefix_cache=cache, codec=codec)
         sched = ContinuousScheduler(eng, token_budget=token_budget,
                                     requeue_preempted=requeue_preempted)
         # shared system prompt: every request reuses the first
@@ -90,15 +96,21 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         outs = [fin[b].out_tokens for b in range(batch)]
         # first_token_iter stays None when a request retires preempted
         # before emitting anything (e.g. past the requeue limit)
+        def req_ratio(b):
+            raw, comp = eng.request_bytes.get(b, (0, 0))
+            return round(raw / comp, 3) if comp else None
+
         report = {b: {"ttft_iters": (fin[b].first_token_iter - arrivals[b]
                                      if fin[b].first_token_iter is not None
                                      else None),
                       "latency_iters": fin[b].finished_iter - arrivals[b],
                       "cached_tokens": fin[b].pf_start,
+                      "compression_ratio": req_ratio(b),
                       "reason": fin[b].finish_reason}
                   for b in range(batch)}
-        out = {"tokens": outs, "kv_compression_ratio":
-               eng.compression_ratio(), "stats": eng.stats,
+        out = {"tokens": outs, "codec": eng.codec.name,
+               "kv_compression_ratio": eng.compression_ratio(),
+               "stats": eng.stats,
                "sched_stats": sched.stats, "per_request": report,
                "tok_per_s": sum(len(o) for o in outs) / dt}
         if cache is not None:
@@ -112,7 +124,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         if paged_reference:
             from repro.serving.reference import ReferencePagedKVEngine
             eng = ReferencePagedKVEngine(cfg, params, page_size=8,
-                                         n_pool_pages=512)
+                                         n_pool_pages=512, codec=codec)
             eng.add_requests(reqs)
             for _ in range(gen):
                 for b in range(batch):
@@ -120,14 +132,16 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         else:
             from repro.serving.engine import PagedKVEngine
             eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
-                                max_batch=batch, prefill_chunk=prefill_chunk)
+                                max_batch=batch, prefill_chunk=prefill_chunk,
+                                codec=codec)
             eng.add_requests(reqs)      # one chunked-batch prefill pass
             for _ in range(gen):
                 eng.decode_batch()
         dt = time.time() - t0
         outs = [eng.seqs[b].tokens[prompt_len:] for b in range(batch)]
-        return {"tokens": outs, "kv_compression_ratio":
-                eng.compression_ratio(), "stats": eng.stats,
+        return {"tokens": outs, "codec": eng.codec.name,
+                "kv_compression_ratio": eng.compression_ratio(),
+                "stats": eng.stats,
                 "tok_per_s": batch * gen / dt}
 
     max_len = prompt_len + gen
@@ -178,6 +192,9 @@ def main() -> None:
     ap.add_argument("--requeue-preempted", action="store_true",
                     help="CAMP-preempted requests re-enter the queue "
                          "with recompute-from-prompt instead of retiring")
+    ap.add_argument("--codec", default=None,
+                    help="KV page codec (bdi | zero | raw; default: "
+                         "REPRO_CODEC env or bdi)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
@@ -187,18 +204,24 @@ def main() -> None:
                    arrival_stagger=args.arrival_stagger,
                    prefix_cache=args.prefix_cache,
                    shared_prefix=args.shared_prefix,
-                   requeue_preempted=args.requeue_preempted)
+                   requeue_preempted=args.requeue_preempted,
+                   codec=args.codec)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
-        print(f"[serve] KV compression ratio: "
-              f"{out['kv_compression_ratio']:.2f}x; stats: {out['stats']}")
+        print(f"[serve] codec {out['codec']}: aggregate compression "
+              f"{out['kv_compression_ratio']:.2f}x (raw/compressed "
+              f"device-reported bytes); stats: {out['stats']}")
     if "sched_stats" in out:
         print(f"[serve] scheduler: {out['sched_stats']}")
         for rid, r in out["per_request"].items():
+            ratio = r["compression_ratio"]
             print(f"[serve]   req {rid}: ttft {r['ttft_iters']} iters, "
                   f"latency {r['latency_iters']} iters, "
-                  f"{r['cached_tokens']} cached ({r['reason']})")
+                  f"{r['cached_tokens']} cached, "
+                  f"{out['codec']} ratio "
+                  f"{'n/a' if ratio is None else f'{ratio:.2f}x'} "
+                  f"({r['reason']})")
     if "prefix_cache" in out:
         print(f"[serve] prefix cache: {out['prefix_cache']}")
 

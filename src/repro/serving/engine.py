@@ -2,8 +2,12 @@
 
 The inference-side integration of all three thesis pillars:
 
-  * KV pages are stored **compressed** (B+Delta int8 form, the layout the
-    fused Pallas decode kernel reads — kernels/paged_attention.py);
+  * KV pages are stored **compressed** through a pluggable
+    :class:`~repro.codecs.PageCodec` (default: the single-base BDI int8
+    row form, whose layout the fused Pallas decode kernel reads —
+    kernels/paged_attention.py; ``codec="zero"``/``"raw"`` swap in the
+    zero-page fast path / uncompressed fallback without touching the
+    engine);
   * page addressing is **LCP**: fixed target size per page, page table ->
     pool index, one shift to locate a token (no prefix sums);
   * the finite HBM page pool is managed by **CAMP**-style value scoring:
@@ -58,11 +62,12 @@ prompt token's K/V exactly once into the tail (this fixed the historical
     retraces at most a handful of times) so shapes stay static across
     steps; inactive batch slots ride along masked.
   * Attention over [compressed pages + uncompressed tail] selects its
-    implementation by backend: on TPU the fused BDI-dequant Pallas kernel
-    (``kernels.paged_attention_tail``) reads the pool in compressed form;
-    elsewhere a jnp gather-dequant-dense fallback runs inside the same
-    jit (``REPRO_PALLAS_INTERPRET`` / the ``use_fused`` ctor arg
-    override the detection).
+    implementation by backend and codec: on TPU a codec that ships a
+    fused kernel (BDI: the fused-dequant Pallas kernel,
+    ``kernels.paged_attention_tail``) reads the pool in compressed form;
+    elsewhere a generic gather-decompress-dense jnp fallback runs inside
+    the same jit (``REPRO_PALLAS_INTERPRET`` / the ``use_fused`` ctor
+    arg override the detection).
   * Page-fill compression is batched: every freshly filled tail of every
     layer is compressed in one jitted dispatch
     (:func:`_compress_blocks`), which also computes per-page compressed
@@ -100,9 +105,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.configs.base import ArchConfig
-from repro.kernels import ops, ref
-from repro.kernels.paged_attention import paged_attention_tail
+from repro.kernels._backend import default_interpret
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.serving.prefix_cache import (PrefixCache, canonical_update,
@@ -148,7 +153,8 @@ class _Cohort:
     kscr: jax.Array                      # [L, nrows, tmax, K, D] f32 exact
     vscr: jax.Array
     kcan: jax.Array                      # canonical (codec round-trip) view
-    vcan: jax.Array                      # of completed pages, same shape
+    vcan: jax.Array                      # of completed pages; zero-length
+                                         # T axis for lossless codecs
     starts: list[int]                    # absolute start offset per member
     maxrel: int                          # grid length: max stored-start
     roff: int = 0                        # relative grid offset
@@ -160,24 +166,22 @@ class _Cohort:
 # jitted device steps
 # ---------------------------------------------------------------------------
 
-def _attend_ref(q, kd, kb, ks, vd, vb, vs, pt, page_len, tk, tv, tail_len):
-    """jnp fallback: gather-then-dequant pages + tail, dense softmax.
+def _attend_ref(codec, q, pools_l, pt, page_len, tk, tv, tail_len):
+    """jnp fallback: gather-then-decompress pages + tail, dense softmax.
 
-    q f32 [S, K, G, D]; pools [P, K, page, D]; pt i32 [S, PMAX];
-    tk/tv f32 [S, K, page, D].  Gathers compressed bytes first so only
-    [S, PMAX] pages dequantize, not the whole pool.
+    q f32 [S, K, G, D]; pools_l the codec's one-layer page pool pytree
+    (leaves leading [P]); pt i32 [S, PMAX]; tk/tv f32 [S, K, page, D].
+    Gathers compressed bytes first so only [S, PMAX] pages decompress,
+    not the whole pool.
     """
     s, kvh, g, d = q.shape
     pmax = pt.shape[1]
-    page = kd.shape[2]
+    page = tk.shape[2]
 
-    def deq(dq, b, sc):                              # [S,PMAX,K,page,D] f32
-        return dq.astype(jnp.float32) * sc[..., None] + b[..., None]
-
-    kg = jnp.moveaxis(deq(kd[pt], kb[pt], ks[pt]), 2, 1)
-    vg = jnp.moveaxis(deq(vd[pt], vb[pt], vs[pt]), 2, 1)
-    kg = kg.reshape(s, kvh, pmax * page, d)
-    vg = vg.reshape(s, kvh, pmax * page, d)
+    kg, vg = codec.decompress_pages(
+        jax.tree.map(lambda a: a[pt], pools_l))      # [S,PMAX,K,page,D] f32
+    kg = jnp.moveaxis(kg, 2, 1).reshape(s, kvh, pmax * page, d)
+    vg = jnp.moveaxis(vg, 2, 1).reshape(s, kvh, pmax * page, d)
     kg = jnp.concatenate([kg, tk], axis=2)           # [S, K, T, D]
     vg = jnp.concatenate([vg, tv], axis=2)
 
@@ -194,13 +198,14 @@ def _attend_ref(q, kd, kb, ks, vd, vb, vs, pt, page_len, tk, tv, tail_len):
 
 def _decode_core(params, pools, tk, tv, page_table, page_cnt,
                  last_tok, pos, tail_len, active, *, cfg: ArchConfig,
-                 use_fused: bool):
+                 codec: codecs.PageCodec, use_fused: bool):
     """One greedy decode step for every active sequence, all layers.
 
-    pools: CompressedKVPages with leading layer dim ([L, P, K, page, D]...).
-    tk/tv f32 [L, S, K, page, D] (donated by the jit wrappers; returned
-    updated).  page_table i32 [L, S, PMAX]; page_cnt/last_tok/pos/tail_len
-    i32 [S]; active bool [S].  Returns (next_tok [S], tk', tv').
+    pools: the codec's page-pool pytree with leading layer dim (leaves
+    [L, P, ...]).  tk/tv f32 [L, S, K, page, D] (donated by the jit
+    wrappers; returned updated).  page_table i32 [L, S, PMAX];
+    page_cnt/last_tok/pos/tail_len i32 [S]; active bool [S].  Returns
+    (next_tok [S], tk', tv').
 
     Shared trace body: dispatched standalone via :func:`_decode_step` or
     fused with a prefill chunk via :func:`_mixed_step`.
@@ -217,7 +222,7 @@ def _decode_core(params, pools, tk, tv, page_table, page_cnt,
                 & active[:, None])                           # [S, page]
 
     def body(x, xs):
-        bp, kd, kb, ks, vd, vb, vs, tk_l, tv_l, pt_l = xs
+        bp, pools_l, tk_l, tv_l, pt_l = xs
         h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
         q = L.linear(bp["attn"]["wq"], h)                    # [S, 1, H, Dh]
         k_new = L.linear(bp["attn"]["wk"], h)                # [S, 1, K, Dh]
@@ -235,11 +240,10 @@ def _decode_core(params, pools, tk, tv, page_table, page_cnt,
         hq = q.shape[2]
         qg = q[:, 0].reshape(s, kvh, hq // kvh, dh).astype(jnp.float32)
         if use_fused:
-            pages_l = ref.CompressedKVPages(kd, kb, ks, vd, vb, vs)
-            ctx = paged_attention_tail(qg, pages_l, pt_l, page_len,
-                                       tk_l, tv_l, tail_len + 1)
+            ctx = codec.paged_attention_tail(qg, pools_l, pt_l, page_len,
+                                             tk_l, tv_l, tail_len + 1)
         else:
-            ctx = _attend_ref(qg, kd, kb, ks, vd, vb, vs, pt_l, page_len,
+            ctx = _attend_ref(codec, qg, pools_l, pt_l, page_len,
                               tk_l, tv_l, tail_len + 1)
         ctx = ctx.reshape(s, 1, hq, dh).astype(x.dtype)
         x = x + A._proj_out(bp["attn"], ctx)
@@ -247,8 +251,7 @@ def _decode_core(params, pools, tk, tv, page_table, page_cnt,
         x = x + L.mlp(bp["ffn"], h2)
         return x, (tk_l, tv_l)
 
-    xs = (params["blocks"], pools.kd, pools.kb, pools.ks,
-          pools.vd, pools.vb, pools.vs, tk, tv, page_table)
+    xs = (params["blocks"], pools, tk, tv, page_table)
     x, (tk, tv) = jax.lax.scan(body, x, xs)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.lm_logits(params["lm_head"], x)[:, 0]         # [S, V]
@@ -257,15 +260,15 @@ def _decode_core(params, pools, tk, tv, page_table, page_cnt,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "use_fused"),
+                   static_argnames=("cfg", "codec", "use_fused"),
                    donate_argnums=(2, 3))
 def _decode_step(params, pools, tk, tv, page_table, page_cnt,
                  last_tok, pos, tail_len, active, *, cfg: ArchConfig,
-                 use_fused: bool):
+                 codec: codecs.PageCodec, use_fused: bool):
     """Decode-only dispatch (no prefill chunk riding along)."""
     return _decode_core(params, pools, tk, tv, page_table, page_cnt,
                         last_tok, pos, tail_len, active, cfg=cfg,
-                        use_fused=use_fused)
+                        codec=codec, use_fused=use_fused)
 
 
 def _row_update(scr, val, offs):
@@ -277,7 +280,7 @@ def _row_update(scr, val, offs):
 
 
 def _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs, *,
-                  cfg: ArchConfig, page: int):
+                  cfg: ArchConfig, page: int, codec: codecs.PageCodec):
     """One chunked-batch prefill step: C prompt tokens per row, all layers.
 
     tokens i32 [R, C] (one scratch row per admitted prompt, zero-padded);
@@ -301,6 +304,13 @@ def _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs, *,
     updated scratch + canonical view; page extraction/compression
     happens in follow-up dispatches (:func:`_gather_prefill_blocks` +
     :func:`_publish_blocks`).
+
+    Lossless codecs (``codec.lossless``: roundtrip == identity) skip the
+    roundtrip entirely — canonical values equal exact values, so the
+    chunk attends its own scratch through the single-einsum ``identity``
+    attention and kcan/vcan ride through untouched (the engines allocate
+    them zero-length).  This claws back the canonical contract's
+    roundtrip + second-einsum cost wherever the codec makes it free.
     """
     r, c = tokens.shape
     kvh, dh = cfg.n_kv_heads, cfg.head_dim
@@ -318,12 +328,18 @@ def _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs, *,
         q = L.apply_rope(L.linear(bp["attn"]["wq"], h), cos_b, sin_b)
         kscr_l = _row_update(kscr_l, k.astype(jnp.float32), offs)
         vscr_l = _row_update(vscr_l, v.astype(jnp.float32), offs)
-        kcan_l, vcan_l = canonical_update(kscr_l, vscr_l, kcan_l, vcan_l,
-                                          offs, page, c + page)
         hq = q.shape[2]
         qg = q.reshape(r, c, kvh, hq // kvh, dh).astype(jnp.float32)
-        ctx = prefix_chunk_attention(qg, qpos, kscr_l, vscr_l, kcan_l,
-                                     vcan_l, page)
+        if codec.lossless:
+            ctx = prefix_chunk_attention(qg, qpos, kscr_l, vscr_l,
+                                         kscr_l, vscr_l, page,
+                                         identity=True)
+        else:
+            kcan_l, vcan_l = canonical_update(kscr_l, vscr_l, kcan_l,
+                                              vcan_l, offs, page,
+                                              c + page, codec)
+            ctx = prefix_chunk_attention(qg, qpos, kscr_l, vscr_l,
+                                         kcan_l, vcan_l, page)
         x = x + A._proj_out(bp["attn"], ctx.reshape(r, c, hq, dh)
                             .astype(x.dtype))
         h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
@@ -335,20 +351,22 @@ def _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs, *,
     return kscr, vscr, kcan, vcan
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page"),
+@functools.partial(jax.jit, static_argnames=("cfg", "page", "codec"),
                    donate_argnums=(2, 3, 4, 5))
 def _prefill_chunk(params, tokens, kscr, vscr, kcan, vcan, offs, *,
-                   cfg: ArchConfig, page: int):
+                   cfg: ArchConfig, page: int, codec: codecs.PageCodec):
     """Prefill-only dispatch (no decode step riding along)."""
     return _prefill_core(params, tokens, kscr, vscr, kcan, vcan, offs,
-                         cfg=cfg, page=page)
+                         cfg=cfg, page=page, codec=codec)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page", "use_fused"),
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "page", "codec", "use_fused"),
                    donate_argnums=(2, 3, 4, 5, 6, 7))
 def _mixed_step(params, pools, tk, tv, kscr, vscr, kcan, vcan, page_table,
                 page_cnt, last_tok, pos, tail_len, active, ptoks, offs, *,
-                cfg: ArchConfig, page: int, use_fused: bool):
+                cfg: ArchConfig, page: int, codec: codecs.PageCodec,
+                use_fused: bool):
     """Sarathi-style mixed iteration: one decode step for every active
     batch slot **plus** one prefill chunk for the in-flight admission
     cohort, in a single jitted dispatch.
@@ -364,15 +382,18 @@ def _mixed_step(params, pools, tk, tv, kscr, vscr, kcan, vcan, page_table,
     """
     nxt, tk, tv = _decode_core(params, pools, tk, tv, page_table, page_cnt,
                                last_tok, pos, tail_len, active, cfg=cfg,
-                               use_fused=use_fused)
+                               codec=codec, use_fused=use_fused)
     kscr, vscr, kcan, vcan = _prefill_core(
-        params, ptoks, kscr, vscr, kcan, vcan, offs, cfg=cfg, page=page)
+        params, ptoks, kscr, vscr, kcan, vcan, offs, cfg=cfg, page=page,
+        codec=codec)
     return nxt, tk, tv, kscr, vscr, kcan, vcan
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
-def _fill_warm_scratch(kscr, vscr, kcan, vcan, pools, wpt, wlen):
-    """Dequantize cached prefix pages into the scratch warm regions.
+@functools.partial(jax.jit, static_argnames=("codec",),
+                   donate_argnums=(0, 1, 2, 3))
+def _fill_warm_scratch(kscr, vscr, kcan, vcan, pools, wpt, wlen, *,
+                       codec: codecs.PageCodec):
+    """Decompress cached prefix pages into the scratch warm regions.
 
     kscr/vscr/kcan/vcan [L, R, T, K, D] (donated); wpt i32 [L, R, WP]
     per-layer pool ids of each row's cached prefix chain (0-padded);
@@ -381,29 +402,33 @@ def _fill_warm_scratch(kscr, vscr, kcan, vcan, pools, wpt, wlen):
     canonical by construction — so both the exact scratch and the
     canonical view receive them verbatim, and ``canonical_update`` never
     re-compresses the warm region (its windows start at or after the hit
-    boundary).
+    boundary).  For a lossless codec the canonical view is unused (and
+    zero-length); only the exact scratch is filled.
     """
     lyr, r, t, kvh, dh = kscr.shape
     wp = wpt.shape[2]
-    page = pools.kd.shape[3]
 
-    def deq(dq, b, s):
-        x = jax.vmap(lambda d_l, b_l, s_l, pt_l:
-                     ref.dequant_pages(d_l[pt_l], b_l[pt_l], s_l[pt_l])
-                     )(dq, b, s, wpt)                 # [L, R, WP, K, pg, D]
+    def deq_layer(pool_l, pt_l):
+        return codec.decompress_pages(
+            jax.tree.map(lambda a: a[pt_l], pool_l))
+
+    kw, vw = jax.vmap(deq_layer)(pools, wpt)          # [L, R, WP, K, pg, D]
+    page = kw.shape[4]
+
+    def flat(x):
         return jnp.moveaxis(x, 3, 4).reshape(lyr, r, wp * page, kvh, dh)
 
-    kw = deq(pools.kd, pools.kb, pools.ks)
-    vw = deq(pools.vd, pools.vb, pools.vs)
+    kw, vw = flat(kw), flat(vw)
     m = (jnp.arange(wp * page) < wlen[:, None])[None, :, :, None, None]
-    out = []
-    for buf in (kscr, kcan):
-        out.append(buf.at[:, :, :wp * page].set(
-            jnp.where(m, kw, buf[:, :, :wp * page])))
-    for buf in (vscr, vcan):
-        out.append(buf.at[:, :, :wp * page].set(
-            jnp.where(m, vw, buf[:, :, :wp * page])))
-    return out[0], out[2], out[1], out[3]
+
+    def fill(buf, warm):
+        return buf.at[:, :, :wp * page].set(
+            jnp.where(m, warm, buf[:, :, :wp * page]))
+
+    kscr, vscr = fill(kscr, kw), fill(vscr, vw)
+    if not codec.lossless:
+        kcan, vcan = fill(kcan, kw), fill(vcan, vw)
+    return kscr, vscr, kcan, vcan
 
 
 def _scratch_blocks(kscr, vscr, rows, blks, page: int):
@@ -447,50 +472,26 @@ def _gather_tail_blocks(tk, tv, slots):
             vb.reshape((-1,) + vb.shape[2:]))
 
 
-def _device_page_bytes(pg: ref.CompressedKVPages) -> jax.Array:
-    """Per-page compressed size, computed on device ([n] i32).
-
-    BDI-faithful accounting: each (head, token) row costs 8 bytes of
-    base+scale metadata plus D delta bytes — unless the row is all-zero
-    (ENC_ZERO: metadata only), in which case the delta bytes drop out.
-
-    For KV data with no exactly-zero rows (any real model) this equals
-    the seed engine's constant per-page formula, so stats and CAMP
-    values match the reference bit-for-bit; ENC_ZERO rows earn a
-    size credit the seed never modeled.
-    """
-    def side(d, b):
-        zero_row = jnp.all(d == 0, axis=-1) & (b == 0.0)     # [n, K, page]
-        data = jnp.where(zero_row, 0, d.shape[-1])
-        return (jnp.sum(data, axis=(1, 2))
-                + 8 * d.shape[1] * d.shape[2])
-    return (side(pg.kd, pg.kb) + side(pg.vd, pg.vb)).astype(jnp.int32)
-
-
-@functools.partial(jax.jit, static_argnames=("use_fused",),
+@functools.partial(jax.jit, static_argnames=("codec", "use_fused"),
                    donate_argnums=(0,))
 def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
-                    use_fused: bool = False):
+                    codec: codecs.PageCodec, use_fused: bool = False):
     """Compress [n, K, page, D] KV blocks and scatter them into the pools.
 
     One dispatch publishes every filled page of every layer: the batched
     page-fill compression + donated in-place pool update.  Returns the
-    updated pools and the device-computed per-page byte counts [n].
-    ``use_fused`` routes compression through the Pallas row codec
-    (``ops.compress_kv_pages``, bit-exact with the jnp oracle) where the
-    kernel compiles natively.
+    updated pools and the codec's device-computed per-page byte counts
+    [n] (the numbers CAMP values and SIP retention consume).
+    ``use_fused`` routes compression through the codec's fused kernel
+    path (BDI: the Pallas row codec, bit-exact with the jnp oracle)
+    where it compiles natively.
     """
-    compress = ops.compress_kv_pages if use_fused else ref.compress_kv_pages
+    compress = (codec.compress_kv_pages_fused if use_fused
+                else codec.compress_kv_pages)
     pg = compress(k_blocks, v_blocks)
-    nbytes = _device_page_bytes(pg)
-    pools = ref.CompressedKVPages(
-        kd=pools.kd.at[layer_idx, pids].set(pg.kd),
-        kb=pools.kb.at[layer_idx, pids].set(pg.kb),
-        ks=pools.ks.at[layer_idx, pids].set(pg.ks),
-        vd=pools.vd.at[layer_idx, pids].set(pg.vd),
-        vb=pools.vb.at[layer_idx, pids].set(pg.vb),
-        vs=pools.vs.at[layer_idx, pids].set(pg.vs),
-    )
+    nbytes = codec.page_nbytes(pg)
+    pools = jax.tree.map(
+        lambda pool, new: pool.at[layer_idx, pids].set(new), pools, pg)
     return pools, nbytes
 
 
@@ -511,7 +512,8 @@ class PagedKVEngine:
                  n_pool_pages: int = 256, max_batch: int = 32,
                  use_fused: bool | None = None,
                  prefill_chunk: int | None = None,
-                 prefix_cache: PrefixCache | None = None):
+                 prefix_cache: PrefixCache | None = None,
+                 codec: str | codecs.PageCodec | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -521,25 +523,26 @@ class PagedKVEngine:
         self.params = params
         self.page = page_size
         self.max_batch = max_batch
+        self.n_pool_pages = n_pool_pages
         self.prefix_cache = prefix_cache
+        # page codec: name / instance / None (the REPRO_CODEC-or-bdi
+        # default).  Registry singletons keep jit traces shared across
+        # engines using the same codec.
+        self.codec = codecs.resolve(codec)
         # chunked-prefill step width (tokens per slot per dispatch); must
         # stay page-aligned so every chunk completes whole pages
         self.prefill_chunk = (2 * page_size if prefill_chunk is None
                               else prefill_chunk)
         assert self.prefill_chunk % page_size == 0, \
             (self.prefill_chunk, page_size)
-        # fused Pallas kernel where it compiles natively; jnp ref elsewhere
-        self.use_fused = (not ops.default_interpret()
-                          if use_fused is None else use_fused)
+        # fused kernels where the codec brings them and Pallas compiles
+        # natively; the generic jnp path elsewhere
+        self.use_fused = ((not default_interpret()
+                           if use_fused is None else use_fused)
+                          and self.codec.has_fused_kernels)
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        self.pools = ref.CompressedKVPages(
-            kd=jnp.zeros((lyr, n_pool_pages, k, page_size, dh), jnp.int8),
-            kb=jnp.zeros((lyr, n_pool_pages, k, page_size), jnp.float32),
-            ks=jnp.ones((lyr, n_pool_pages, k, page_size), jnp.float32),
-            vd=jnp.zeros((lyr, n_pool_pages, k, page_size, dh), jnp.int8),
-            vb=jnp.zeros((lyr, n_pool_pages, k, page_size), jnp.float32),
-            vs=jnp.ones((lyr, n_pool_pages, k, page_size), jnp.float32),
-        )
+        self.pools = self.codec.init_pools(lyr, n_pool_pages, k,
+                                           page_size, dh)
         self.tail_k = jnp.zeros((lyr, max_batch, k, page_size, dh),
                                 jnp.float32)
         self.tail_v = jnp.zeros_like(self.tail_k)
@@ -547,6 +550,9 @@ class PagedKVEngine:
         self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
         self.page_bytes = np.zeros(n_pool_pages, np.int64)
         self.seqs: dict[int, Sequence] = {}
+        # cumulative published bytes per request (survives release; the
+        # serving driver reports per-request compression from this)
+        self.request_bytes: dict[int, list[int]] = {}
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self._pmax = 8
         self._pt_dev: jax.Array | None = None
@@ -635,6 +641,9 @@ class PagedKVEngine:
         self.stats["pages_compressed"] += len(pids)
         self.stats["bytes_raw"] += self.page_raw_bytes() * len(pids)
         self.stats["bytes_compressed"] += int(nbytes.sum())
+        rb = self.request_bytes.setdefault(seq.sid, [0, 0])
+        rb[0] += self.page_raw_bytes() * len(pids)
+        rb[1] += int(nbytes.sum())
         self._pt_dirty = True
 
     # -- page table ----------------------------------------------------------
@@ -773,8 +782,12 @@ class PagedKVEngine:
             toks[row[s.sid], :len(s.tokens)] = s.tokens
         kscr = jnp.zeros((lyr, nrows, tmax, kvh, dh), jnp.float32)
         vscr = jnp.zeros_like(kscr)
-        kcan = jnp.zeros_like(kscr)
-        vcan = jnp.zeros_like(kscr)
+        # lossless codecs never read the canonical view (prefill attends
+        # the exact scratch directly), so it shrinks to zero length — no
+        # doubled scratch memory for codecs whose roundtrip is free
+        can_t = 0 if self.codec.lossless else tmax
+        kcan = jnp.zeros((lyr, nrows, can_t, kvh, dh), jnp.float32)
+        vcan = jnp.zeros_like(kcan)
         if any(starts):
             # dequantize each warm row's cached chain into its scratch
             # prefix region (canonical by construction); WP rounds up to
@@ -796,7 +809,7 @@ class PagedKVEngine:
                     wpt[li, r, :st // page] = s.pages[li][:st // page]
             kscr, vscr, kcan, vcan = _fill_warm_scratch(
                 kscr, vscr, kcan, vcan, self.pools, jnp.asarray(wpt),
-                jnp.asarray(wlen))
+                jnp.asarray(wlen), codec=self.codec)
         self._cohort = _Cohort(seqs=seqs, row=row, toks=toks, kscr=kscr,
                                vscr=vscr, kcan=kcan, vcan=vcan,
                                starts=starts, maxrel=maxrel,
@@ -909,7 +922,8 @@ class PagedKVEngine:
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
         self.pools, nbytes = _publish_blocks(
             self.pools, k_blocks, v_blocks, layer_idx,
-            jnp.asarray(pids, jnp.int32), use_fused=self.use_fused)
+            jnp.asarray(pids, jnp.int32), codec=self.codec,
+            use_fused=self.use_fused)
         nbytes = np.asarray(nbytes)                    # 1 sync per publish
         for j, seq in enumerate(seqs):
             if seq.preempted:      # victim of our own reservation
@@ -1009,19 +1023,22 @@ class PagedKVEngine:
                     co.kscr, co.vscr, co.kcan, co.vcan,
                     self._page_table(), page_cnt, last_tok, pos,
                     tail_len, active, ptoks, offs_d, cfg=self.cfg,
-                    page=self.page, use_fused=self.use_fused)
+                    page=self.page, codec=self.codec,
+                    use_fused=self.use_fused)
             else:
                 nxt, self.tail_k, self.tail_v = _decode_step(
                     self.params, self.pools, self.tail_k, self.tail_v,
                     self._page_table(), page_cnt, last_tok, pos, tail_len,
-                    active, cfg=self.cfg, use_fused=self.use_fused)
+                    active, cfg=self.cfg, codec=self.codec,
+                    use_fused=self.use_fused)
             out = self._decode_post(sids, np.asarray(nxt))  # 1 sync / step
         else:
             out = {}
             if n > 0:
                 co.kscr, co.vscr, co.kcan, co.vcan = _prefill_chunk(
                     self.params, ptoks, co.kscr, co.vscr, co.kcan,
-                    co.vcan, offs_d, cfg=self.cfg, page=self.page)
+                    co.vcan, offs_d, cfg=self.cfg, page=self.page,
+                    codec=self.codec)
         # decode tail publishes land first (inside _decode_post), then the
         # chunk's completed prefill pages — the reference oracle replays
         # the same iteration order
@@ -1087,4 +1104,4 @@ class PagedKVEngine:
         return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
 
     def pool_used_pages(self) -> int:
-        return (self.pools.kd.shape[1] - 1) - len(self.free)
+        return (self.n_pool_pages - 1) - len(self.free)

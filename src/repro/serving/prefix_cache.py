@@ -2,7 +2,8 @@
 
 The serving-side realization of the thesis' second contribution (Chapter
 4): the Size-based Insertion Policy uses a block's *compressed size* as a
-reuse predictor.  Here the "blocks" are BDI-compressed KV pages already
+reuse predictor.  Here the "blocks" are codec-compressed KV pages
+(whatever :mod:`repro.codecs` instance the owning engine runs) already
 sitting in the engines' device pools, and the insight carries over
 directly — a prompt prefix that compresses well is exactly the one that
 is cheap to *retain* after its request finishes, so it should be kept
@@ -38,11 +39,15 @@ that produced it was chunked, batched, or scheduled.  The engines
 guarantee this with one uniform attention rule, applied identically in
 prefill and decode:
 
-    a query at position ``p`` attends **canonical** K/V (the
-    compress-then-dequantize round trip of the exact values — bit-equal
-    to what decode reads from the pool) for every *completed earlier
-    page*, and **exact** f32 K/V for positions inside its own partial
-    page.
+    a query at position ``p`` attends **canonical** K/V (the codec
+    round trip of the exact values — bit-equal to what decode reads
+    from the pool) for every *completed earlier page*, and **exact**
+    f32 K/V for positions inside its own partial page.
+
+For lossless codecs (roundtrip == identity) canonical and exact values
+coincide, so the contract holds with no roundtrip at all — the engines
+then skip it (``canonical_update`` is never dispatched and the chunk
+attends its own exact scratch).
 
 Because each page's published bits depend only on the token prefix, a
 warm request that maps cached pages and starts prefill at the first
@@ -68,35 +73,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codecs import PageCodec
 from repro.core.camp import N_SIZE_BINS, _pow2_bucket, size_bin
-from repro.kernels import ref
 
 
 # ---------------------------------------------------------------------------
 # canonical-prefix attention (shared by engine.py and reference.py)
 # ---------------------------------------------------------------------------
 
-def _roundtrip_window(kw: jax.Array, vw: jax.Array, page: int
-                      ) -> tuple[jax.Array, jax.Array]:
-    """Compress-then-dequantize one [W, K, D] scratch window page-wise."""
+def _roundtrip_window(kw: jax.Array, vw: jax.Array, page: int,
+                      codec: PageCodec) -> tuple[jax.Array, jax.Array]:
+    """Codec-roundtrip one [W, K, D] scratch window page-wise."""
     w, kvh, d = kw.shape
 
     def to_pages(x):
         return jnp.swapaxes(x.reshape(w // page, page, kvh, d), 1, 2)
 
-    pg = ref.compress_kv_pages(to_pages(kw), to_pages(vw))
+    kr, vr = codec.canonical_roundtrip(to_pages(kw), to_pages(vw))
 
-    def back(dq, b, s):
-        return jnp.swapaxes(ref.dequant_pages(dq, b, s), 1, 2) \
-            .reshape(w, kvh, d)
+    def back(x):
+        return jnp.swapaxes(x, 1, 2).reshape(w, kvh, d)
 
-    return back(pg.kd, pg.kb, pg.ks), back(pg.vd, pg.vb, pg.vs)
+    return back(kr), back(vr)
 
 
 def canonical_update(kscr: jax.Array, vscr: jax.Array,
                      kcan: jax.Array, vcan: jax.Array,
-                     offs: jax.Array, page: int, width: int
-                     ) -> tuple[jax.Array, jax.Array]:
+                     offs: jax.Array, page: int, width: int,
+                     codec: PageCodec) -> tuple[jax.Array, jax.Array]:
     """Refresh the canonical view for the pages a chunk just touched.
 
     kscr/vscr f32 [R, T, K, D] exact scratch; kcan/vcan its carried
@@ -112,6 +116,11 @@ def canonical_update(kscr: jax.Array, vscr: jax.Array,
     idempotent).  Round-tripped values for pages the chunk left
     incomplete are garbage, but attention only ever selects canonical
     values for pages strictly before a query's own, which are complete.
+
+    Codecs whose roundtrip is the identity (``codec.lossless``) never
+    call this — canonical and exact values coincide, so the engines
+    attend the exact scratch directly (``prefix_chunk_attention``'s
+    ``identity`` form) and carry a zero-length canonical view.
     """
     kvh, d = kscr.shape[2], kscr.shape[3]
     wstart = jnp.minimum((offs // page) * page, kscr.shape[1] - width)
@@ -119,7 +128,7 @@ def canonical_update(kscr: jax.Array, vscr: jax.Array,
     def upd(ks, vs, kc, vc, w0):
         kw = jax.lax.dynamic_slice(ks, (w0, 0, 0), (width, kvh, d))
         vw = jax.lax.dynamic_slice(vs, (w0, 0, 0), (width, kvh, d))
-        kr, vr = _roundtrip_window(kw, vw, page)
+        kr, vr = _roundtrip_window(kw, vw, page, codec)
         return (jax.lax.dynamic_update_slice(kc, kr, (w0, 0, 0)),
                 jax.lax.dynamic_update_slice(vc, vr, (w0, 0, 0)))
 
@@ -129,7 +138,8 @@ def canonical_update(kscr: jax.Array, vscr: jax.Array,
 def prefix_chunk_attention(q: jax.Array, qpos: jax.Array,
                            kscr: jax.Array, vscr: jax.Array,
                            kcan: jax.Array, vcan: jax.Array,
-                           page: int) -> jax.Array:
+                           page: int, *, identity: bool = False
+                           ) -> jax.Array:
     """Causal chunk attention under the canonical-prefix contract.
 
     q f32 [R, C, K, G, D]; qpos i32 [R, C] absolute positions; kscr/vscr
@@ -139,18 +149,30 @@ def prefix_chunk_attention(q: jax.Array, qpos: jax.Array,
     (``kpos <= qpos``); everything else is masked.  Masked score slots
     contribute exact zeros, so scratch padding is bit-invisible — the
     property that keeps warm/cold and chunked/blocking paths identical.
+
+    ``identity=True`` is the lossless-codec fast path: canonical == exact
+    by definition, so the two-region split collapses to one plain causal
+    mask over the exact scratch and the second score/context einsum pair
+    disappears (kcan/vcan are ignored — callers pass the scratch or a
+    zero-length view).
     """
     r, c, kvh, g, d = q.shape
     t = kscr.shape[1]
     kpos = jnp.arange(t, dtype=jnp.int32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s_e = jnp.einsum("rckgd,rtkd->rckgt", q, kscr) * scale
+    if identity:
+        m = (kpos[None, None, :]
+             <= qpos[:, :, None])[:, :, None, None, :]
+        w = jax.nn.softmax(jnp.where(m, s_e, -jnp.inf), axis=-1)
+        ctx = jnp.einsum("rckgt,rtkd->rckgd", jnp.where(m, w, 0.0), vscr)
+        return jax.lax.optimization_barrier(ctx)
     kpage = kpos // page                               # [T]
     qpage = qpos // page                               # [R, C]
     m_can = (kpage[None, None, :] < qpage[:, :, None])[:, :, None, None, :]
     m_own = ((kpage[None, None, :] == qpage[:, :, None])
              & (kpos[None, None, :] <= qpos[:, :, None]))[:, :, None, None, :]
-    scale = 1.0 / jnp.sqrt(jnp.float32(d))
     s_c = jnp.einsum("rckgd,rtkd->rckgt", q, kcan) * scale
-    s_e = jnp.einsum("rckgd,rtkd->rckgt", q, kscr) * scale
     sc = jnp.where(m_can, s_c, jnp.where(m_own, s_e, -jnp.inf))
     w = jax.nn.softmax(sc, axis=-1)
     ctx = (jnp.einsum("rckgt,rtkd->rckgd", jnp.where(m_can, w, 0.0), vcan)

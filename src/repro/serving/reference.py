@@ -10,8 +10,10 @@ correct path.
 
 The inference-side integration of the thesis pillars:
 
-  * KV pages are stored **compressed** (B+Delta int8 form, the layout the
-    fused Pallas decode kernel reads — kernels/paged_attention.py);
+  * KV pages are stored **compressed** through the same pluggable
+    :class:`~repro.codecs.PageCodec` the batched engine runs (default:
+    the B+Delta int8 form the fused Pallas decode kernel reads —
+    kernels/paged_attention.py);
   * page addressing is **LCP**: fixed target size per page, page table ->
     pool index, one shift to locate a token (no prefix sums);
   * the finite HBM page pool is managed by **CAMP**-style value scoring:
@@ -55,8 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.configs.base import ArchConfig
-from repro.kernels import ref
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.serving import engine as _E
@@ -93,7 +95,8 @@ class ReferencePagedKVEngine:
     def __init__(self, cfg: ArchConfig, params, *, page_size: int = 16,
                  n_pool_pages: int = 256,
                  prefix_cache: PrefixCache | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 codec: str | codecs.PageCodec | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -102,7 +105,11 @@ class ReferencePagedKVEngine:
         self.cfg = cfg
         self.params = params
         self.page = page_size
+        self.n_pool_pages = n_pool_pages
         self.prefix_cache = prefix_cache
+        # page codec: same registry singleton as the batched engine, so
+        # the shared jitted prefill dispatch reuses one trace
+        self.codec = codecs.resolve(codec)
         # dispatch width of the shared jitted prefill step (bit-invariant
         # to the choice; kept as a knob for jit-cache reuse with an
         # engine of a different width)
@@ -110,16 +117,17 @@ class ReferencePagedKVEngine:
                               else prefill_chunk)
         assert self.prefill_chunk % page_size == 0
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-        # compressed page pools (the LCP target-size + metadata regions)
-        self.kd = np.zeros((lyr, n_pool_pages, k, page_size, dh), np.int8)
-        self.kb = np.zeros((lyr, n_pool_pages, k, page_size), np.float32)
-        self.ks = np.ones((lyr, n_pool_pages, k, page_size), np.float32)
-        self.vd = np.zeros_like(self.kd)
-        self.vb = np.zeros_like(self.kb)
-        self.vs = np.ones_like(self.ks)
+        # compressed page pools (the LCP target-size + metadata regions):
+        # the codec's pool pytree, held as host numpy leaves
+        self.pools = jax.tree.map(          # np.array: writable host copies
+            np.array, self.codec.init_pools(lyr, n_pool_pages, k,
+                                            page_size, dh))
         self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
         self.page_bytes = np.zeros(n_pool_pages, np.int64)
         self.seqs: dict[int, Sequence] = {}
+        # cumulative published bytes per request (mirror of the batched
+        # engine's per-request compression report)
+        self.request_bytes: dict[int, list[int]] = {}
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
                       "preemptions": 0, "prefix_pages_evicted": 0}
@@ -201,20 +209,21 @@ class ReferencePagedKVEngine:
             return
         kk = jnp.swapaxes(jnp.asarray(k_blk)[None], 1, 2)   # [1, K, page, Dh]
         vv = jnp.swapaxes(jnp.asarray(v_blk)[None], 1, 2)
-        pg = ref.compress_kv_pages(kk, vv)
-        self.kd[li, pid] = np.asarray(pg.kd[0])
-        self.kb[li, pid] = np.asarray(pg.kb[0])
-        self.ks[li, pid] = np.asarray(pg.ks[0])
-        self.vd[li, pid] = np.asarray(pg.vd[0])
-        self.vb[li, pid] = np.asarray(pg.vb[0])
-        self.vs[li, pid] = np.asarray(pg.vs[0])
-        nbytes = int(pg.kd[0].size + pg.vd[0].size
-                     + 2 * 8 * self.page * self.cfg.n_kv_heads)
+        pg = self.codec.compress_kv_pages(kk, vv)
+        for pool, new in zip(jax.tree.leaves(self.pools),
+                             jax.tree.leaves(pg)):
+            pool[li, pid] = np.asarray(new[0])
+        # same byte-accounting function as the batched engine's device
+        # path, so CAMP values and stats match bit-for-bit
+        nbytes = int(np.asarray(self.codec.page_nbytes(pg))[0])
         self.page_bytes[pid] = nbytes
         seq.pages[li].append(pid)
         self.stats["pages_compressed"] += 1
         self.stats["bytes_raw"] += self.page_raw_bytes()
         self.stats["bytes_compressed"] += nbytes
+        rb = self.request_bytes.setdefault(seq.sid, [0, 0])
+        rb[0] += self.page_raw_bytes()
+        rb[1] += nbytes
 
     def _publish_block(self, seq: Sequence, k_blk: np.ndarray,
                        v_blk: np.ndarray, blk: int | None = None) -> None:
@@ -317,7 +326,7 @@ class ReferencePagedKVEngine:
         tpad = cap * chunk
         pf_k = np.zeros((lyr, 1, tpad, k, dh), np.float32)
         pf_v = np.zeros((lyr, 1, tpad, k, dh), np.float32)
-        # dequantize the cached prefix into the scratch warm region: the
+        # decompress the cached prefix into the scratch warm region: the
         # canonical values decode-side attention reads for those pages
         # (same codec helper as decode; elementwise, so bit-equal to the
         # engine's jitted fill)
@@ -325,20 +334,22 @@ class ReferencePagedKVEngine:
             sl = slice(b * page, (b + 1) * page)
             for li in range(lyr):
                 pid = seq.pages[li][b]
-                kk = ref.dequant_pages(jnp.asarray(self.kd[li, pid][None]),
-                                       jnp.asarray(self.kb[li, pid][None]),
-                                       jnp.asarray(self.ks[li, pid][None]))
-                vv = ref.dequant_pages(jnp.asarray(self.vd[li, pid][None]),
-                                       jnp.asarray(self.vb[li, pid][None]),
-                                       jnp.asarray(self.vs[li, pid][None]))
+                kk, vv = self.codec.decompress_pages(jax.tree.map(
+                    lambda a: jnp.asarray(a[li, pid][None]), self.pools))
                 pf_k[li, 0, sl] = np.swapaxes(np.asarray(kk[0]), 0, 1)
                 pf_v[li, 0, sl] = np.swapaxes(np.asarray(vv[0]), 0, 1)
         seq.pf_k = jnp.asarray(pf_k)
         seq.pf_v = jnp.asarray(pf_v)
         # the warm region is canonical by construction; the rest of the
-        # canonical view fills in window-by-window as chunks complete
-        seq.pf_kc = jnp.asarray(pf_k)
-        seq.pf_vc = jnp.asarray(pf_v)
+        # canonical view fills in window-by-window as chunks complete.
+        # Lossless codecs never read it (identity prefill attention) and
+        # carry a zero-length view, mirroring the batched engine.
+        if self.codec.lossless:
+            seq.pf_kc = jnp.zeros((lyr, 1, 0, k, dh), jnp.float32)
+            seq.pf_vc = jnp.zeros_like(seq.pf_kc)
+        else:
+            seq.pf_kc = jnp.asarray(pf_k)
+            seq.pf_vc = jnp.asarray(pf_v)
         return start
 
     def prefill_advance(self, sid: int, n: int) -> bool:
@@ -369,7 +380,7 @@ class ReferencePagedKVEngine:
             seq.pf_k, seq.pf_v, seq.pf_kc, seq.pf_vc = _E._prefill_chunk(
                 self.params, jnp.asarray(pt), seq.pf_k, seq.pf_v,
                 seq.pf_kc, seq.pf_vc, jnp.asarray([off], jnp.int32),
-                cfg=cfg, page=page)
+                cfg=cfg, page=page, codec=self.codec)
             seq.pf_pos = p + step
             n -= step
             # publish every page the chunk completed (block-outer order —
@@ -446,12 +457,8 @@ class ReferencePagedKVEngine:
         pids = seq.pages[li]
         parts_k, parts_v = [], []
         if pids:
-            k_pages = ref.dequant_pages(jnp.asarray(self.kd[li, pids]),
-                                        jnp.asarray(self.kb[li, pids]),
-                                        jnp.asarray(self.ks[li, pids]))
-            v_pages = ref.dequant_pages(jnp.asarray(self.vd[li, pids]),
-                                        jnp.asarray(self.vb[li, pids]),
-                                        jnp.asarray(self.vs[li, pids]))
+            k_pages, v_pages = self.codec.decompress_pages(jax.tree.map(
+                lambda a: jnp.asarray(a[li, pids]), self.pools))
             parts_k.append(jnp.swapaxes(k_pages, 1, 2).reshape(-1, kh, dh))
             parts_v.append(jnp.swapaxes(v_pages, 1, 2).reshape(-1, kh, dh))
         tl = seq.tail_len + 1
@@ -475,4 +482,4 @@ class ReferencePagedKVEngine:
         return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
 
     def pool_used_pages(self) -> int:
-        return (self.kd.shape[1] - 1) - len(self.free)
+        return (self.n_pool_pages - 1) - len(self.free)

@@ -107,10 +107,14 @@ class ContinuousScheduler:
         self._cohort_pos = 0              # cohort grid offset (relative)
         self._running: list[int] = []     # rids decoding, admission order
         self.iteration = 0
+        # stats are labeled by the engine's page codec so serving reports
+        # and bench JSONs stay comparable across codecs
         self.stats = {"iterations": 0, "idle_iterations": 0,
                       "mixed_iterations": 0, "prefill_tokens": 0,
                       "decode_tokens": 0, "chunk_splits": 0,
-                      "requeues": 0, "prefix_cached_tokens": 0}
+                      "requeues": 0, "prefix_cached_tokens": 0,
+                      "codec": getattr(getattr(engine, "codec", None),
+                                       "name", "?")}
 
     # -- queue -----------------------------------------------------------------
 

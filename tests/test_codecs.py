@@ -1,0 +1,243 @@
+"""Codec registry + per-codec contract suite.
+
+Covers the `PageCodec` seam end to end: registry lookup/error behavior,
+per-codec roundtrip contracts (bit-exact identity for lossless codecs,
+bounded error + determinism for bdi), device-side byte accounting
+(zero-page credit, raw == raw-size), and a parametrized engine/oracle
+token-equivalence + warm==cold smoke across every registered codec —
+the "any compression algorithm fits LCP" claim, pinned.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.configs.registry import get_arch
+from repro.models.api import get_model
+from repro.serving.engine import PagedKVEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.reference import ReferencePagedKVEngine
+
+PAGE = 8
+ALL_CODECS = codecs.available()
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _pages(key, n=4, kvh=2, page=PAGE, d=16):
+    """KV page blocks mixing the interesting row classes: random rows,
+    exact-zero rows, and repeated-value rows."""
+    k1, k2 = jax.random.split(key)
+    k = jax.random.normal(k1, (n, kvh, page, d))
+    v = jax.random.normal(k2, (n, kvh, page, d))
+    k = k.at[0, 0, 0].set(0.0)                     # one all-zero row
+    k = k.at[0, 0, 1].set(2.5)                     # one repeated-value row
+    v = v.at[1].set(0.0)                           # an all-zero page side
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_builtins():
+    assert {"bdi", "zero", "raw"} <= set(ALL_CODECS)
+
+
+def test_registry_returns_singletons():
+    for name in ALL_CODECS:
+        c = codecs.get(name)
+        assert c is codecs.get(name)               # jit traces stay shared
+        assert c.name == name
+        assert codecs.resolve(name) is c
+        assert codecs.resolve(c) is c
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="unknown page codec 'nope'"):
+        codecs.get("nope")
+    with pytest.raises(KeyError, match="bdi"):
+        codecs.get("nope")
+
+
+def test_default_resolution_honors_env(monkeypatch):
+    monkeypatch.delenv("REPRO_CODEC", raising=False)
+    assert codecs.resolve(None).name == "bdi"
+    monkeypatch.setenv("REPRO_CODEC", "raw")
+    assert codecs.resolve(None).name == "raw"
+
+
+def test_reregistering_name_with_new_instance_rejected():
+    with pytest.raises(AssertionError):
+        codecs.register(codecs.RawCodec())         # fresh instance, old name
+    codecs.register(codecs.RAW)                    # same instance: idempotent
+
+
+# ---------------------------------------------------------------------------
+# roundtrip contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_roundtrip_contract(name):
+    """Lossless codecs roundtrip bit-exactly; bdi stays inside its
+    scale/2 error bound.  Both must be deterministic (two compressions
+    of the same data produce identical bits — the canonical-prefix
+    contract rests on this)."""
+    codec = codecs.get(name)
+    k, v = _pages(jax.random.PRNGKey(3))
+    pg = codec.compress_kv_pages(k, v)
+    pg2 = codec.compress_kv_pages(k, v)
+    for a, b in zip(jax.tree.leaves(pg), jax.tree.leaves(pg2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    kr, vr = codec.decompress_pages(pg)
+    if codec.lossless:
+        np.testing.assert_array_equal(np.asarray(kr), np.asarray(k))
+        np.testing.assert_array_equal(np.asarray(vr), np.asarray(v))
+    # canonical_roundtrip must agree bit-for-bit with
+    # decompress(compress(...)) — it is the same function by contract
+    krt, vrt = codec.canonical_roundtrip(k, v)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(krt))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vrt))
+
+
+def test_bdi_roundtrip_error_bound():
+    codec = codecs.get("bdi")
+    k, v = _pages(jax.random.PRNGKey(5))
+    pg = codec.compress_kv_pages(k, v)
+    kr, _ = codec.decompress_pages(pg)
+    bound = np.asarray(pg.ks)[..., None]           # per-row scale
+    assert np.all(np.abs(np.asarray(kr - k)) <= 0.5 * bound + 1e-7)
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_zero_pages_roundtrip_exact(name):
+    """The all-zero page (LCP's headline case) roundtrips exactly under
+    every codec."""
+    codec = codecs.get(name)
+    z = jnp.zeros((2, 2, PAGE, 16))
+    kr, vr = codec.canonical_roundtrip(z, z)
+    np.testing.assert_array_equal(np.asarray(kr), 0.0)
+    np.testing.assert_array_equal(np.asarray(vr), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+
+def test_page_nbytes_shapes_and_positivity():
+    k, v = _pages(jax.random.PRNGKey(7))
+    for name in ALL_CODECS:
+        codec = codecs.get(name)
+        nb = codec.page_nbytes(codec.compress_kv_pages(k, v))
+        assert nb.shape == (k.shape[0],) and nb.dtype == jnp.int32
+        assert bool(jnp.all(nb > 0))
+
+
+def test_raw_codec_reports_raw_size():
+    """compressed == raw: the engine-visible ratio must be exactly 1."""
+    codec = codecs.get("raw")
+    k, v = _pages(jax.random.PRNGKey(9))
+    nb = codec.page_nbytes(codec.compress_kv_pages(k, v))
+    kvh, page, d = k.shape[1:]
+    raw = 2 * kvh * page * d * 2                   # K+V sides, bf16 elems
+    assert np.all(np.asarray(nb) == raw)
+
+
+def test_zero_codec_zero_pages_are_tiny():
+    codec = codecs.get("zero")
+    kvh, page, d = 2, PAGE, 16
+    z = jnp.zeros((1, kvh, page, d))
+    r = jax.random.normal(jax.random.PRNGKey(1), (1, kvh, page, d))
+    nb_zero = int(codec.page_nbytes(codec.compress_kv_pages(z, z))[0])
+    nb_rand = int(codec.page_nbytes(codec.compress_kv_pages(r, r))[0])
+    assert nb_zero == 2 * kvh * page               # 1 flag byte per row
+    assert nb_zero < nb_rand / 10                  # near-free zero pages
+
+
+def test_bdi_zero_rows_earn_size_credit():
+    codec = codecs.get("bdi")
+    kvh, page, d = 2, PAGE, 16
+    r = jax.random.normal(jax.random.PRNGKey(2), (1, kvh, page, d))
+    z = jnp.zeros_like(r)
+    nb_rand = int(codec.page_nbytes(codec.compress_kv_pages(r, r))[0])
+    nb_zero = int(codec.page_nbytes(codec.compress_kv_pages(z, z))[0])
+    assert nb_zero == 2 * 8 * kvh * page           # metadata only
+    assert nb_zero < nb_rand
+
+
+# ---------------------------------------------------------------------------
+# engine/oracle equivalence + warm==cold, per codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_engine_oracle_equivalence_per_codec(small_model, name):
+    """Token-for-token greedy equivalence (and exact CAMP byte
+    accounting) between the batched engine and the host-looped oracle
+    under every registered codec."""
+    cfg, params = small_model
+    re_ = ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                 n_pool_pages=96, codec=name)
+    be = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=96,
+                       max_batch=8, codec=name)
+    prompts = {0: [5, 9, 2, 7, 11, 3], 1: list(range(1, 20))}
+    re_.add_requests({k: list(v) for k, v in prompts.items()})
+    be.add_requests({k: list(v) for k, v in prompts.items()})
+    assert re_.stats == be.stats
+    for step in range(8):
+        out = be.decode_batch()
+        for sid in prompts:
+            assert re_.decode_one(sid) == out[sid], (name, step, sid)
+    assert re_.stats == be.stats
+    assert re_.request_bytes == be.request_bytes
+    if name == "raw":
+        assert be.compression_ratio() == 1.0       # LCP exception story
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_warm_equals_cold_per_codec(small_model, name):
+    """The prefix-cache canonical contract holds under every codec: a
+    warm request mapping cached pages decodes bit-identically to a cold
+    run."""
+    cfg, params = small_model
+    prompt = [1 + (j * 3) % 50 for j in range(34)]      # 33 stored: 4 pages
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=96,
+                        max_batch=4, prefix_cache=cache, codec=name)
+    eng.add_requests({0: list(prompt)})
+    cold = [eng.decode_batch([0])[0] for _ in range(8)]
+    eng.release(0)
+
+    starts = eng.begin_cohort({1: list(prompt)})
+    assert starts == {1: 32}, (name, starts)
+    while eng._cohort is not None:
+        eng.mixed_step(decode_sids=[], pf_tokens=eng.prefill_chunk)
+    warm = [eng.decode_batch([1])[1] for _ in range(8)]
+    assert warm == cold, name
+
+
+def test_lossless_flags():
+    """The identity fast path is keyed off these; pin them."""
+    assert not codecs.get("bdi").lossless
+    assert codecs.get("zero").lossless
+    assert codecs.get("raw").lossless
+    assert codecs.get("bdi").has_fused_kernels
+    assert not codecs.get("raw").has_fused_kernels
+
+
+def test_engine_downgrades_use_fused_for_kernel_less_codec(small_model):
+    """use_fused=True with a codec that ships no fused kernels falls
+    back to the generic path instead of crashing."""
+    cfg, params = small_model
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=32,
+                        max_batch=2, use_fused=True, codec="raw")
+    assert not eng.use_fused
+    eng.add_request(0, [1, 2, 3, 4, 5])
+    assert isinstance(eng.decode_one(0), int)

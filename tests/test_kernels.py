@@ -86,6 +86,24 @@ def test_kernel_roundtrip_error_bound():
     assert (err <= bound + 1e-7).all()
 
 
+@pytest.mark.parametrize("kind,value", [("zeros", 0.0), ("rep", 7.5)])
+def test_all_constant_tiles_emit_valid_scale_and_roundtrip(kind, value):
+    """All-constant tiles (incl. the all-zeros tile) have zero max
+    residual, and the compressor must emit a *valid* scale (1.0) for
+    them — ``ops.decompress`` no longer patches ``scale == 0`` up, so a
+    zero scale would now corrupt the masked-FMA reconstruction.  Both
+    the kernel and the jnp oracle are pinned, and the roundtrip must be
+    exact (ZERO/REP encodings are error-free)."""
+    x = jnp.full((16, 128), value, jnp.float32)
+    for p in (ops.compress(x), ref.compress_ref(x)):
+        np.testing.assert_array_equal(np.asarray(p.scale), 1.0)
+        np.testing.assert_array_equal(np.asarray(p.deltas), 0)
+        np.testing.assert_array_equal(np.asarray(ops.decompress(p)),
+                                      np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(ref.decompress_ref(p)),
+                                      np.asarray(x))
+
+
 def test_roundtrip_tensor_arbitrary_shape():
     x = jax.random.normal(jax.random.PRNGKey(9), (3, 45, 17), jnp.float32)
     out = ops.roundtrip_tensor(x)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import codecs
 from repro.configs.registry import get_arch
 from repro.models.api import get_model
 from repro.serving import engine as E
@@ -55,8 +56,7 @@ def _assert_pool_consistent(eng):
     held = {p for s in eng.seqs.values() for lp in s.pages for p in lp}
     if cache is not None:
         held |= {p for e in cache.entries.values() for p in e.pages}
-    n_pool = (eng.pools.kd.shape[1] if hasattr(eng, "pools")
-              else eng.kd.shape[1])
+    n_pool = eng.n_pool_pages
     assert len(eng.free) == len(set(eng.free))          # no double free
     assert held.isdisjoint(eng.free)
     assert len(held) + len(eng.free) == n_pool - 1      # page 0 reserved
@@ -448,12 +448,14 @@ def test_prefill_dispatch_shape_invariance(small_model):
     cfg, params = small_model
     prompt = [1 + (j * 3) % 50 for j in range(34)]
     kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    codec = codecs.resolve(None)          # whatever REPRO_CODEC selects
 
     def run(chunks, nrows, tmax):
         kscr = jnp.zeros((cfg.n_layers, nrows, tmax, kvh, dh), jnp.float32)
         vscr = jnp.zeros_like(kscr)
-        kcan = jnp.zeros_like(kscr)
-        vcan = jnp.zeros_like(kscr)
+        can_t = 0 if codec.lossless else tmax
+        kcan = jnp.zeros((cfg.n_layers, nrows, can_t, kvh, dh), jnp.float32)
+        vcan = jnp.zeros_like(kcan)
         buf = np.zeros((nrows, tmax), np.int32)
         buf[:, :34] = prompt
         off = 0
@@ -464,7 +466,8 @@ def test_prefill_dispatch_shape_invariance(small_model):
             pt[:, n:] = 0
             kscr, vscr, kcan, vcan = E._prefill_chunk(
                 params, jnp.asarray(pt), kscr, vscr, kcan, vcan,
-                jnp.full((nrows,), o, jnp.int32), cfg=cfg, page=PAGE)
+                jnp.full((nrows,), o, jnp.int32), cfg=cfg, page=PAGE,
+                codec=codec)
             off += n
         return np.asarray(kscr[:, 0, :33])
 
