@@ -21,10 +21,15 @@ tok/s); ``goodput_vs_static`` is the headline continuous-batching win.
 
 And the **shared-system-prompt prefix-cache benchmark**: the same
 open-loop workload — every prompt = one shared system prefix + a short
-unique suffix — runs cold (no prefix cache) and warm (cache primed by
-one priming request), reporting the token-weighted prefix hit rate and
-the warm-vs-cold p95 TTFT ratio.  CI gates the structural
-``warm_ttft_p95 <= cold_ttft_p95`` win and a minimum hit rate.
+unique suffix — runs cold (no prefix cache), warm (cache primed by
+one priming request), and *restored* (the warm engine snapshot/restored
+through ``serving/snapshot.py``, then served fresh suffixes), reporting
+the token-weighted prefix hit rate and the warm-vs-cold p95 TTFT ratio.
+CI gates the structural ``warm_ttft_p95 <= cold_ttft_p95`` win (and the
+same for the restored row — warm hits must survive a restore), a
+minimum hit rate, and — on every scheduler-driven row — that the
+resilience counters (rejected / deadline_missed / corrupt_retries /
+requeues) are all zero in this no-fault smoke.
 
 Every row is labeled with the KV page codec in use (``--codec`` /
 ``REPRO_CODEC``; default bdi) and its measured compression ratio, so
@@ -239,6 +244,14 @@ def _run_continuous(cfg, params, reqs, gap: float, slots: int,
         sum(len(fin[r].out_tokens) for r in order))
     m["mixed_iterations"] = sched.stats["mixed_iterations"]
     m["iterations"] = sched.stats["iterations"]
+    # resilience counters (serving/faults.py): a no-fault bench run must
+    # report all four as zero — check_serve_regression gates this, so a
+    # scheduler change that silently rejects/retries/expires requests
+    # can't masquerade as a goodput win
+    m["rejected"] = sched.stats["rejected"]
+    m["deadline_missed"] = sched.stats["deadline_missed"]
+    m["corrupt_retries"] = sched.stats["corrupt_retries"]
+    m["requeues"] = sched.stats["requeues"]
     m["codec"] = eng.codec.name
     m["kv_compression_ratio"] = round(eng.compression_ratio(), 3)
     return m
@@ -378,6 +391,22 @@ def _bench_prefix(cfg, params, mode: str,
     warm = _run_continuous(cfg, params, reqs, gap, slots, pool,
                            engine=warm_eng)
     hit_rate = warm_eng.prefix_cache.hit_rate()
+
+    # snapshot/restore warm-hit scenario: persist the warm engine + its
+    # cache trie, restore into a fresh engine, and serve a NEW suffix
+    # salt — only the system prefix can hit, so warm TTFT surviving a
+    # restore is exactly what this row measures (CI gates
+    # restored_ttft_p95 <= cold_ttft_p95)
+    import tempfile
+
+    from repro.serving.snapshot import restore_snapshot, save_snapshot
+    with tempfile.TemporaryDirectory() as td:
+        save_snapshot(td, warm_eng, step=0)
+        rest_eng, _ = restore_snapshot(td, cfg, params)
+    restored = _run_continuous(cfg, params, _prefix_workload(cfg, n_req, 77),
+                               gap, slots, pool, engine=rest_eng)
+    rest_hits = rest_eng.prefix_cache.hit_rate()
+
     cold.update({"bench": "serve_prefix", "engine": "prefix_cold",
                  "batch": slots, "n_requests": n_req,
                  "sys_prompt_len": SYS_PROMPT_LEN})
@@ -389,7 +418,15 @@ def _bench_prefix(cfg, params, mode: str,
         "warm_vs_cold_ttft_p95": round(
             cold["ttft_s_p95"] / max(warm["ttft_s_p95"], 1e-9), 2),
     })
-    return [warm, cold]
+    restored.update({
+        "bench": "serve_prefix", "engine": "prefix_restored",
+        "batch": slots, "n_requests": n_req,
+        "sys_prompt_len": SYS_PROMPT_LEN,
+        "prefix_hit_rate": round(rest_hits, 3),
+        "restored_vs_cold_ttft_p95": round(
+            cold["ttft_s_p95"] / max(restored["ttft_s_p95"], 1e-9), 2),
+    })
+    return [warm, cold, restored]
 
 
 def _bench_scheduler(cfg, params, mode: str,

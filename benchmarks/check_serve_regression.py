@@ -55,6 +55,7 @@ def check(current: dict, baseline: dict, max_drop: float,
     cur, base = _gated_rows(current), _gated_rows(baseline)
     failures = []
     failures += _check_prefix_rows(current, min_hit_rate)
+    failures += _check_fault_counters(current)
     for key, brow in sorted(base.items()):
         engine, batch = key
         crow = cur.get(key)
@@ -92,29 +93,58 @@ def check(current: dict, baseline: dict, max_drop: float,
 
 
 def _check_prefix_rows(current: dict, min_hit_rate: float) -> list[str]:
-    """Structural prefix-cache gates (runner-speed independent)."""
-    warm = {r["batch"]: r for r in current["rows"]
-            if r.get("engine") == "prefix_warm"}
+    """Structural prefix-cache gates (runner-speed independent).
+
+    ``prefix_restored`` — the warm cache snapshot/restored through
+    ``serving/snapshot.py``, then serving fresh suffixes — is held to
+    the same bar as ``prefix_warm``: warm hits must survive a restore
+    (``restored_ttft_p95 <= cold_ttft_p95``, same minimum hit rate)."""
     cold = {r["batch"]: r for r in current["rows"]
             if r.get("engine") == "prefix_cold"}
     failures = []
-    if not warm:
-        failures.append("prefix_warm row missing from current results")
-    for batch, wrow in sorted(warm.items()):
-        crow = cold.get(batch)
-        if crow is None:
-            failures.append(f"prefix_cold batch {batch}: missing")
+    for kind in ("prefix_warm", "prefix_restored"):
+        rows = {r["batch"]: r for r in current["rows"]
+                if r.get("engine") == kind}
+        if not rows:
+            failures.append(f"{kind} row missing from current results")
+        for batch, wrow in sorted(rows.items()):
+            crow = cold.get(batch)
+            if crow is None:
+                failures.append(f"prefix_cold batch {batch}: missing")
+                continue
+            if wrow["ttft_s_p95"] > crow["ttft_s_p95"]:
+                failures.append(
+                    f"{kind} batch {batch} ttft_p95 {wrow['ttft_s_p95']:.4f}"
+                    f" > cold_ttft_p95 {crow['ttft_s_p95']:.4f} (the prefix "
+                    "cache made TTFT worse)")
+            hit = wrow.get("prefix_hit_rate", 0.0)
+            if hit < min_hit_rate:
+                failures.append(
+                    f"{kind} batch {batch} prefix_hit_rate: {hit:.3f} < "
+                    f"required {min_hit_rate:.3f}")
+    return failures
+
+
+# a no-fault smoke must finish every request normally: any nonzero
+# counter means the scheduler rejected, expired, retried, or requeued
+# work without fault injection — a resilience-path leak into the happy
+# path, which would silently distort every throughput number above
+_FAULT_COUNTERS = ("rejected", "deadline_missed", "corrupt_retries",
+                   "requeues")
+_COUNTED_ENGINES = ("scheduler", "prefix_cold", "prefix_warm",
+                    "prefix_restored")
+
+
+def _check_fault_counters(current: dict) -> list[str]:
+    failures = []
+    for r in current["rows"]:
+        if r.get("engine") not in _COUNTED_ENGINES:
             continue
-        if wrow["ttft_s_p95"] > crow["ttft_s_p95"]:
-            failures.append(
-                f"prefix batch {batch} warm_ttft_p95 {wrow['ttft_s_p95']:.4f}"
-                f" > cold_ttft_p95 {crow['ttft_s_p95']:.4f} (the prefix "
-                "cache made TTFT worse)")
-        hit = wrow.get("prefix_hit_rate", 0.0)
-        if hit < min_hit_rate:
-            failures.append(
-                f"prefix batch {batch} prefix_hit_rate: {hit:.3f} < "
-                f"required {min_hit_rate:.3f}")
+        for c in _FAULT_COUNTERS:
+            if r.get(c, 0) != 0:
+                failures.append(
+                    f"{r['engine']} batch {r['batch']} {c}: {r[c]} != 0 "
+                    "(terminal faults / retries in a no-fault smoke)")
     return failures
 
 
@@ -201,6 +231,14 @@ def main() -> int:
                   f"warm_vs_cold_ttft_p95={row['warm_vs_cold_ttft_p95']:.2f}"
                   f" (>= 1.00), prefix_hit_rate={row['prefix_hit_rate']:.3f}"
                   f" (>= {args.min_hit_rate:.3f})")
+        elif row.get("engine") == "prefix_restored":
+            print(f"  ok restored batch {row['batch']}: "
+                  f"restored_vs_cold_ttft_p95="
+                  f"{row['restored_vs_cold_ttft_p95']:.2f} (>= 1.00), "
+                  f"prefix_hit_rate={row['prefix_hit_rate']:.3f} "
+                  f"(>= {args.min_hit_rate:.3f})")
+    print("  ok fault counters: rejected/deadline_missed/corrupt_retries/"
+          "requeues all zero on scheduler + prefix rows")
     return 0
 
 

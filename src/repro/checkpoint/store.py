@@ -152,6 +152,37 @@ def restore(ckpt_dir: str, tree_like, *, step: int | None = None,
     return jax.tree_util.tree_unflatten(tdef, [v for v in out]), manifest
 
 
+def load_flat(ckpt_dir: str, *, step: int | None = None
+              ) -> tuple[dict[str, np.ndarray], dict]:
+    """Restore a checkpoint saved from a flat ``{name: array}`` dict
+    without a ``tree_like`` template (the engine-snapshot path: restore
+    must not need to know the saved pool layout up front).
+
+    Returns ``({name: np.ndarray}, manifest)``; names are the dict keys
+    the tree was saved with (a dict leaf's keystr is ``"['name']"``).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    out: dict[str, np.ndarray] = {}
+    for e in manifest["entries"]:
+        with open(os.path.join(d, e["file"]), "rb") as f:
+            blob = f.read()
+        got = hashlib.sha256(blob).hexdigest()
+        if got != e["sha256"]:
+            raise IOError(f"checkpoint corruption in {e['file']}: "
+                          f"sha mismatch ({got[:12]} != {e['sha256'][:12]})")
+        raw = bx.decompress_stream(blob).tobytes() if e["codec"] == "bdi" \
+            else blob
+        arr = np.frombuffer(raw, dtype=_dtype(e["dtype"]))
+        name = e["path"][2:-2]           # keystr "['name']" -> name
+        out[name] = arr.reshape(e["shape"])
+    return out, manifest
+
+
 def prune_old(ckpt_dir: str, keep: int = 3) -> None:
     """Retention policy: keep the newest `keep` checkpoints."""
     if not os.path.isdir(ckpt_dir):

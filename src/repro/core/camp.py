@@ -375,6 +375,53 @@ class GlobalCache:
 
 
 # ---------------------------------------------------------------------------
+# graceful-degradation ladder (serving overload control)
+# ---------------------------------------------------------------------------
+
+class PressureLadder:
+    """Hysteretic multi-level degradation ladder over a pressure signal.
+
+    The serving-side twin of the hardware exception discipline: instead
+    of one hard capacity cliff, the system sheds load in value order as
+    a pressure signal in [0, 1] rises — level 1 first drops speculative
+    state (prefix-cache insertions), level 2 cheap-but-deferrable work
+    (prefill token share), level 3 new admissions.  Each level has an
+    *enter* threshold and a strictly lower *exit* threshold, so a signal
+    oscillating inside the band never flaps the level (classic
+    Schmitt-trigger hysteresis).  What each level means is the caller's
+    contract (``serving/scheduler.py`` wires the three levels above);
+    this class only owns the thresholding.
+    """
+
+    def __init__(self, enter: tuple[float, ...] = (0.70, 0.85, 0.95),
+                 exit: tuple[float, ...] = (0.55, 0.70, 0.85)):
+        assert len(enter) == len(exit) and enter, (enter, exit)
+        assert all(x < e for x, e in zip(exit, enter)), \
+            f"exit thresholds must sit below enter thresholds: {exit} {enter}"
+        assert list(enter) == sorted(enter), enter
+        assert list(exit) == sorted(exit), exit
+        self.enter = tuple(enter)
+        self.exit = tuple(exit)
+        self.level = 0
+        self.transitions = 0
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.enter)
+
+    def update(self, pressure: float) -> int:
+        """Feed one pressure sample; returns the (possibly new) level."""
+        while self.level < self.n_levels \
+                and pressure >= self.enter[self.level]:
+            self.level += 1
+            self.transitions += 1
+        while self.level > 0 and pressure < self.exit[self.level - 1]:
+            self.level -= 1
+            self.transitions += 1
+        return self.level
+
+
+# ---------------------------------------------------------------------------
 # Belady OPT (size-oblivious) — for the Figure 4.1 motivating example
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,16 @@ see ``repro.codecs``); every paged mode reports the aggregate and — in
 scheduler mode — per-request compression ratio (raw vs device-reported
 compressed bytes), labeled by codec name.
 
+Resilience (scheduler mode; serving/faults.py): ``--ttft-deadline`` /
+``--deadline`` set per-request deadlines in iterations, ``--max-queue``
+bounds the waiting queue, ``--overload`` arms the pool-pressure
+degradation ladder, and ``--chaos SEED`` injects a deterministic fault
+schedule (page corruption + garbage decode tokens) — every request
+still ends with a deterministic ``finish_reason``.  ``--snapshot-dir``
+demos engine snapshot/restore: the engine state is checkpointed
+mid-stream, then restored after the run and driven to completion; the
+report's ``snapshot.restored_match`` confirms token-identical output.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
       --prompt-len 16 --gen 16 [--paged | --paged-reference | --scheduler]
@@ -51,7 +61,12 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              arrival_stagger: int = 2, prefix_cache: bool = False,
              shared_prefix: int = 0,
              requeue_preempted: bool = False,
-             codec: str | None = None) -> dict:
+             codec: str | None = None,
+             ttft_deadline: int | None = None,
+             deadline: int | None = None,
+             max_queue: int | None = None, overload: bool = False,
+             chaos: int | None = None,
+             snapshot_dir: str | None = None) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -62,15 +77,26 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                                  jnp.int32)
 
     if scheduler:
+        from repro.core.camp import PressureLadder
+        from repro.serving import faults as F
         from repro.serving.engine import PagedKVEngine
         from repro.serving.prefix_cache import PrefixCache
         from repro.serving.scheduler import ContinuousScheduler
         cache = (PrefixCache.for_model(cfg, 8) if prefix_cache else None)
+        injector = None
+        if chaos is not None:
+            injector = F.FaultInjector(F.FaultSpec(
+                corrupt_page_every=7, corrupt_max=2,
+                garble_decode_every=11, garble_max=2), seed=chaos)
         eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
                             max_batch=batch, prefill_chunk=prefill_chunk,
-                            prefix_cache=cache, codec=codec)
+                            prefix_cache=cache, codec=codec,
+                            faults=injector)
         sched = ContinuousScheduler(eng, token_budget=token_budget,
-                                    requeue_preempted=requeue_preempted)
+                                    requeue_preempted=requeue_preempted,
+                                    max_queue=max_queue,
+                                    ladder=PressureLadder() if overload
+                                    else None)
         # shared system prompt: every request reuses the first
         # ``shared_prefix`` prompt tokens (prefix-cache showcase)
         if shared_prefix:
@@ -84,12 +110,22 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         arrivals = {b: b * arrival_stagger for b in range(batch)}
         t0 = time.time()
         pending = dict(arrivals)
+        snap_step = None
         while pending or not sched.idle:
             for rid, at in list(pending.items()):
                 if at <= sched.iteration:
                     sched.submit(rid, [int(t) for t in prompts[rid]],
-                                 max_new_tokens=gen)
+                                 max_new_tokens=gen,
+                                 ttft_deadline=ttft_deadline,
+                                 deadline=deadline)
                     del pending[rid]
+            if snapshot_dir is not None and snap_step is None \
+                    and not pending and (sched._running or sched._prefill):
+                # mid-stream snapshot with requests in flight: the
+                # restore demo below finishes them token-identically
+                from repro.serving.snapshot import save_snapshot
+                snap_step = sched.iteration
+                save_snapshot(snapshot_dir, eng, sched, step=snap_step)
             sched.step()
         dt = time.time() - t0
         fin = sched.finished()
@@ -106,16 +142,31 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                       "latency_iters": fin[b].finished_iter - arrivals[b],
                       "cached_tokens": fin[b].pf_start,
                       "compression_ratio": req_ratio(b),
-                      "reason": fin[b].finish_reason}
+                      "reason": str(fin[b].finish_reason)}
                   for b in range(batch)}
         out = {"tokens": outs, "codec": eng.codec.name,
                "kv_compression_ratio": eng.compression_ratio(),
                "stats": eng.stats,
                "sched_stats": sched.stats, "per_request": report,
                "tok_per_s": sum(len(o) for o in outs) / dt}
+        if injector is not None:
+            out["faults"] = dict(injector.stats, log=injector.log)
         if cache is not None:
             out["prefix_cache"] = dict(cache.stats,
                                        hit_rate=round(cache.hit_rate(), 3))
+        if snap_step is not None:
+            # restore the mid-stream snapshot into a fresh engine and
+            # drive it to drain: outputs must match the original run
+            from repro.serving.snapshot import restore_snapshot
+            eng2, sched2 = restore_snapshot(snapshot_dir, cfg, params,
+                                            step=snap_step)
+            fin2 = sched2.run()
+            match = all(fin2[b].out_tokens == fin[b].out_tokens
+                        and str(fin2[b].finish_reason)
+                        == str(fin[b].finish_reason) for b in fin2)
+            eng2.debug_validate()
+            out["snapshot"] = {"step": snap_step, "restored_match": match,
+                               "restored_requests": len(fin2)}
         return out
 
     if paged or paged_reference:
@@ -195,6 +246,27 @@ def main() -> None:
     ap.add_argument("--codec", default=None,
                     help="KV page codec (bdi | zero | raw; default: "
                          "REPRO_CODEC env or bdi)")
+    ap.add_argument("--ttft-deadline", type=int, default=None,
+                    help="per-request TTFT deadline in scheduler "
+                         "iterations (scheduler mode)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="per-request total deadline in scheduler "
+                         "iterations (scheduler mode)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded waiting queue: submissions past this "
+                         "depth finish 'rejected' (scheduler mode)")
+    ap.add_argument("--overload", action="store_true",
+                    help="arm the pool-pressure degradation ladder "
+                         "(shed cache inserts -> shrink prefill share "
+                         "-> reject admissions; scheduler mode)")
+    ap.add_argument("--chaos", type=int, default=None,
+                    help="fault-injection seed: deterministic page "
+                         "corruption + garbage decode tokens "
+                         "(scheduler mode)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="snapshot the engine mid-stream into this dir, "
+                         "then restore and verify token-identical "
+                         "completion (scheduler mode)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
@@ -205,7 +277,10 @@ def main() -> None:
                    prefix_cache=args.prefix_cache,
                    shared_prefix=args.shared_prefix,
                    requeue_preempted=args.requeue_preempted,
-                   codec=args.codec)
+                   codec=args.codec, ttft_deadline=args.ttft_deadline,
+                   deadline=args.deadline, max_queue=args.max_queue,
+                   overload=args.overload, chaos=args.chaos,
+                   snapshot_dir=args.snapshot_dir)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
@@ -222,8 +297,12 @@ def main() -> None:
                   f"{out['codec']} ratio "
                   f"{'n/a' if ratio is None else f'{ratio:.2f}x'} "
                   f"({r['reason']})")
+    if "faults" in out:
+        print(f"[serve] injected faults: {out['faults']}")
     if "prefix_cache" in out:
         print(f"[serve] prefix cache: {out['prefix_cache']}")
+    if "snapshot" in out:
+        print(f"[serve] snapshot/restore: {out['snapshot']}")
 
 
 if __name__ == "__main__":

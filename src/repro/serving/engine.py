@@ -110,6 +110,7 @@ from repro.configs.base import ArchConfig
 from repro.kernels._backend import default_interpret
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.serving import faults as F
 from repro.serving.prefix_cache import (PrefixCache, canonical_update,
                                         prefix_chunk_attention)
 
@@ -123,6 +124,7 @@ class Sequence:
     tail_len: int = 0
     done: bool = False
     preempted: bool = False
+    corrupted: bool = False              # failed a page-integrity check
     prefilling: bool = False             # in-flight admission cohort member
     # prefix-cache chain: entry ids whose pages this sequence maps, in
     # block order.  pages[li][:len(chain)] are shared (cache-owned);
@@ -480,8 +482,12 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
 
     One dispatch publishes every filled page of every layer: the batched
     page-fill compression + donated in-place pool update.  Returns the
-    updated pools and the codec's device-computed per-page byte counts
-    [n] (the numbers CAMP values and SIP retention consume).
+    updated pools, the codec's device-computed per-page byte counts [n]
+    (the numbers CAMP values and SIP retention consume), and the
+    per-page integrity checksums [n] (``faults.page_checksums`` over the
+    freshly compressed bytes — computed here so integrity costs zero
+    extra dispatches or host syncs; verification recomputes the same
+    function over the pool bytes at the trust boundaries).
     ``use_fused`` routes compression through the codec's fused kernel
     path (BDI: the Pallas row codec, bit-exact with the jnp oracle)
     where it compiles natively.
@@ -490,9 +496,10 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
                 else codec.compress_kv_pages)
     pg = compress(k_blocks, v_blocks)
     nbytes = codec.page_nbytes(pg)
+    csums = F.page_checksums(pg)
     pools = jax.tree.map(
         lambda pool, new: pool.at[layer_idx, pids].set(new), pools, pg)
-    return pools, nbytes
+    return pools, nbytes, csums
 
 
 # ---------------------------------------------------------------------------
@@ -513,7 +520,9 @@ class PagedKVEngine:
                  use_fused: bool | None = None,
                  prefill_chunk: int | None = None,
                  prefix_cache: PrefixCache | None = None,
-                 codec: str | codecs.PageCodec | None = None):
+                 codec: str | codecs.PageCodec | None = None,
+                 faults: "F.FaultInjector | None" = None,
+                 integrity: bool = True):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -549,6 +558,14 @@ class PagedKVEngine:
         # pool id 0 is the padding target of padded page tables
         self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
         self.page_bytes = np.zeros(n_pool_pages, np.int64)
+        # publish-time integrity checksums (serving/faults.py); consulted
+        # only for currently-mapped pages, so stale slots are harmless
+        self.page_checksum = np.zeros(n_pool_pages, np.uint32)
+        self.integrity = integrity
+        self.faults = faults
+        # degradation-ladder level 1 (scheduler-driven): drop speculative
+        # prefix-cache insertions while the pool is under pressure
+        self.shed_cache_inserts = False
         self.seqs: dict[int, Sequence] = {}
         # cumulative published bytes per request (survives release; the
         # serving driver reports per-request compression from this)
@@ -560,13 +577,25 @@ class PagedKVEngine:
         self._cohort: _Cohort | None = None
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0, "prefix_pages_evicted": 0}
+                      "preemptions": 0, "prefix_pages_evicted": 0,
+                      "shed_inserts": 0, "integrity_failures": 0}
 
     # -- pool bookkeeping ----------------------------------------------------
 
     def page_raw_bytes(self) -> int:
         c = self.cfg
         return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
+
+    def pool_pressure(self) -> float:
+        """Non-reclaimable pool fraction in [0, 1]: pages neither free
+        nor cheaply evictable (retained refcount-0 prefix entries count
+        as reclaimable — they free without preempting anyone).  The
+        degradation ladder's input signal."""
+        cap = self.n_pool_pages - 1
+        reclaimable = len(self.free)
+        if self.prefix_cache is not None:
+            reclaimable += self.prefix_cache.retained_pages()
+        return max(0.0, 1.0 - reclaimable / cap)
 
     def _reserve_pages(self, n: int) -> list[int]:
         """Reclaim order under pool pressure: free list, then retained
@@ -624,8 +653,19 @@ class PagedKVEngine:
     def _preempt_one(self) -> None:
         cands = [s for s in self.seqs.values()
                  if any(s.pages[li] for li in range(self.cfg.n_layers))]
-        assert cands, "pool exhausted with nothing evictable"
+        if not cands:
+            raise F.PoolExhaustedError(
+                f"pool exhausted with nothing evictable "
+                f"({self.n_pool_pages - 1} pages, {len(self.free)} free)")
         victim = min(cands, key=self._seq_value)
+        # verify the victim's pages *before* dropping them: a preemption
+        # requeue absorbs generated tokens into the prompt, so corrupted-
+        # influenced tokens must be flagged here or they would silently
+        # survive the recompute (only costs a dispatch when faults can
+        # actually occur)
+        if self.integrity and self.faults is not None \
+                and not F.verify_seq(self, victim.sid):
+            self.stats["integrity_failures"] += 1
         self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
@@ -633,10 +673,11 @@ class PagedKVEngine:
         self.stats["preemptions"] += 1
 
     def _record_publish(self, seq: Sequence, pids: list[int],
-                        nbytes: np.ndarray) -> None:
+                        nbytes: np.ndarray, csums: np.ndarray) -> None:
         """Attach freshly published pages (one per layer) to a sequence."""
         for li, pid in enumerate(pids):
             self.page_bytes[pid] = int(nbytes[li])
+            self.page_checksum[pid] = csums[li]
             seq.pages[li].append(pid)
         self.stats["pages_compressed"] += len(pids)
         self.stats["bytes_raw"] += self.page_raw_bytes() * len(pids)
@@ -678,8 +719,38 @@ class PagedKVEngine:
         assert not (seq.prefilling and not seq.preempted), \
             f"sid {sid} is mid-prefill; cannot release"
         self._drop_seq_pages(seq, count_evicted=False)
+        if self.prefix_cache is not None:
+            # reclaim quarantined entries the moment their last pin drops
+            self.free.extend(self.prefix_cache.purge_corrupt())
         self._free_slots.append(seq.slot)
         self._pt_dirty = True
+
+    def abort(self, sid: int) -> None:
+        """Abandon a request mid-flight (deadline miss, integrity
+        restart): drop its pages and mark it preempted so ``release``
+        accepts it even mid-prefill — its cohort row keeps computing
+        masked garbage that is never published, exactly like a CAMP
+        preemption victim (but without the preemption accounting)."""
+        seq = self.seqs[sid]
+        if seq.preempted:
+            return
+        self._drop_seq_pages(seq, count_evicted=False)
+        seq.tail_len = 0
+        seq.preempted = True
+        self._pt_dirty = True
+        self._maybe_drop_cohort()
+
+    # -- integrity / invariants ---------------------------------------------
+
+    def verify_seq(self, sid: int) -> bool:
+        """Recompute checksums for every pool page the sequence maps;
+        quarantines corrupt shared entries.  See serving/faults.py."""
+        return F.verify_seq(self, sid)
+
+    def debug_validate(self) -> None:
+        """Assert page/refcount/slot accounting is exact (test teardowns
+        and chaos drains).  See :func:`repro.serving.faults.debug_validate`."""
+        F.debug_validate(self)
 
     def add_request(self, sid: int, prompt: list[int]) -> None:
         self.add_requests({sid: prompt})
@@ -735,6 +806,15 @@ class PagedKVEngine:
             start, chain = 0, []
             if self.prefix_cache is not None:
                 start, chain = self.prefix_cache.lookup(prompt)
+                if self.integrity:
+                    # warm-hit trust boundary: verify the chain's pool
+                    # pages before mapping them; a corrupt entry
+                    # truncates the hit (the request recomputes from
+                    # there, never serving bad bytes)
+                    vstart, chain = F.verified_prefix(self, start, chain)
+                    if vstart != start:
+                        self.stats["integrity_failures"] += 1
+                        start = vstart
                 self.prefix_cache.pin(chain)
             ent = [self.prefix_cache.entries[e] for e in chain]
             seq = Sequence(sid=sid, slot=self._free_slots.pop(),
@@ -920,28 +1000,49 @@ class PagedKVEngine:
         m = len(seqs)
         pids = self._reserve_pages(lyr * m)
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
-        self.pools, nbytes = _publish_blocks(
+        self.pools, nbytes, csums = _publish_blocks(
             self.pools, k_blocks, v_blocks, layer_idx,
             jnp.asarray(pids, jnp.int32), codec=self.codec,
             use_fused=self.use_fused)
-        nbytes = np.asarray(nbytes)                    # 1 sync per publish
+        nbytes, csums = jax.device_get((nbytes, csums))  # 1 sync per publish
+        nbytes, csums = np.asarray(nbytes), np.asarray(csums)
         for j, seq in enumerate(seqs):
             if seq.preempted:      # victim of our own reservation
                 self.free.extend(pids[j::m])
                 continue
-            self._record_publish(seq, pids[j::m], nbytes[j::m])
+            self._record_publish(seq, pids[j::m], nbytes[j::m], csums[j::m])
             if blocks is not None and self.prefix_cache is not None:
                 self._register_prompt_page(seq, blocks[j], pids[j::m],
                                            int(nbytes[j::m].sum()))
+        if self.faults is not None:
+            # fault-injection hook: corruption lands in the compressed
+            # pool bytes *after* checksums were recorded, exactly like
+            # post-publish bit rot
+            for j, seq in enumerate(seqs):
+                if not seq.preempted:
+                    for li, pid in enumerate(pids[j::m]):
+                        self.faults.page_published(self, li, pid)
 
     def _register_prompt_page(self, seq: Sequence, blk: int,
                               pids: list[int], nbytes: int) -> None:
         """Attach a freshly published prompt page to the prefix cache."""
         page, cache = self.page, self.prefix_cache
+        if self.shed_cache_inserts or blk != len(seq.chain):
+            # degradation-ladder level 1: skip speculative insertions
+            # under pool pressure (the page stays private).  Once one
+            # block is shed the sequence's chain is broken, so later
+            # blocks must stay private too (blk != len(chain)) even
+            # after pressure clears.
+            self.stats["shed_inserts"] += 1
+            return
         assert blk == len(seq.chain), (blk, len(seq.chain))
         parent = seq.chain[-1] if seq.chain else 0
         toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
         eid, created = cache.insert(parent, toks, pids, nbytes)
+        self.free.extend(cache.drain_displaced())   # healed-over pages
+        if eid is None:            # pinned corrupt twin: block stays private
+            self.stats["shed_inserts"] += 1
+            return
         cache.pin([eid])
         seq.chain.append(eid)
         if not created:            # in-cohort dedup: map the shared pages
@@ -1070,6 +1171,9 @@ class PagedKVEngine:
     def _decode_post(self, sids: list[int], nxt: np.ndarray
                      ) -> dict[int, int]:
         """Append decoded tokens; publish every tail page that filled."""
+        if self.faults is not None:
+            nxt = self.faults.garble_tokens(
+                nxt, [self.seqs[sid].slot for sid in sids])
         filled: list[Sequence] = []
         out: dict[int, int] = {}
         for sid in sids:

@@ -247,6 +247,8 @@ class Entry:
     children: int = 0            # resident child entries (evict leaf-first)
     hits: int = 0                # chain-hit reuse counter (SIP/CAMP feed)
     born: int = 0                # insertion clock (deterministic tiebreak)
+    corrupt: bool = False        # failed an integrity check: quarantined
+                                 # (skipped by lookups, evicted first)
 
 
 class PrefixCache:
@@ -270,7 +272,9 @@ class PrefixCache:
         self._clock = 0
         self.stats = {"lookups": 0, "lookup_tokens": 0, "hits": 0,
                       "hit_tokens": 0, "inserted": 0, "deduped": 0,
-                      "evicted": 0}
+                      "evicted": 0, "quarantined": 0, "healed": 0}
+        self._n_corrupt = 0
+        self._displaced: list[int] = []   # pool ids freed by healing
 
     @classmethod
     def for_model(cls, cfg, page_size: int, **kw) -> "PrefixCache":
@@ -298,8 +302,8 @@ class PrefixCache:
         while (b + 1) * page <= stored:
             toks = tuple(prompt[b * page:(b + 1) * page])
             eid = self._child.get((parent, toks))
-            if eid is None:
-                break
+            if eid is None or self.entries[eid].corrupt:
+                break              # quarantined entries never serve hits
             chain.append(eid)
             parent = eid
             b += 1
@@ -325,10 +329,42 @@ class PrefixCache:
             assert e.refcount > 0, f"release of unpinned entry {eid}"
             e.refcount -= 1
 
+    # -- integrity quarantine -------------------------------------------------
+
+    def quarantine(self, eid: int) -> None:
+        """Mark an entry corrupt: it never serves another hit (lookups
+        stop at it, orphaning its still-clean descendants, which age out
+        leaf-first) and evicts ahead of every clean entry.  Its pool
+        pages are reclaimed by :meth:`purge_corrupt` once unpinned."""
+        e = self.entries[eid]
+        if not e.corrupt:
+            e.corrupt = True
+            self._n_corrupt += 1
+            self.stats["quarantined"] += 1
+
+    def drain_displaced(self) -> list[int]:
+        """Pool ids displaced by :meth:`insert` healing since the last
+        drain — the caller (engine) returns them to its free list."""
+        out, self._displaced = self._displaced, []
+        return out
+
+    def purge_corrupt(self) -> list[int]:
+        """Drop every unpinned corrupt *leaf* (repeatedly, so unpinned
+        corrupt subtrees collapse); returns the freed pool ids."""
+        freed: list[int] = []
+        while self._n_corrupt:
+            drop = [e for e in self.entries.values()
+                    if e.corrupt and e.refcount == 0 and e.children == 0]
+            if not drop:
+                break
+            for e in drop:
+                freed.extend(self._drop(e))
+        return freed
+
     # -- publish -------------------------------------------------------------
 
     def insert(self, parent: int, toks: tuple[int, ...], pages: list[int],
-               nbytes: int) -> tuple[int, bool]:
+               nbytes: int) -> tuple[int | None, bool]:
         """Register a freshly published prompt page.
 
         ``pages`` are the pool ids (one per layer) the publisher just
@@ -337,10 +373,33 @@ class PrefixCache:
         page is already resident (same parent chain, same token ids): the
         caller should free its duplicate pool pages and map the existing
         entry instead (in-cohort dedup of same-prefix prompts).
+
+        A resident twin that is *quarantined* must never be deduped onto
+        (that would re-serve the corrupt bytes the caller just recomputed
+        around).  An unpinned corrupt twin is **healed** in place: the
+        entry adopts the caller's freshly recomputed pages — byte-
+        identical to the original publish by the canonical-prefix
+        contract — and the displaced corrupt pool ids are queued for the
+        caller via :meth:`drain_displaced` (returned ``created=True``:
+        the caller keeps its fresh pages mapped).  A corrupt twin still
+        pinned by a doomed in-flight sequence cannot have its pages
+        swapped; the caller gets ``eid=None`` and keeps the block
+        private.
         """
         assert len(toks) == self.page and len(pages) == self.n_layers
         eid = self._child.get((parent, toks))
         if eid is not None:
+            e = self.entries[eid]
+            if e.corrupt:
+                if e.refcount:
+                    return None, False    # pinned corrupt twin: stay private
+                self._displaced.extend(e.pages)
+                e.pages = list(pages)
+                e.nbytes = int(nbytes)
+                e.corrupt = False
+                self._n_corrupt -= 1
+                self.stats["healed"] += 1
+                return eid, True
             self.stats["deduped"] += 1
             return eid, False
         self._clock += 1
@@ -377,7 +436,8 @@ class PrefixCache:
             if not cands:
                 break
             victim = min(cands, key=lambda e:
-                         (self.policy.value(e.hits, e.nbytes), e.born))
+                         (not e.corrupt,     # quarantined entries go first
+                          self.policy.value(e.hits, e.nbytes), e.born))
             freed.extend(self._drop(victim))
         return freed
 
@@ -386,6 +446,8 @@ class PrefixCache:
         del self.entries[e.eid]
         if e.parent:
             self.entries[e.parent].children -= 1
+        if e.corrupt:
+            self._n_corrupt -= 1
         self.stats["evicted"] += 1
         return e.pages
 
@@ -404,3 +466,51 @@ class PrefixCache:
         if not self.stats["lookup_tokens"]:
             return 0.0
         return self.stats["hit_tokens"] / self.stats["lookup_tokens"]
+
+    # -- snapshot / restore ----------------------------------------------------
+
+    def state(self) -> dict:
+        """JSON-serializable trie + policy state (serving/snapshot.py)."""
+        return {
+            "n_layers": self.n_layers, "page": self.page,
+            "next_eid": self._next_eid, "clock": self._clock,
+            "stats": dict(self.stats),
+            "entries": [{"eid": e.eid, "parent": e.parent,
+                         "depth": e.depth, "toks": list(e.toks),
+                         "pages": list(e.pages), "nbytes": e.nbytes,
+                         "refcount": e.refcount, "children": e.children,
+                         "hits": e.hits, "born": e.born,
+                         "corrupt": e.corrupt}
+                        for e in self.entries.values()],
+            "policy": {"line": self.policy.line,
+                       "train_period": self.policy.train_period,
+                       "priority": self.policy.priority.tolist(),
+                       "hit_ctr": self.policy.hit_ctr.tolist(),
+                       "lookups": self.policy.lookups},
+        }
+
+    def load_state(self, st: dict) -> None:
+        """Restore trie + policy state captured by :meth:`state` into a
+        freshly constructed cache of the same shape."""
+        assert st["n_layers"] == self.n_layers and st["page"] == self.page
+        self._next_eid = st["next_eid"]
+        self._clock = st["clock"]
+        self.stats.update(st["stats"])
+        self.entries.clear()
+        self._child.clear()
+        self._n_corrupt = 0
+        for d in st["entries"]:
+            e = Entry(eid=d["eid"], parent=d["parent"], depth=d["depth"],
+                      toks=tuple(d["toks"]), pages=list(d["pages"]),
+                      nbytes=d["nbytes"], refcount=d["refcount"],
+                      children=d["children"], hits=d["hits"],
+                      born=d["born"], corrupt=d["corrupt"])
+            self.entries[e.eid] = e
+            self._child[(e.parent, e.toks)] = e.eid
+            self._n_corrupt += int(e.corrupt)
+        p = st["policy"]
+        self.policy.line = p["line"]
+        self.policy.train_period = p["train_period"]
+        self.policy.priority = np.asarray(p["priority"], bool)
+        self.policy.hit_ctr = np.asarray(p["hit_ctr"], np.int64)
+        self.policy.lookups = p["lookups"]

@@ -62,6 +62,7 @@ from repro.configs.base import ArchConfig
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.serving import engine as _E
+from repro.serving import faults as F
 from repro.serving.prefix_cache import PrefixCache
 
 
@@ -75,6 +76,7 @@ class Sequence:
     tail_len: int = 0
     done: bool = False
     preempted: bool = False
+    corrupted: bool = False              # integrity check failed (faults.py)
     # chunked-prefill oracle state (begin_request / prefill_advance):
     prefilling: bool = False
     pf_start: int = 0                    # prefix-cache hit boundary
@@ -96,7 +98,9 @@ class ReferencePagedKVEngine:
                  n_pool_pages: int = 256,
                  prefix_cache: PrefixCache | None = None,
                  prefill_chunk: int | None = None,
-                 codec: str | codecs.PageCodec | None = None):
+                 codec: str | codecs.PageCodec | None = None,
+                 faults: "F.FaultInjector | None" = None,
+                 integrity: bool = True):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -124,19 +128,37 @@ class ReferencePagedKVEngine:
                                             page_size, dh))
         self.free: list[int] = list(range(n_pool_pages - 1, 0, -1))
         self.page_bytes = np.zeros(n_pool_pages, np.int64)
+        # publish-time integrity checksums (faults.page_checksums),
+        # verified at the same trust boundaries as the batched engine
+        self.page_checksum = np.zeros(n_pool_pages, np.uint32)
+        self.integrity = integrity
+        self.faults = faults
+        # degradation-ladder level >= 1 (scheduler-driven): stop inserting
+        # new prompt pages into the prefix cache
+        self.shed_cache_inserts = False
         self.seqs: dict[int, Sequence] = {}
         # cumulative published bytes per request (mirror of the batched
         # engine's per-request compression report)
         self.request_bytes: dict[int, list[int]] = {}
         self.stats = {"pages_compressed": 0, "pages_evicted": 0,
                       "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0, "prefix_pages_evicted": 0}
+                      "preemptions": 0, "prefix_pages_evicted": 0,
+                      "shed_inserts": 0, "integrity_failures": 0}
 
     # -- pool bookkeeping ----------------------------------------------------
 
     def page_raw_bytes(self) -> int:
         c = self.cfg
         return 2 * self.page * c.n_kv_heads * c.head_dim * 2   # K+V bf16
+
+    def pool_pressure(self) -> float:
+        """Non-reclaimable pool fraction in [0, 1] (mirror of the batched
+        engine): the degradation ladder's input signal."""
+        cap = self.n_pool_pages - 1
+        reclaimable = len(self.free)
+        if self.prefix_cache is not None:
+            reclaimable += self.prefix_cache.retained_pages()
+        return max(0.0, 1.0 - reclaimable / cap)
 
     def _alloc_page(self) -> int:
         """Mirror of the batched engine's reclaim order: free list, then
@@ -185,8 +207,17 @@ class ReferencePagedKVEngine:
     def _preempt_one(self) -> None:
         cands = [s for s in self.seqs.values()
                  if any(s.pages[li] for li in range(self.cfg.n_layers))]
-        assert cands, "pool exhausted with nothing evictable"
+        if not cands:
+            raise F.PoolExhaustedError(
+                f"pool exhausted with nothing evictable "
+                f"({self.n_pool_pages - 1} pages, {len(self.free)} free)")
         victim = min(cands, key=self._seq_value)
+        # verify the victim's pages *before* dropping them: a preemption
+        # requeue folds already-decoded tokens into the prompt, and a
+        # corrupted page must not influence tokens the absorb path keeps
+        if self.integrity and self.faults is not None \
+                and not F.verify_seq(self, victim.sid):
+            self.stats["integrity_failures"] += 1
         self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
@@ -217,6 +248,9 @@ class ReferencePagedKVEngine:
         # path, so CAMP values and stats match bit-for-bit
         nbytes = int(np.asarray(self.codec.page_nbytes(pg))[0])
         self.page_bytes[pid] = nbytes
+        # publish-time checksum: same jitted function the batched engine
+        # runs inside its publish dispatch, on the same compressed bits
+        self.page_checksum[pid] = np.asarray(F._checksum_jit(pg))[0]
         seq.pages[li].append(pid)
         self.stats["pages_compressed"] += 1
         self.stats["bytes_raw"] += self.page_raw_bytes()
@@ -224,6 +258,8 @@ class ReferencePagedKVEngine:
         rb = self.request_bytes.setdefault(seq.sid, [0, 0])
         rb[0] += self.page_raw_bytes()
         rb[1] += nbytes
+        if self.faults is not None:
+            self.faults.page_published(self, li, pid)
 
     def _publish_block(self, seq: Sequence, k_blk: np.ndarray,
                        v_blk: np.ndarray, blk: int | None = None) -> None:
@@ -234,13 +270,22 @@ class ReferencePagedKVEngine:
             self._publish_page(seq, li, k_blk[li], v_blk[li])
         if blk is None or seq.preempted or self.prefix_cache is None:
             return
+        if self.shed_cache_inserts or blk != len(seq.chain):
+            # degradation-ladder shed, or the chain already broke on an
+            # earlier shed block — later blocks stay private (a chain
+            # entry's position must equal its block index)
+            self.stats["shed_inserts"] += 1
+            return
         page, cache, lyr = self.page, self.prefix_cache, self.cfg.n_layers
-        assert blk == len(seq.chain), (blk, len(seq.chain))
         parent = seq.chain[-1] if seq.chain else 0
         toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
         pids = [seq.pages[li][blk] for li in range(lyr)]
         nbytes = sum(int(self.page_bytes[p]) for p in pids)
         eid, created = cache.insert(parent, toks, pids, nbytes)
+        self.free.extend(cache.drain_displaced())   # healed-over pages
+        if eid is None:            # pinned corrupt twin: block stays private
+            self.stats["shed_inserts"] += 1
+            return
         cache.pin([eid])
         seq.chain.append(eid)
         if not created:            # dedup: map the shared pages instead
@@ -278,6 +323,33 @@ class ReferencePagedKVEngine:
         assert not (seq.prefilling and not seq.preempted), \
             f"sid {sid} is mid-prefill; cannot release"
         self._drop_seq_pages(seq, count_evicted=False)
+        if self.prefix_cache is not None:
+            # reclaim quarantined entries the moment their last pin drops
+            self.free.extend(self.prefix_cache.purge_corrupt())
+
+    def abort(self, sid: int) -> None:
+        """Abandon a request mid-flight (deadline miss, integrity
+        restart): drop its pages and mark it preempted so ``release``
+        accepts it even mid-prefill (mirror of the batched engine)."""
+        seq = self.seqs[sid]
+        if seq.preempted:
+            return
+        self._drop_seq_pages(seq, count_evicted=False)
+        seq.tail_len = 0
+        seq.preempted = True
+        seq.pf_k = seq.pf_v = seq.pf_kc = seq.pf_vc = None
+
+    # -- integrity / invariants ------------------------------------------------
+
+    def verify_seq(self, sid: int) -> bool:
+        """Recompute checksums for every pool page the sequence maps;
+        quarantines corrupt shared entries.  See serving/faults.py."""
+        return F.verify_seq(self, sid)
+
+    def debug_validate(self) -> None:
+        """Assert page/refcount accounting is exact (test teardowns and
+        chaos drains).  See :func:`repro.serving.faults.debug_validate`."""
+        F.debug_validate(self)
 
     # -- chunked-prefill oracle (mixed-schedule semantics) ---------------------
 
@@ -302,6 +374,13 @@ class ReferencePagedKVEngine:
         start, chain = 0, []
         if self.prefix_cache is not None:
             start, chain = self.prefix_cache.lookup(prompt)
+            if self.integrity:
+                # warm-hit trust boundary: never map a corrupt shared
+                # page — truncate the chain and recompute from there
+                vstart, chain = F.verified_prefix(self, start, chain)
+                if vstart != start:
+                    self.stats["integrity_failures"] += 1
+                    start = vstart
             self.prefix_cache.pin(chain)
         ent = [self.prefix_cache.entries[e] for e in chain]
         seq = Sequence(
@@ -448,6 +527,8 @@ class ReferencePagedKVEngine:
         x = L.rmsnorm(self.params["final_norm"], x, cfg.norm_eps)
         logits = L.lm_logits(self.params["lm_head"], x)[0, 0]
         nxt = int(jnp.argmax(logits))
+        if self.faults is not None:
+            nxt = self.faults.garble_one(nxt)
         seq.tokens.append(nxt)
         return nxt
 

@@ -47,6 +47,21 @@ prefill → worse TTFT under load); large budgets prefill fast but make
 running sequences wait through bigger chunks.  Decode steps are never
 dropped — the budget throttles prefill only (the batched step computes
 every slot anyway, so skipping decodes would save nothing).
+
+Resilience (serving/faults.py): the scheduler is where every fault
+becomes a *deterministic outcome*.  Terminal states use the unified
+:class:`~repro.serving.faults.FinishReason` taxonomy.  Per-request
+TTFT/total **deadlines** (iteration-denominated, so outcomes are
+reproducible) expire requests in any state; a bounded queue
+(``max_queue``) and a :class:`~repro.core.camp.PressureLadder` provide
+overload admission control — ladder level 1 sheds prefix-cache inserts,
+level 2 halves the prefill token share, level 3 rejects new submissions
+outright.  A **corrupt** token (engine integrity check or the garbage
+range check below) never reaches a final answer: the request restarts
+from its *original* prompt with exponential backoff, up to
+``max_retries`` (then ``corrupted-retries-exhausted``).  A stall
+watchdog raises :class:`~repro.serving.faults.SchedulerStalledError`
+when no request progresses for ``stall_limit`` iterations.
 """
 
 from __future__ import annotations
@@ -55,6 +70,8 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 
+from repro.serving.faults import FinishReason, SchedulerStalledError
+
 
 @dataclass
 class Request:
@@ -62,6 +79,10 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     eos_id: int | None = None
+    # deadlines in scheduler iterations from submission (None = none);
+    # iteration-denominated so fault schedules stay reproducible
+    ttft_deadline: int | None = None
+    deadline: int | None = None
 
 
 @dataclass
@@ -77,12 +98,17 @@ class Track:
     first_token_t: float | None = None
     finished_iter: int | None = None
     finished_t: float | None = None
-    finish_reason: str | None = None      # eos | length | preempted
+    finish_reason: str | None = None      # a FinishReason value
     out_tokens: list[int] = field(default_factory=list)
     pf_pos: int = 0                       # prompt tokens prefilled so far
     pf_start: int = 0                     # prefix-cache hit boundary
     requeues: int = 0                     # preemption requeue count
     absorbed: int = 0                     # out tokens folded into the prompt
+    # integrity-recovery state: restarts recompute from orig_prompt (the
+    # requeue-absorb prompt may carry corrupted-influenced tokens)
+    orig_prompt: list[int] = field(default_factory=list)
+    corrupt_retries: int = 0              # restarts consumed so far
+    corrupt_hit: bool = False             # garbage token seen this iter
 
 
 class ContinuousScheduler:
@@ -94,18 +120,35 @@ class ContinuousScheduler:
     """
 
     def __init__(self, engine, *, token_budget: int = 64,
-                 requeue_preempted: bool = False, max_requeues: int = 3):
+                 requeue_preempted: bool = False, max_requeues: int = 3,
+                 max_queue: int | None = None, ladder=None,
+                 max_retries: int = 3, retry_backoff: int = 2,
+                 stall_limit: int = 1000,
+                 verify_finish: bool | None = None):
         assert token_budget >= 1, token_budget
         self.engine = engine
         self.token_budget = token_budget
         self.requeue_preempted = requeue_preempted
         self.max_requeues = max_requeues
+        # -- resilience knobs (serving/faults.py) --
+        self.max_queue = max_queue        # bounded-queue backpressure
+        self.ladder = ladder              # core.camp.PressureLadder | None
+        self.max_retries = max_retries    # integrity restarts per request
+        self.retry_backoff = retry_backoff  # base delay (iterations)
+        self.stall_limit = stall_limit    # watchdog threshold
+        # verify page checksums when a request finishes normally: default
+        # on exactly when faults are being injected (the no-fault serving
+        # path pays publish-side checksumming only)
+        self.verify_finish = (getattr(engine, "faults", None) is not None
+                              if verify_finish is None else verify_finish)
         self._batched = hasattr(engine, "mixed_step")
         self.waiting: deque[Request] = deque()
         self.tracks: dict[int, Track] = {}
         self._prefill: list[int] = []     # rids of the in-flight cohort
         self._cohort_pos = 0              # cohort grid offset (relative)
         self._running: list[int] = []     # rids decoding, admission order
+        self._delayed: list[tuple[int, int]] = []   # (ready_iter, rid)
+        self._last_progress = 0
         self.iteration = 0
         # stats are labeled by the engine's page codec so serving reports
         # and bench JSONs stay comparable across codecs
@@ -113,27 +156,56 @@ class ContinuousScheduler:
                       "mixed_iterations": 0, "prefill_tokens": 0,
                       "decode_tokens": 0, "chunk_splits": 0,
                       "requeues": 0, "prefix_cached_tokens": 0,
+                      "rejected": 0, "deadline_missed": 0,
+                      "corrupt_events": 0, "corrupt_retries": 0,
+                      "ladder_level": 0, "ladder_transitions": 0,
+                      "stalled": False,
                       "codec": getattr(getattr(engine, "codec", None),
                                        "name", "?")}
 
     # -- queue -----------------------------------------------------------------
 
     def submit(self, rid: int, prompt: list[int], *,
-               max_new_tokens: int = 32, eos_id: int | None = None) -> None:
-        """Enqueue a request (admission happens between iterations)."""
+               max_new_tokens: int = 32, eos_id: int | None = None,
+               ttft_deadline: int | None = None,
+               deadline: int | None = None) -> bool:
+        """Enqueue a request (admission happens between iterations).
+
+        Returns False — with the request *finished* as
+        ``FinishReason.REJECTED`` — when the bounded queue is full or the
+        degradation ladder is at its reject level (overload
+        backpressure); True when the request entered the queue.
+        """
         assert rid not in self.tracks, rid
         assert prompt, f"empty prompt for rid {rid}"
         assert max_new_tokens >= 1, max_new_tokens
-        self.waiting.append(Request(rid, list(prompt), max_new_tokens,
-                                    eos_id))
-        self.tracks[rid] = Track(req=self.waiting[-1], state="waiting",
-                                 submitted_iter=self.iteration,
-                                 submitted_t=time.time())
+        req = Request(rid, list(prompt), max_new_tokens, eos_id,
+                      ttft_deadline, deadline)
+        now = time.time()
+        tr = Track(req=req, state="waiting",
+                   submitted_iter=self.iteration, submitted_t=now,
+                   orig_prompt=list(prompt))
+        self.tracks[rid] = tr
+        over_queue = (self.max_queue is not None
+                      and len(self.waiting) >= self.max_queue)
+        shedding = self.ladder is not None \
+            and self.ladder.level >= self.ladder.n_levels
+        if over_queue or shedding:
+            tr.state = "finished"
+            tr.finish_reason = FinishReason.REJECTED
+            tr.finished_iter = self.iteration
+            tr.finished_t = now
+            self.stats["rejected"] += 1
+            return False
+        self.waiting.append(req)
+        return True
 
     @property
     def idle(self) -> bool:
-        """True when nothing is waiting, prefilling, or decoding."""
-        return not (self.waiting or self._prefill or self._running)
+        """True when nothing is waiting, prefilling, decoding, or in
+        retry backoff."""
+        return not (self.waiting or self._prefill or self._running
+                    or self._delayed)
 
     def finished(self) -> dict[int, Track]:
         return {rid: t for rid, t in self.tracks.items()
@@ -149,18 +221,32 @@ class ContinuousScheduler:
         ``retired`` [(rid, reason)], and ``idle``.
         """
         it = self.iteration
+        faults = getattr(self.engine, "faults", None)
+        if faults is not None:
+            faults.on_iteration(self.engine, it)
+        released = self._release_delayed(it)
+        expired = self._expire_deadlines(it)
+        if self.ladder is not None:
+            lvl = self.ladder.update(self.engine.pool_pressure())
+            # level 1: shed prefix-cache insertions (engine-side)
+            if hasattr(self.engine, "shed_cache_inserts"):
+                self.engine.shed_cache_inserts = lvl >= 1
+            self.stats["ladder_level"] = lvl
+            self.stats["ladder_transitions"] = self.ladder.transitions
         admitted = self._admit()
         decode_rids = list(self._running)
         n_pf = self._plan_prefill_tokens(len(decode_rids))
         if not decode_rids and n_pf == 0:
+            self._check_stall(it, bool(admitted or released or expired))
             self.iteration += 1
             self.stats["iterations"] += 1
             self.stats["idle_iterations"] += 1
             return {"iteration": it, "admitted": admitted, "decoded": {},
-                    "prefilled": 0, "completed_prefills": [], "retired": [],
-                    "idle": True}
+                    "prefilled": 0, "completed_prefills": [],
+                    "retired": expired, "idle": True}
 
         out, completed = self._dispatch(decode_rids, n_pf)
+        self._validate_tokens(out)
 
         now = time.time()
         for rid, tok in out.items():
@@ -184,20 +270,97 @@ class ContinuousScheduler:
         self._prefill = [r for r in self._prefill if r not in completed]
 
         retired = self._retire(out, now)
+        self._check_stall(it, True)       # a dispatch ran: progress
         self.iteration += 1
         self.stats["iterations"] += 1
         return {"iteration": it, "admitted": admitted, "decoded": out,
                 "prefilled": n_pf, "completed_prefills": completed,
-                "retired": retired, "idle": False}
+                "retired": expired + retired, "idle": False}
 
     def run(self, *, max_iterations: int = 100_000) -> dict[int, Track]:
-        """Drive iterations until every submitted request finishes."""
+        """Drive iterations until every submitted request finishes.
+
+        Raises :class:`SchedulerStalledError` (with ``stats["stalled"]``
+        set) instead of spinning silently — either from the per-iteration
+        watchdog or on hitting ``max_iterations`` undrained."""
         for _ in range(max_iterations):
             if self.idle:
                 break
             self.step()
-        assert self.idle, f"not drained after {max_iterations} iterations"
+        if not self.idle:
+            self.stats["stalled"] = True
+            raise SchedulerStalledError(
+                f"not drained after {max_iterations} iterations")
         return self.finished()
+
+    # -- resilience phases -----------------------------------------------------
+
+    def _release_delayed(self, it: int) -> list[int]:
+        """Move retry-backoff requests whose delay elapsed back to the
+        *front* of the waiting queue (they arrived earliest)."""
+        if not self._delayed:
+            return []
+        ready = sorted(e for e in self._delayed if e[0] <= it)
+        if not ready:
+            return []
+        self._delayed = [e for e in self._delayed if e[0] > it]
+        self.waiting.extendleft(self.tracks[rid].req
+                                for _, rid in reversed(ready))
+        return [rid for _, rid in ready]
+
+    def _expire_deadlines(self, it: int) -> list[tuple[int, str]]:
+        """Finish every request past its TTFT or total deadline, in any
+        state (waiting, backoff, prefill, running)."""
+        expired: list[tuple[int, str]] = []
+        for rid, tr in self.tracks.items():
+            if tr.state == "finished":
+                continue
+            r = tr.req
+            age = it - tr.submitted_iter
+            miss = (r.deadline is not None and age >= r.deadline) or \
+                (r.ttft_deadline is not None and tr.first_token_iter is None
+                 and age >= r.ttft_deadline)
+            if miss:
+                expired.append((rid, FinishReason.DEADLINE))
+        now = time.time()
+        for rid, reason in expired:
+            tr = self.tracks[rid]
+            if tr.state == "waiting":
+                if tr.req in self.waiting:
+                    self.waiting.remove(tr.req)
+                self._delayed = [e for e in self._delayed if e[1] != rid]
+            else:                         # mid-prefill or decoding
+                if rid in self.engine.seqs:
+                    self.engine.abort(rid)
+                self._detach(rid)
+            tr.state = "finished"
+            tr.finish_reason = reason
+            tr.finished_iter = it
+            tr.finished_t = now
+            self.stats["deadline_missed"] += 1
+        return expired
+
+    def _validate_tokens(self, out: dict[int, int]) -> None:
+        """Drop out-of-vocabulary decode results (the NaN-logit fault
+        model) the same iteration they appear — a garbage token must
+        never count as output or satisfy a finish condition."""
+        vocab = self.engine.cfg.vocab
+        for rid in [r for r, t in out.items() if not 0 <= t < vocab]:
+            self.tracks[rid].corrupt_hit = True
+            self.stats["corrupt_events"] += 1
+            del out[rid]
+
+    def _check_stall(self, it: int, progress: bool) -> None:
+        if progress:
+            self._last_progress = it
+        elif not self.idle \
+                and it - self._last_progress >= self.stall_limit:
+            self.stats["stalled"] = True
+            raise SchedulerStalledError(
+                f"no request progressed for {self.stall_limit} iterations "
+                f"(waiting {len(self.waiting)}, prefill "
+                f"{len(self._prefill)}, running {len(self._running)}, "
+                f"delayed {len(self._delayed)})")
 
     # -- phases ----------------------------------------------------------------
 
@@ -213,6 +376,9 @@ class ContinuousScheduler:
         """
         if self._prefill or not self.waiting:
             return []
+        if self.ladder is not None \
+                and self.ladder.level >= self.ladder.n_levels:
+            return []                     # overload: admissions paused
         free = (len(self.engine._free_slots) if self._batched
                 else self._ref_free_slots())
         cohort: list[Request] = []
@@ -267,6 +433,8 @@ class ContinuousScheduler:
         if not self._prefill:
             return 0
         budget = max(0, self.token_budget - n_decodes)
+        if budget and self.ladder is not None and self.ladder.level >= 2:
+            budget = max(1, budget // 2)  # degradation: shrink prefill share
         if budget == 0:
             return 0
         chunk = self.engine.prefill_chunk if self._batched else \
@@ -346,35 +514,59 @@ class ContinuousScheduler:
         """
         retired: list[tuple[int, str]] = []
         requeued: list[int] = []
+        restarted: list[int] = []
         for rid in list(self._running):
             tr = self.tracks[rid]
             seq = self.engine.seqs.get(rid)
             eos_hit = rid in decoded and tr.req.eos_id is not None \
                 and decoded[rid] == tr.req.eos_id
             len_hit = len(tr.out_tokens) >= tr.req.max_new_tokens
-            if seq is not None and seq.preempted:
+            # corruption first: a garbage token or a failed integrity
+            # check invalidates every other outcome this iteration
+            corrupt = tr.corrupt_hit \
+                or (seq is not None and getattr(seq, "corrupted", False))
+            if not corrupt and (eos_hit or len_hit) and self.verify_finish \
+                    and seq is not None and not seq.preempted:
+                # final trust boundary: checksum the pages that produced
+                # this answer before declaring it finished
+                corrupt = not self.engine.verify_seq(rid)
+                if corrupt:
+                    self.stats["corrupt_events"] += 1
+            if corrupt:
+                if tr.corrupt_retries < self.max_retries:
+                    restarted.append(rid)
+                else:
+                    retired.append((rid, FinishReason.CORRUPTED))
+            elif seq is not None and seq.preempted:
                 if eos_hit:                   # work already complete
-                    retired.append((rid, "eos"))
+                    retired.append((rid, FinishReason.EOS))
                 elif len_hit:
-                    retired.append((rid, "length"))
+                    retired.append((rid, FinishReason.LENGTH))
                 elif self.requeue_preempted \
                         and tr.requeues < self.max_requeues:
                     requeued.append(rid)
                 else:
-                    retired.append((rid, "preempted"))
+                    retired.append((rid, FinishReason.PREEMPTED))
             elif eos_hit:
-                retired.append((rid, "eos"))
+                retired.append((rid, FinishReason.EOS))
             elif len_hit:
-                retired.append((rid, "length"))
+                retired.append((rid, FinishReason.LENGTH))
         for rid in list(self._prefill):
             seq = self.engine.seqs.get(rid)
-            if seq is not None and seq.preempted:
-                tr = self.tracks[rid]
+            if seq is None:
+                continue
+            tr = self.tracks[rid]
+            if getattr(seq, "corrupted", False):
+                if tr.corrupt_retries < self.max_retries:
+                    restarted.append(rid)
+                else:
+                    retired.append((rid, FinishReason.CORRUPTED))
+            elif seq.preempted:
                 if self.requeue_preempted \
                         and tr.requeues < self.max_requeues:
                     requeued.append(rid)
                 else:
-                    retired.append((rid, "preempted"))
+                    retired.append((rid, FinishReason.PREEMPTED))
         for rid, reason in retired:
             tr = self.tracks[rid]
             tr.state = "finished"
@@ -395,7 +587,33 @@ class ContinuousScheduler:
             self.stats["requeues"] += 1
         self.waiting.extendleft(self.tracks[rid].req
                                 for rid in reversed(requeued))
+        for rid in restarted:
+            self._restart(rid)
         return retired
+
+    def _restart(self, rid: int) -> None:
+        """Integrity recovery: recompute from the *original* prompt.
+
+        Unlike the requeue-absorb path, nothing decoded so far can be
+        trusted (a corrupted page may have influenced any token), so the
+        request drops all output and re-enters the queue after an
+        exponential backoff delay."""
+        tr = self.tracks[rid]
+        tr.corrupt_retries += 1
+        self.stats["corrupt_retries"] += 1
+        if rid in self.engine.seqs:
+            self.engine.abort(rid)
+        self._detach(rid)
+        tr.corrupt_hit = False
+        tr.req.prompt = list(tr.orig_prompt)
+        tr.out_tokens = []
+        tr.absorbed = 0
+        tr.pf_pos = tr.pf_start = 0
+        tr.first_token_iter = None
+        tr.first_token_t = None
+        tr.state = "waiting"
+        delay = self.retry_backoff * (2 ** (tr.corrupt_retries - 1))
+        self._delayed.append((self.iteration + delay, rid))
 
     def _detach(self, rid: int) -> None:
         if rid in self._running:

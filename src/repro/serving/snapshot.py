@@ -1,0 +1,260 @@
+"""Engine snapshot/restore through the compressed checkpoint store.
+
+Serializes the *entire* serving state of a :class:`PagedKVEngine` — the
+compressed page pools, decode tails, in-flight prefill-cohort scratch,
+page tables / free list / CAMP byte accounting, per-page integrity
+checksums, the prefix-cache trie (entries, refcounts, SIP policy
+state), and optionally the :class:`ContinuousScheduler`'s queue and
+per-request lifecycle records — so a killed engine can restore
+mid-stream and finish its in-flight requests **token-identically**
+(tests/test_resilience.py pins this).
+
+The storage layer is ``checkpoint/store.py``, which already provides
+the fault-tolerance contract (atomic publish via ``os.replace``,
+SHA-256 per tensor file, BDI-compressed byte streams with an EC-style
+gate).  Array state goes through ``store.save`` as one flat
+``{name: array}`` dict — pool leaves are named ``pool_000..`` in
+``jax.tree.flatten`` order, which is deterministic for a fixed codec —
+and all host bookkeeping rides the manifest's ``extra`` JSON.  Restore
+uses ``store.load_flat`` (no template tree needed) and rebuilds a fresh
+engine/scheduler around the loaded state.
+
+Why the batched engine only: the reference oracle is a test fixture —
+it re-derives from the same prompts, so it never needs to survive a
+kill.  The snapshot does not persist a fault injector; a restored
+engine runs clean unless the caller hands in a new one.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.serving.engine import PagedKVEngine, Sequence, _Cohort
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import ContinuousScheduler, Request, Track
+
+
+def _seq_meta(s: Sequence) -> dict:
+    return {"sid": s.sid, "slot": s.slot, "tokens": list(s.tokens),
+            "pages": [list(lp) for lp in s.pages], "tail_len": s.tail_len,
+            "done": s.done, "preempted": s.preempted,
+            "corrupted": s.corrupted, "prefilling": s.prefilling,
+            "chain": list(s.chain)}
+
+
+def _track_meta(rid: int, tr: Track) -> dict:
+    r = tr.req
+    return {"rid": rid,
+            "req": {"prompt": list(r.prompt),
+                    "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
+                    "ttft_deadline": r.ttft_deadline,
+                    "deadline": r.deadline},
+            "state": tr.state, "submitted_iter": tr.submitted_iter,
+            "submitted_t": tr.submitted_t,
+            "admitted_iter": tr.admitted_iter,
+            "prefill_done_iter": tr.prefill_done_iter,
+            "first_token_iter": tr.first_token_iter,
+            "first_token_t": tr.first_token_t,
+            "finished_iter": tr.finished_iter, "finished_t": tr.finished_t,
+            "finish_reason": (None if tr.finish_reason is None
+                              else str(tr.finish_reason)),
+            "out_tokens": list(tr.out_tokens), "pf_pos": tr.pf_pos,
+            "pf_start": tr.pf_start, "requeues": tr.requeues,
+            "absorbed": tr.absorbed, "orig_prompt": list(tr.orig_prompt),
+            "corrupt_retries": tr.corrupt_retries,
+            "corrupt_hit": tr.corrupt_hit}
+
+
+def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
+                  scheduler: ContinuousScheduler | None = None, *,
+                  step: int = 0, compress: bool = True) -> dict:
+    """Snapshot engine (+ optional scheduler) state; returns the manifest.
+
+    Callable between scheduler iterations / engine dispatches (the only
+    points where host bookkeeping is consistent).  Device arrays are
+    pulled once; the save itself is the checkpoint store's atomic path.
+    """
+    assert hasattr(engine, "mixed_step"), \
+        "snapshots cover the batched PagedKVEngine only"
+    arrays: dict[str, np.ndarray] = {}
+    for i, leaf in enumerate(jax.tree.leaves(engine.pools)):
+        arrays[f"pool_{i:03d}"] = leaf
+    arrays["tail_k"] = engine.tail_k
+    arrays["tail_v"] = engine.tail_v
+    arrays["page_bytes"] = engine.page_bytes
+    arrays["page_checksum"] = engine.page_checksum
+
+    co = engine._cohort
+    co_meta = None
+    if co is not None:
+        arrays["co_toks"] = co.toks
+        arrays["co_kscr"] = co.kscr
+        arrays["co_vscr"] = co.vscr
+        arrays["co_kcan"] = co.kcan
+        arrays["co_vcan"] = co.vcan
+        co_meta = {"sids": [s.sid for s in co.seqs],
+                   "row": {str(k): v for k, v in co.row.items()},
+                   "starts": list(co.starts), "maxrel": co.maxrel,
+                   "roff": co.roff, "pub": list(co.pub or []),
+                   "done_sids": sorted(co.done_sids or ())}
+
+    cache = engine.prefix_cache
+    meta = {
+        "kind": "serving-engine-snapshot",
+        "engine": {
+            "page": engine.page, "n_pool_pages": engine.n_pool_pages,
+            "max_batch": engine.max_batch,
+            "prefill_chunk": engine.prefill_chunk,
+            "codec": engine.codec.name, "use_fused": engine.use_fused,
+            "integrity": engine.integrity,
+            "shed_cache_inserts": engine.shed_cache_inserts,
+            "free": list(engine.free),
+            "free_slots": list(engine._free_slots),
+            "pmax": engine._pmax, "stats": dict(engine.stats),
+            "request_bytes": {str(k): list(v)
+                              for k, v in engine.request_bytes.items()},
+            "seqs": [_seq_meta(s) for s in engine.seqs.values()],
+        },
+        "cohort": co_meta,
+        "cache": None if cache is None else cache.state(),
+        "cache_line": None if cache is None else cache.policy.line,
+        "scheduler": None,
+    }
+    if scheduler is not None:
+        assert scheduler.engine is engine
+        meta["scheduler"] = {
+            "token_budget": scheduler.token_budget,
+            "requeue_preempted": scheduler.requeue_preempted,
+            "max_requeues": scheduler.max_requeues,
+            "max_queue": scheduler.max_queue,
+            "max_retries": scheduler.max_retries,
+            "retry_backoff": scheduler.retry_backoff,
+            "stall_limit": scheduler.stall_limit,
+            "verify_finish": scheduler.verify_finish,
+            "iteration": scheduler.iteration,
+            "cohort_pos": scheduler._cohort_pos,
+            "last_progress": scheduler._last_progress,
+            "stats": dict(scheduler.stats),
+            "waiting": [r.rid for r in scheduler.waiting],
+            "delayed": [list(e) for e in scheduler._delayed],
+            "prefill": list(scheduler._prefill),
+            "running": list(scheduler._running),
+            "tracks": [_track_meta(rid, tr)
+                       for rid, tr in scheduler.tracks.items()],
+        }
+    return store.save(ckpt_dir, step, arrays, extra=meta,
+                      compress=compress)
+
+
+def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
+                     faults=None, ladder=None
+                     ) -> tuple[PagedKVEngine, ContinuousScheduler | None]:
+    """Rebuild the engine (and scheduler, if one was snapshotted).
+
+    ``cfg``/``params`` are the model — weights are not part of the
+    snapshot (they live in the training checkpoint).  The restored
+    engine finishes its in-flight requests token-identically: pools,
+    tails, cohort scratch, and all bookkeeping return bit-for-bit, and
+    the canonical-prefix contract makes decode a pure function of that
+    state.  ``faults``/``ladder`` re-arm fault injection / overload
+    control on the restored instance (both default off).
+    """
+    arrays, manifest = store.load_flat(ckpt_dir, step=step)
+    meta = manifest["extra"]
+    assert meta.get("kind") == "serving-engine-snapshot", \
+        f"not an engine snapshot: {ckpt_dir}"
+    em = meta["engine"]
+
+    cache = None
+    if meta["cache"] is not None:
+        cache = PrefixCache(cfg.n_layers, em["page"], meta["cache_line"])
+        cache.load_state(meta["cache"])
+
+    eng = PagedKVEngine(
+        cfg, params, page_size=em["page"],
+        n_pool_pages=em["n_pool_pages"], max_batch=em["max_batch"],
+        use_fused=em["use_fused"], prefill_chunk=em["prefill_chunk"],
+        prefix_cache=cache, codec=em["codec"], faults=faults,
+        integrity=em["integrity"])
+
+    leaves, tdef = jax.tree_util.tree_flatten(eng.pools)
+    eng.pools = jax.tree_util.tree_unflatten(
+        tdef, [jnp.asarray(arrays[f"pool_{i:03d}"])
+               for i in range(len(leaves))])
+    eng.tail_k = jnp.asarray(arrays["tail_k"])
+    eng.tail_v = jnp.asarray(arrays["tail_v"])
+    eng.page_bytes = arrays["page_bytes"].copy()
+    eng.page_checksum = arrays["page_checksum"].copy()
+    eng.free = list(em["free"])
+    eng._free_slots = list(em["free_slots"])
+    eng._pmax = em["pmax"]
+    eng._pt_dirty = True
+    eng.stats.update(em["stats"])
+    eng.shed_cache_inserts = em["shed_cache_inserts"]
+    eng.request_bytes = {int(k): list(v)
+                         for k, v in em["request_bytes"].items()}
+    for d in em["seqs"]:
+        eng.seqs[d["sid"]] = Sequence(
+            sid=d["sid"], slot=d["slot"], tokens=list(d["tokens"]),
+            pages=[list(lp) for lp in d["pages"]],
+            tail_len=d["tail_len"], done=d["done"],
+            preempted=d["preempted"], corrupted=d["corrupted"],
+            prefilling=d["prefilling"], chain=list(d["chain"]))
+
+    cm = meta["cohort"]
+    if cm is not None:
+        eng._cohort = _Cohort(
+            seqs=[eng.seqs[sid] for sid in cm["sids"]],
+            row={int(k): v for k, v in cm["row"].items()},
+            toks=arrays["co_toks"].copy(),
+            kscr=jnp.asarray(arrays["co_kscr"]),
+            vscr=jnp.asarray(arrays["co_vscr"]),
+            kcan=jnp.asarray(arrays["co_kcan"]),
+            vcan=jnp.asarray(arrays["co_vcan"]),
+            starts=list(cm["starts"]), maxrel=cm["maxrel"],
+            roff=cm["roff"], pub=list(cm["pub"]),
+            done_sids=set(cm["done_sids"]))
+
+    sm = meta["scheduler"]
+    if sm is None:
+        return eng, None
+    sched = ContinuousScheduler(
+        eng, token_budget=sm["token_budget"],
+        requeue_preempted=sm["requeue_preempted"],
+        max_requeues=sm["max_requeues"], max_queue=sm["max_queue"],
+        ladder=ladder, max_retries=sm["max_retries"],
+        retry_backoff=sm["retry_backoff"], stall_limit=sm["stall_limit"],
+        verify_finish=sm["verify_finish"])
+    for d in sm["tracks"]:
+        rm = d["req"]
+        req = Request(d["rid"], list(rm["prompt"]), rm["max_new_tokens"],
+                      rm["eos_id"], rm["ttft_deadline"], rm["deadline"])
+        sched.tracks[d["rid"]] = Track(
+            req=req, state=d["state"],
+            submitted_iter=d["submitted_iter"],
+            submitted_t=d["submitted_t"],
+            admitted_iter=d["admitted_iter"],
+            prefill_done_iter=d["prefill_done_iter"],
+            first_token_iter=d["first_token_iter"],
+            first_token_t=d["first_token_t"],
+            finished_iter=d["finished_iter"], finished_t=d["finished_t"],
+            finish_reason=d["finish_reason"],
+            out_tokens=list(d["out_tokens"]), pf_pos=d["pf_pos"],
+            pf_start=d["pf_start"], requeues=d["requeues"],
+            absorbed=d["absorbed"], orig_prompt=list(d["orig_prompt"]),
+            corrupt_retries=d["corrupt_retries"],
+            corrupt_hit=d["corrupt_hit"])
+    sched.waiting = deque(sched.tracks[rid].req for rid in sm["waiting"])
+    sched._delayed = [(a, b) for a, b in sm["delayed"]]
+    sched._prefill = list(sm["prefill"])
+    sched._running = list(sm["running"])
+    sched.iteration = sm["iteration"]
+    sched._cohort_pos = sm["cohort_pos"]
+    sched._last_progress = sm["last_progress"]
+    sched.stats.update(sm["stats"])
+    return eng, sched

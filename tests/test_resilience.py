@@ -1,0 +1,542 @@
+"""Resilience suite: fault injection, integrity recovery, admission
+control, watchdog, and snapshot/restore (serving/faults.py et al.).
+
+The recovery invariant pinned here: under any injected fault schedule
+(page corruption, garbage decode logits, pool-allocation failure,
+bursts), every request either finishes **token-identical** to a clean
+run of the same engine — which the equivalence suite already pins to
+the reference oracle — or with a deterministic terminal
+``finish_reason``; and at drain, ``debug_validate()`` certifies zero
+page/refcount/slot leaks.  Token identity across restarts is exactly
+the canonical-prefix contract: published pages are pure functions of
+the token prefix, so recompute-from-prompt regenerates the same bits.
+
+Runs under every ``REPRO_CODEC`` (bdi | zero | raw — the CI chaos-smoke
+matrix) and exercises both engines.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.camp import PressureLadder
+from repro.models.api import get_model
+from repro.serving import faults as F
+from repro.serving.engine import PagedKVEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.reference import ReferencePagedKVEngine
+from repro.serving.scheduler import (ContinuousScheduler,
+                                     make_reference_scheduler)
+from repro.serving.snapshot import restore_snapshot, save_snapshot
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, *, batched=True, cache=False, faults=None,
+            n_pool_pages=96, max_batch=4, **kw):
+    pc = PrefixCache.for_model(cfg, PAGE) if cache else None
+    if batched:
+        return PagedKVEngine(cfg, params, page_size=PAGE,
+                             n_pool_pages=n_pool_pages,
+                             max_batch=max_batch, prefix_cache=pc,
+                             faults=faults, **kw)
+    return ReferencePagedKVEngine(cfg, params, page_size=PAGE,
+                                  n_pool_pages=n_pool_pages,
+                                  prefix_cache=pc, faults=faults, **kw)
+
+
+def _sched(eng, **kw):
+    if hasattr(eng, "mixed_step"):
+        return ContinuousScheduler(eng, token_budget=24, **kw)
+    return make_reference_scheduler(eng, token_budget=24, max_batch=4,
+                                    prefill_chunk=2 * PAGE, **kw)
+
+
+PROMPTS = {
+    0: [5, 9, 2, 7, 11, 3, 8, 1, 6, 4, 13, 2],
+    1: [1 + (j * 3) % 50 for j in range(21)],
+    2: [4, 4, 8, 1, 9, 7],
+}
+
+
+def _drained(eng):
+    """At drain, every allocated page is either prefix-cache-retained or
+    pinned by an injected hold — nothing privately leaked."""
+    eng.debug_validate()
+    cache = eng.prefix_cache
+    retained = cache.retained_pages() if cache is not None else 0
+    held = len(eng.faults.held_pages) if eng.faults is not None else 0
+    assert eng.pool_used_pages() == retained + held
+
+
+def _run(sched, *, gen=10, **submit_kw):
+    for rid, p in PROMPTS.items():
+        sched.submit(rid, p, max_new_tokens=gen, **submit_kw)
+    fin = sched.run()
+    _drained(sched.engine)
+    return fin
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + ladder units
+# ---------------------------------------------------------------------------
+
+def test_finish_reason_is_str_compatible():
+    assert F.FinishReason.EOS == "eos"
+    assert str(F.FinishReason.CORRUPTED) == "corrupted-retries-exhausted"
+    assert F.FinishReason("deadline") is F.FinishReason.DEADLINE
+    reasons = {str(r) for r in F.FinishReason}
+    assert reasons == {"eos", "length", "preempted", "rejected",
+                       "deadline", "corrupted-retries-exhausted"}
+
+
+def test_pressure_ladder_hysteresis():
+    l = PressureLadder()
+    assert l.update(0.5) == 0
+    assert l.update(0.72) == 1
+    assert l.update(0.97) == 3          # stepwise climb in one update
+    # inside the hysteresis band: no flapping
+    assert l.update(0.90) == 3
+    assert l.update(0.86) == 3
+    t = l.transitions
+    assert l.update(0.84) == 2          # below exit(3)=0.85
+    assert l.update(0.2) == 0
+    assert l.transitions == t + 3
+    with pytest.raises(AssertionError):
+        PressureLadder(enter=(0.5, 0.4, 0.9))      # not monotonic
+    with pytest.raises(AssertionError):
+        PressureLadder(enter=(0.5,), exit=(0.6,))  # exit >= enter
+
+
+def test_injector_determinism(small_model):
+    cfg, params = small_model
+    spec = F.FaultSpec(corrupt_page_every=3, garble_decode_every=4)
+    logs = []
+    for _ in range(2):
+        inj = F.FaultInjector(spec, seed=11)
+        eng = _engine(cfg, params, faults=inj)
+        fin = _run(_sched(eng), gen=10)
+        assert all(t.finish_reason for t in fin.values())
+        logs.append(list(inj.log))
+    assert logs[0] == logs[1] and logs[0], "fault schedule not reproducible"
+
+
+# ---------------------------------------------------------------------------
+# page integrity: checksums, corruption recovery
+# ---------------------------------------------------------------------------
+
+def test_checksum_detects_single_bit_flip(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    eng.add_requests({0: PROMPTS[1]})
+    pairs = [(li, pid) for li in range(cfg.n_layers)
+             for pid in eng.seqs[0].pages[li]]
+    assert pairs and F.verify_pages(eng, pairs).all()
+    inj = F.FaultInjector(seed=0)
+    li, pid = pairs[-1]
+    inj.corrupt_page(eng, li, pid)
+    ok = F.verify_pages(eng, pairs)
+    assert not ok.all() and ok.sum() == len(pairs) - 1
+    assert not eng.verify_seq(0) and eng.seqs[0].corrupted
+
+
+@pytest.mark.parametrize("batched", [True, False])
+def test_corruption_restart_token_identical(small_model, batched):
+    """One corrupted published page: the finish-time verify catches it,
+    the request restarts from its original prompt, and the final tokens
+    equal the clean run's (canonical-prefix recompute)."""
+    cfg, params = small_model
+    clean = _run(_sched(_engine(cfg, params, batched=batched)), gen=10)
+
+    inj = F.FaultInjector(F.FaultSpec(corrupt_page_every=4, corrupt_max=1),
+                          seed=3)
+    eng = _engine(cfg, params, batched=batched, faults=inj)
+    sched = _sched(eng)
+    fin = _run(sched, gen=10)
+    assert inj.stats["corruptions"] == 1
+    assert sched.stats["corrupt_retries"] >= 1
+    for rid in PROMPTS:
+        assert fin[rid].out_tokens == clean[rid].out_tokens, rid
+        assert fin[rid].finish_reason == clean[rid].finish_reason
+
+
+def test_corruption_retries_exhausted_terminal(small_model):
+    """Every page corrupts on publish: retries burn out and the request
+    ends with the deterministic terminal reason — never garbage output."""
+    cfg, params = small_model
+    inj = F.FaultInjector(F.FaultSpec(corrupt_page_every=1), seed=0)
+    eng = _engine(cfg, params, faults=inj)
+    sched = _sched(eng, max_retries=2, retry_backoff=1)
+    sched.submit(0, PROMPTS[1], max_new_tokens=6)
+    fin = sched.run()
+    assert fin[0].finish_reason is F.FinishReason.CORRUPTED
+    assert fin[0].finish_reason == "corrupted-retries-exhausted"
+    assert sched.stats["corrupt_retries"] == 2
+    eng.debug_validate()
+    assert eng.pool_used_pages() == 0
+
+
+@pytest.mark.parametrize("batched", [True, False])
+def test_warm_hit_corruption_recomputes(small_model, batched):
+    """A corrupted prefix-cache page is caught at admission: the chain
+    truncates at the bad entry (quarantined, then purged), and the warm
+    request recomputes — token-identical to a cold run."""
+    cfg, params = small_model
+    prompt = PROMPTS[1]
+
+    def one(eng, rid):
+        s = _sched(eng)
+        s.submit(rid, prompt, max_new_tokens=8)
+        fin = s.run()
+        return fin[rid]
+
+    cold = one(_engine(cfg, params, batched=batched), 0)
+
+    eng = _engine(cfg, params, batched=batched, cache=True,
+                  faults=F.FaultInjector(seed=0))
+    one(eng, 0)                                    # populate the cache
+    cache = eng.prefix_cache
+    eid = min(cache.entries)                       # first prompt block
+    eng.faults.corrupt_page(eng, 0, cache.entries[eid].pages[0])
+    warm = one(eng, 1)                             # warm hit, bad page
+    assert warm.out_tokens == cold.out_tokens
+    assert warm.pf_start == 0                      # chain truncated at root
+    assert cache.stats["quarantined"] == 1
+    assert eng.stats["integrity_failures"] >= 1
+    # the recompute *healed* the quarantined entry in place: its pages
+    # are the fresh republish and verify again
+    assert cache.stats["healed"] == 1
+    assert cache._n_corrupt == 0
+    ent = cache.entries[eid]
+    assert not ent.corrupt
+    assert F.verify_pages(
+        eng, list(enumerate(ent.pages))).all()
+    eng.debug_validate()
+
+
+@pytest.mark.parametrize("batched", [True, False])
+def test_garbage_decode_token_recovered(small_model, batched):
+    """A NaN-logit (garbage argmax) fault is caught by the scheduler's
+    range check the same iteration; the request restarts and finishes
+    token-identical to a clean run."""
+    cfg, params = small_model
+    clean = _run(_sched(_engine(cfg, params, batched=batched)), gen=10)
+    inj = F.FaultInjector(F.FaultSpec(garble_decode_every=6, garble_max=2),
+                          seed=5)
+    eng = _engine(cfg, params, batched=batched, faults=inj)
+    sched = _sched(eng)
+    fin = _run(sched, gen=10)
+    assert inj.stats["garbled"] == 2
+    assert sched.stats["corrupt_events"] >= 1
+    for rid in PROMPTS:
+        assert fin[rid].out_tokens == clean[rid].out_tokens, rid
+        assert F.GARBAGE_TOKEN not in fin[rid].out_tokens
+
+
+def test_preemption_victim_verified_before_absorb(small_model):
+    """A corrupted page on a CAMP-preemption victim must not let the
+    requeue path absorb corrupted-influenced tokens: the victim is
+    verified at preemption and restarts from its original prompt."""
+    cfg, params = small_model
+    inj = F.FaultInjector(F.FaultSpec(corrupt_page_every=2, corrupt_max=1),
+                          seed=1)
+    eng = _engine(cfg, params, faults=inj, n_pool_pages=17)
+    sched = _sched(eng, requeue_preempted=True)
+    sched.submit(0, [2 + (j * 7) % 40 for j in range(25)],
+                 max_new_tokens=24)
+    sched.submit(1, [3 + (j * 5) % 40 for j in range(41)],
+                 max_new_tokens=4)
+    fin = sched.run()
+    eng.debug_validate()
+    assert eng.pool_used_pages() == 0
+    clean_eng = _engine(cfg, params, n_pool_pages=17)
+    clean_sched = _sched(clean_eng, requeue_preempted=True)
+    clean_sched.submit(0, [2 + (j * 7) % 40 for j in range(25)],
+                       max_new_tokens=24)
+    clean_sched.submit(1, [3 + (j * 5) % 40 for j in range(41)],
+                       max_new_tokens=4)
+    clean = clean_sched.run()
+    for rid in (0, 1):
+        assert fin[rid].out_tokens == clean[rid].out_tokens, rid
+
+
+# ---------------------------------------------------------------------------
+# deadlines, bounded queue, overload ladder, watchdog
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_expires_waiting_request(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params, max_batch=1)
+    sched = _sched(eng)
+    sched.submit(0, PROMPTS[1], max_new_tokens=20)   # hogs the one slot
+    sched.submit(1, PROMPTS[0], max_new_tokens=4, ttft_deadline=3)
+    fin = sched.run()
+    assert fin[1].finish_reason is F.FinishReason.DEADLINE
+    assert fin[1].first_token_iter is None
+    assert fin[1].out_tokens == []
+    assert fin[0].finish_reason == "length"          # bystander unharmed
+    assert sched.stats["deadline_missed"] == 1
+    eng.debug_validate()
+
+
+def test_total_deadline_truncates_running_request(small_model):
+    cfg, params = small_model
+    clean_eng = _engine(cfg, params)
+    cs = _sched(clean_eng)
+    cs.submit(0, PROMPTS[0], max_new_tokens=30)
+    clean = cs.run()[0].out_tokens
+
+    eng = _engine(cfg, params)
+    sched = _sched(eng)
+    sched.submit(0, PROMPTS[0], max_new_tokens=30, deadline=8)
+    fin = sched.run()
+    tr = fin[0]
+    assert tr.finish_reason is F.FinishReason.DEADLINE
+    assert tr.finished_iter - tr.submitted_iter == 8
+    assert 0 < len(tr.out_tokens) < 30
+    # the partial output is a clean prefix — deadline kills, not corrupts
+    assert tr.out_tokens == clean[:len(tr.out_tokens)]
+    eng.debug_validate()
+    assert eng.pool_used_pages() == 0
+
+
+def test_bounded_queue_rejects_with_backpressure(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    sched = _sched(eng, max_queue=2)
+    assert sched.submit(0, PROMPTS[0], max_new_tokens=3)
+    assert sched.submit(1, PROMPTS[1], max_new_tokens=3)
+    assert not sched.submit(2, PROMPTS[2], max_new_tokens=3)
+    assert sched.tracks[2].finish_reason is F.FinishReason.REJECTED
+    assert sched.stats["rejected"] == 1
+    fin = sched.run()
+    assert fin[0].finish_reason == fin[1].finish_reason == "length"
+    assert fin[2].finish_reason == "rejected"        # str-compat
+    eng.debug_validate()
+
+
+def test_overload_ladder_degrades_and_recovers(small_model):
+    """Injected pool holds drive the ladder up (shed inserts, reject
+    admissions at the top) and hysteresis brings it back down when the
+    pressure releases — no flapping, deterministic reject."""
+    cfg, params = small_model
+    # 44 allocatable pages, 31 held from iteration 0: prefill runs at
+    # pressure 0.70 (level 1 — prompt inserts shed), and request 0's
+    # page growth (12 pages peak: 6 blocks x 2 layers) walks free down
+    # to 1 (pressure 0.98, level 3) without ever exhausting the pool
+    inj = F.FaultInjector(F.FaultSpec(holds=((0, 31, 50),)), seed=0)
+    eng = _engine(cfg, params, cache=True, faults=inj, n_pool_pages=45)
+    sched = _sched(eng, ladder=PressureLadder(), verify_finish=False)
+    sched.submit(0, PROMPTS[1], max_new_tokens=30)
+    rejected_at = None
+    for _ in range(200):
+        if sched.idle and not inj.held_pages:
+            break
+        sched.step()
+        if rejected_at is None and sched.stats["ladder_level"] \
+                >= sched.ladder.n_levels:
+            assert not sched.submit(9, PROMPTS[2], max_new_tokens=3)
+            rejected_at = sched.iteration
+    assert rejected_at is not None, "ladder never reached reject level"
+    assert sched.stats["rejected"] == 1
+    assert eng.stats["shed_inserts"] > 0             # level-1 degradation
+    assert sched.stats["ladder_level"] == 0          # recovered
+    assert sched.stats["ladder_transitions"] >= 2
+    # fully operational again: a new request admits and completes
+    assert sched.submit(10, PROMPTS[2], max_new_tokens=3)
+    fin = sched.run()
+    assert fin[10].finish_reason == "length"
+    assert fin[0].finish_reason == "length"
+    eng.debug_validate()
+
+
+def test_stall_watchdog_raises(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    sched = _sched(eng, stall_limit=12)
+
+    class StuckLadder:                  # admission blocked forever
+        level, transitions, n_levels = 3, 0, 3
+
+        def update(self, pressure):
+            return self.level
+
+    sched.submit(0, PROMPTS[0], max_new_tokens=3)
+    sched.ladder = StuckLadder()
+    with pytest.raises(F.SchedulerStalledError):
+        sched.run()
+    assert sched.stats["stalled"] is True
+
+
+def test_requeue_limit_uses_finish_reason_enum(small_model):
+    """PR-4 fallback: past max_requeues a preempted request retires with
+    the enum's PREEMPTED member (str-compatible with the old literal)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, n_pool_pages=10)
+    sched = _sched(eng, requeue_preempted=True, max_requeues=1)
+    sched.submit(0, [3, 1, 4], max_new_tokens=4)
+    sched.submit(1, [1 + (j * 11) % 60 for j in range(72)],
+                 max_new_tokens=5)
+    fin = sched.run()
+    assert fin[1].finish_reason is F.FinishReason.PREEMPTED
+    assert fin[1].finish_reason == "preempted"
+    assert fin[1].requeues == 1
+    assert fin[0].finish_reason == "length"
+    eng.debug_validate()
+
+
+def test_arrival_burst_hook(small_model):
+    """FaultSpec bursts drive the workload: a 6-request spike into a
+    2-slot engine with a bounded queue — admitted FCFS, overflow
+    rejected, everything drains leak-free."""
+    cfg, params = small_model
+    inj = F.FaultInjector(F.FaultSpec(bursts={2: 6}), seed=0)
+    eng = _engine(cfg, params, max_batch=2, faults=inj)
+    sched = _sched(eng, max_queue=3)
+    outcomes = {}
+    nxt = 0
+    for _ in range(300):
+        for _ in range(inj.burst(sched.iteration)):
+            outcomes[nxt] = sched.submit(
+                nxt, [1 + (nxt * 7 + j) % 50 for j in range(6)],
+                max_new_tokens=3)
+            nxt += 1
+        if nxt and sched.idle:
+            break
+        sched.step()
+    assert nxt == 6 and sched.idle
+    fin = sched.finished()
+    n_rej = sum(1 for t in fin.values()
+                if t.finish_reason == "rejected")
+    assert n_rej == sum(1 for ok in outcomes.values() if not ok)
+    assert n_rej >= 1                                # queue bound bit
+    assert all(t.finish_reason == "length" for t in fin.values()
+               if t.finish_reason != "rejected")
+    eng.debug_validate()
+
+
+# ---------------------------------------------------------------------------
+# invariant checker
+# ---------------------------------------------------------------------------
+
+def test_debug_validate_catches_manufactured_leak(small_model):
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    eng.add_requests({0: PROMPTS[0]})
+    eng.debug_validate()                             # live state: clean
+    leaked = eng.free.pop()                          # drop a page on the floor
+    with pytest.raises(AssertionError, match="page leak"):
+        eng.debug_validate()
+    eng.free.append(leaked)
+    eng.seqs[0].pages[0].append(eng.seqs[0].pages[0][-1])
+    with pytest.raises(AssertionError):              # double-mapped page
+        eng.debug_validate()
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_midstream_token_identical(small_model, tmp_path):
+    """Kill mid-stream (in-flight decodes + a waiting request), restore,
+    finish: tokens and reasons identical; zero leaks on the restored
+    engine."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, cache=True, max_batch=2)
+    sched = _sched(eng)
+    for rid, p in PROMPTS.items():
+        sched.submit(rid, p, max_new_tokens=8)
+    while not sched._running:
+        sched.step()
+    for _ in range(2):
+        sched.step()                   # a few tokens into decode
+    save_snapshot(str(tmp_path), eng, sched, step=sched.iteration)
+
+    fin1 = sched.run()                 # original finishes normally
+    eng2, sched2 = restore_snapshot(str(tmp_path), cfg, params)
+    assert sched2 is not None
+    fin2 = sched2.run()
+    assert set(fin2) == set(fin1)
+    for rid in fin1:
+        assert fin2[rid].out_tokens == fin1[rid].out_tokens, rid
+        assert str(fin2[rid].finish_reason) == str(fin1[rid].finish_reason)
+    _drained(eng2)
+
+
+def test_snapshot_restore_with_cohort_in_flight(small_model, tmp_path):
+    """Snapshot while a chunked-prefill cohort is mid-grid: the scratch
+    and cohort bookkeeping round-trip and prefill completes identically."""
+    cfg, params = small_model
+    eng = _engine(cfg, params)
+    sched = _sched(eng)
+    sched.submit(0, PROMPTS[1], max_new_tokens=6)
+    sched.submit(1, [9 + (j * 5) % 40 for j in range(30)],
+                 max_new_tokens=6)
+    while not sched._prefill:
+        sched.step()
+    sched.step()                       # advance the grid partway
+    assert eng._cohort is not None
+    save_snapshot(str(tmp_path), eng, sched, step=0)
+    fin1 = sched.run()
+    eng2, sched2 = restore_snapshot(str(tmp_path), cfg, params)
+    assert eng2._cohort is not None    # restored mid-prefill
+    fin2 = sched2.run()
+    for rid in fin1:
+        assert fin2[rid].out_tokens == fin1[rid].out_tokens, rid
+    eng2.debug_validate()
+
+
+def test_snapshot_restores_warm_prefix_cache(small_model, tmp_path):
+    """The restored prefix cache still serves warm hits: a post-restore
+    request with a cached prefix skips those prompt tokens (warm TTFT <=
+    cold; the bench gates the timing side)."""
+    cfg, params = small_model
+    prompt = PROMPTS[1]
+    eng = _engine(cfg, params, cache=True)
+    sched = _sched(eng)
+    sched.submit(0, prompt, max_new_tokens=6)
+    sched.run()
+    save_snapshot(str(tmp_path), eng, sched, step=0)
+
+    eng2, sched2 = restore_snapshot(str(tmp_path), cfg, params)
+    assert eng2.prefix_cache.entries    # trie survived
+    sched2.submit(7, list(prompt), max_new_tokens=6)
+    fin = sched2.run()
+    hit = (len(prompt) - 1) // PAGE * PAGE
+    assert fin[7].pf_start == hit       # full page-aligned warm hit
+    assert fin[7].out_tokens == sched.finished()[0].out_tokens
+    eng2.debug_validate()
+
+
+def test_chaos_composite_all_faults(small_model):
+    """Everything at once — corruption, garbage logits, pool holds — on
+    both engines: every request ends token-identical to the clean run or
+    with a deterministic terminal reason, and nothing leaks."""
+    cfg, params = small_model
+    spec = F.FaultSpec(corrupt_page_every=5, corrupt_max=2,
+                       garble_decode_every=7, garble_max=2,
+                       holds=((3, 8, 10),))
+    for batched in (True, False):
+        clean = _run(_sched(_engine(cfg, params, batched=batched,
+                                    cache=True, n_pool_pages=48)), gen=8)
+        inj = F.FaultInjector(spec, seed=13)
+        eng = _engine(cfg, params, batched=batched, cache=True,
+                      faults=inj, n_pool_pages=48)
+        sched = _sched(eng, requeue_preempted=True)
+        fin = _run(sched, gen=8)
+        for rid in PROMPTS:
+            tr = fin[rid]
+            assert tr.finish_reason in set(F.FinishReason), rid
+            if tr.finish_reason in ("eos", "length"):
+                assert tr.out_tokens == clean[rid].out_tokens, \
+                    (batched, rid)
+            assert F.GARBAGE_TOKEN not in tr.out_tokens

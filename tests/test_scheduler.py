@@ -58,6 +58,7 @@ def _drive(sched, arrivals, *, max_iters=300, on_step=None):
         if on_step:
             on_step(sched, events[-1])
     assert sched.idle and not pending, "workload did not drain"
+    sched.engine.debug_validate()      # zero page/refcount/slot leaks
     return events
 
 
