@@ -13,8 +13,11 @@ static-batch baseline at the same arrival rate) must stay >=
 structural gates: the warm run's ``ttft_s_p95`` must not exceed the
 cold run's (``warm_ttft_p95 <= cold_ttft_p95`` — the cache must never
 make TTFT worse), and the warm run's token-weighted ``prefix_hit_rate``
-must stay >= ``--min-hit-rate``.  Exit 1 with a per-metric report
-otherwise.
+must stay >= ``--min-hit-rate``.  The mixed-content codec rows carry
+two adaptive-selection gates, also structural (every codec row shares
+the same arrival gap): ``adaptive_ratio >= max(single_codec_ratio)``
+and ``adaptive_goodput >= 0.97 * best_single_goodput``.  Exit 1 with a
+per-metric report otherwise.
 This is what keeps wins like the 21x batched decode (PR #1), the
 chunked-prefill speedup (PR #2), and the continuous-batching goodput win
 (PR #3) from silently rotting.
@@ -55,6 +58,7 @@ def check(current: dict, baseline: dict, max_drop: float,
     cur, base = _gated_rows(current), _gated_rows(baseline)
     failures = []
     failures += _check_prefix_rows(current, min_hit_rate)
+    failures += _check_mixed_rows(current)
     failures += _check_fault_counters(current)
     for key, brow in sorted(base.items()):
         engine, batch = key
@@ -125,6 +129,45 @@ def _check_prefix_rows(current: dict, min_hit_rate: float) -> list[str]:
     return failures
 
 
+# adaptive per-page codec selection must dominate the single codecs on
+# the mixed-content workload: its compression ratio picks the per-page
+# winner (so it can only lose the one tag byte per page), and at the
+# bench's fixed arrival rate its extra candidate work must keep up with
+# the offered load.  Both gates are structural — runner-speed
+# independent — because every codec row shares the same arrival gap.
+_MIXED_CODECS = ("bdi", "zero", "raw", "gbdi", "fpc", "adaptive")
+_MIXED_GOODPUT_FRAC = 0.97
+
+
+def _check_mixed_rows(current: dict) -> list[str]:
+    rows = {r["codec"]: r for r in current["rows"]
+            if r.get("engine") == "mixed_codec"}
+    missing = [c for c in _MIXED_CODECS if c not in rows]
+    if missing:
+        return [f"mixed_codec rows missing for codecs: {missing}"]
+    singles = [rows[c] for c in _MIXED_CODECS if c != "adaptive"]
+    ad = rows["adaptive"]
+    failures = []
+    best_ratio = max(singles, key=lambda r: r["kv_compression_ratio"])
+    if ad["kv_compression_ratio"] < best_ratio["kv_compression_ratio"]:
+        failures.append(
+            f"mixed adaptive kv_compression_ratio "
+            f"{ad['kv_compression_ratio']:.3f} < best single "
+            f"{best_ratio['kv_compression_ratio']:.3f} "
+            f"({best_ratio['codec']}) — per-page selection is not "
+            "picking the winning codec")
+    best_good = max(singles, key=lambda r: r["goodput_tok_s"])
+    floor = _MIXED_GOODPUT_FRAC * best_good["goodput_tok_s"]
+    if ad["goodput_tok_s"] < floor:
+        failures.append(
+            f"mixed adaptive goodput_tok_s {ad['goodput_tok_s']:.1f} < "
+            f"{_MIXED_GOODPUT_FRAC:.2f} * best single "
+            f"{best_good['goodput_tok_s']:.1f} ({best_good['codec']}) — "
+            "adaptive candidate compression is not keeping up with the "
+            "offered load")
+    return failures
+
+
 # a no-fault smoke must finish every request normally: any nonzero
 # counter means the scheduler rejected, expired, retried, or requeued
 # work without fault injection — a resilience-path leak into the happy
@@ -132,7 +175,7 @@ def _check_prefix_rows(current: dict, min_hit_rate: float) -> list[str]:
 _FAULT_COUNTERS = ("rejected", "deadline_missed", "corrupt_retries",
                    "requeues")
 _COUNTED_ENGINES = ("scheduler", "prefix_cold", "prefix_warm",
-                    "prefix_restored")
+                    "prefix_restored", "mixed_codec")
 
 
 def _check_fault_counters(current: dict) -> list[str]:
@@ -237,6 +280,14 @@ def main() -> int:
                   f"{row['restored_vs_cold_ttft_p95']:.2f} (>= 1.00), "
                   f"prefix_hit_rate={row['prefix_hit_rate']:.3f} "
                   f"(>= {args.min_hit_rate:.3f})")
+        elif row.get("engine") == "mixed_summary":
+            print(f"  ok mixed adaptive: ratio={row['adaptive_ratio']:.3f}"
+                  f" (>= best single {row['best_single_ratio']:.3f} "
+                  f"[{row['best_single_ratio_codec']}]), goodput="
+                  f"{row['adaptive_goodput_tok_s']:.1f} (>= "
+                  f"{_MIXED_GOODPUT_FRAC:.2f}x best single "
+                  f"{row['best_single_goodput_tok_s']:.1f} "
+                  f"[{row['best_single_goodput_codec']}])")
     print("  ok fault counters: rejected/deadline_missed/corrupt_retries/"
           "requeues all zero on scheduler + prefix rows")
     return 0

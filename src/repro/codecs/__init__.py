@@ -7,24 +7,36 @@ benchmarks consume this protocol and never name a codec directly.
 
 Registered instances (importing this package registers all built-ins):
 
-  * ``bdi``  — single-base B+Delta int8 rows with Pallas fused kernels
-    (the thesis codec; the default);
-  * ``zero`` — zero/repeated-value fast path with exact exception
+  * ``bdi``      — single-base B+Delta int8 rows with Pallas fused
+    kernels (the thesis codec; the default);
+  * ``zero``     — zero/repeated-value fast path with exact exception
     payloads (LCP's zero-page case; lossless);
-  * ``raw``  — verbatim pages, compressed size == raw size (LCP's
-    exception story; lossless).
+  * ``raw``      — verbatim pages, compressed size == raw size (LCP's
+    exception story; lossless);
+  * ``gbdi``     — multi-base B+Delta (GBDI, arxiv 2501.14812): K bases
+    per page by value clustering, per-row base id + delta width, with a
+    Pallas compress/decompress pair;
+  * ``fpc``      — frequent-pattern coding over fp32 words with exact
+    exception payloads (lossless);
+  * ``adaptive`` — per-page selection over all of the above: publish
+    compresses a candidate set, keeps the smallest by device-reported
+    ``page_nbytes``, and stores a Touché-style one-byte tag.
 
-``REPRO_CODEC=bdi|zero|raw`` picks the process-wide default; see
-README.md here for how to add a codec.
+``REPRO_CODEC=bdi|zero|raw|gbdi|fpc|adaptive`` picks the process-wide
+default; see README.md here for how to add a codec.
 """
 
+from .adaptive import ADAPTIVE, AdaptiveCodec
 from .base import (PageCodec, available, default_name, get, register,
                    resolve)
 from .bdi import BDI, BDICodec
+from .fpc import FPC, FPCCodec
+from .gbdi import GBDI, GBDICodec
 from .raw import RAW, RawCodec
 from .zero import ZERO, ZeroRepCodec
 
 __all__ = [
     "PageCodec", "available", "default_name", "get", "register", "resolve",
-    "BDI", "BDICodec", "RAW", "RawCodec", "ZERO", "ZeroRepCodec",
+    "ADAPTIVE", "AdaptiveCodec", "BDI", "BDICodec", "FPC", "FPCCodec",
+    "GBDI", "GBDICodec", "RAW", "RawCodec", "ZERO", "ZeroRepCodec",
 ]

@@ -41,6 +41,7 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 
 class PageCodec:
@@ -61,6 +62,19 @@ class PageCodec:
     #: codec ships Pallas kernels (fused paged attention + page-fill
     #: compression); engines only route ``use_fused`` to codecs that do.
     has_fused_kernels: bool = False
+    #: codec ships a fused page-fill compressor but no fused attention
+    #: (e.g. gbdi, adaptive): engines route ``use_fused`` to the publish
+    #: path only and keep the gather-dequant attention fallback.
+    has_fused_fill: bool = False
+    #: ``page_nbytes`` depends only on coarse value structure (quantized
+    #: delta widths, zero masks, constants), so it is invariant to
+    #: sub-ULP noise in the raw KV input.  Codecs whose sizes read exact
+    #: bit patterns (fpc's bf16-exactness classes, and adaptive, which
+    #: folds fpc's size into its min) set this False: decode-tail KV is
+    #: token-pinned but not bit-pinned across the batched engine and the
+    #: op-by-op oracle, so their byte accounting may legitimately differ
+    #: by a few bytes per decode-published page.
+    ulp_stable_sizes: bool = True
 
     # -- required ------------------------------------------------------------
 
@@ -99,6 +113,17 @@ class PageCodec:
         inherit the engines' gather-dequant fallback instead."""
         raise NotImplementedError(f"codec {self.name!r} has no fused "
                                   "attention kernel")
+
+    def page_tags(self, pages) -> jax.Array:
+        """Per-page codec-id tags, i32 [n] (Touché-style small tag).
+
+        Single-algorithm codecs are tag 0 everywhere (the default);
+        the ``adaptive`` composite overrides this with the per-page
+        winning member id, which the engines mirror into the host-side
+        ``page_codec_id`` table and the prefix cache's per-entry
+        ``codec_ids``."""
+        n = jax.tree.leaves(pages)[0].shape[0]
+        return jnp.zeros((n,), jnp.int32)
 
     def canonical_roundtrip(self, k: jax.Array, v: jax.Array
                             ) -> tuple[jax.Array, jax.Array]:
@@ -149,7 +174,16 @@ def resolve(spec: str | PageCodec | None = None) -> PageCodec:
     """``None`` -> the ``REPRO_CODEC``/bdi default; a name -> registry
     lookup; an instance -> itself."""
     if spec is None:
-        return get(default_name())
+        name = default_name()
+        try:
+            return get(name)
+        except KeyError:
+            # surface the *env var* in the error: a bad REPRO_CODEC used
+            # to bubble up as a bare KeyError from deep inside engine
+            # construction, with no hint where the name came from
+            raise KeyError(
+                f"REPRO_CODEC={name!r} names an unknown page codec; "
+                f"registered codecs: {', '.join(available())}") from None
     if isinstance(spec, str):
         return get(spec)
     assert isinstance(spec, PageCodec), spec

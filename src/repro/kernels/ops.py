@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import bdi_value as bv
 
-from . import ref
+from . import gbdi_codec, ref
 from ._backend import default_interpret, resolve_interpret  # noqa: F401
 from .bdi_compress import bdi_compress as _compress_kernel
 from .bdi_compress import bdi_compress_kv as _compress_kv_kernel
@@ -87,6 +87,53 @@ def compress_kv_pages(k: jax.Array, v: jax.Array, *,
     kd, kb, ks = enc(k)
     vd, vb, vs = enc(v)
     return ref.CompressedKVPages(kd, kb, ks, vd, vb, vs)
+
+
+def gbdi_compress_kv_pages(k: jax.Array, v: jax.Array, *,
+                           interpret: bool | None = None
+                           ) -> gbdi_codec.GBDIKVPages:
+    """Batched KV page-fill through the Pallas GBDI (multi-base) codec.
+
+    k, v: f32 [P, KVH, page, D] -> multi-base compressed pages, bit-exact
+    with the ``gbdi_codec.encode_pages_ref`` oracle (the codec's
+    reference ``compress_kv_pages`` path).  One kernel grid step per
+    page; no row padding needed because blocks are page-granular.
+    """
+    p, kvh, page, d = k.shape
+    rows_per_page = kvh * page
+
+    def enc(x):
+        rows = x.astype(jnp.float32).reshape(-1, d)
+        dd, bs, bid, sc, wid = gbdi_codec.gbdi_compress(
+            rows, rows_per_page=rows_per_page, interpret=interpret)
+        return (dd.reshape(p, kvh, page, d), bs,
+                bid[:, 0].reshape(p, kvh, page),
+                sc[:, 0].reshape(p, kvh, page),
+                wid[:, 0].reshape(p, kvh, page))
+
+    kd, kbs, kbid, ksc, kwid = enc(k)
+    vd, vbs, vbid, vsc, vwid = enc(v)
+    return gbdi_codec.GBDIKVPages(kd, kbs, kbid, ksc, kwid,
+                                  vd, vbs, vbid, vsc, vwid)
+
+
+def gbdi_decompress_kv_pages(pages: gbdi_codec.GBDIKVPages, *,
+                             interpret: bool | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Decompress GBDI pages [P, ...] back to f32 K/V [P, KVH, page, D]
+    through the Pallas decompressor (pairs gbdi_compress_kv_pages)."""
+    p, kvh, page, d = pages.kd.shape
+    rows_per_page = kvh * page
+
+    def dec(dd, bs, bid, sc):
+        out = gbdi_codec.gbdi_decompress(
+            dd.reshape(-1, d), bs, bid.reshape(-1, 1), sc.reshape(-1, 1),
+            rows_per_page=rows_per_page, interpret=interpret)
+        return out.reshape(p, kvh, page, d)
+
+    k = dec(pages.kd, pages.kbs, pages.kbid, pages.ksc)
+    v = dec(pages.vd, pages.vbs, pages.vbid, pages.vsc)
+    return k, v
 
 
 def paged_attention(q: jax.Array, pages: ref.CompressedKVPages,

@@ -244,8 +244,8 @@ def main() -> None:
                     help="CAMP-preempted requests re-enter the queue "
                          "with recompute-from-prompt instead of retiring")
     ap.add_argument("--codec", default=None,
-                    help="KV page codec (bdi | zero | raw; default: "
-                         "REPRO_CODEC env or bdi)")
+                    help="KV page codec (bdi | zero | raw | gbdi | fpc "
+                         "| adaptive; default: REPRO_CODEC env or bdi)")
     ap.add_argument("--ttft-deadline", type=int, default=None,
                     help="per-request TTFT deadline in scheduler "
                          "iterations (scheduler mode)")

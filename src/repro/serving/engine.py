@@ -491,15 +491,21 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
     ``use_fused`` routes compression through the codec's fused kernel
     path (BDI: the Pallas row codec, bit-exact with the jnp oracle)
     where it compiles natively.
+
+    Also returns the per-page codec-id tags [n] (``codec.page_tags``):
+    zeros for single-algorithm codecs, the winning member id for the
+    adaptive composite.  Computed inside this dispatch so the tag rides
+    the same host sync as bytes and checksums.
     """
     compress = (codec.compress_kv_pages_fused if use_fused
                 else codec.compress_kv_pages)
     pg = compress(k_blocks, v_blocks)
     nbytes = codec.page_nbytes(pg)
     csums = F.page_checksums(pg)
+    tags = codec.page_tags(pg)
     pools = jax.tree.map(
         lambda pool, new: pool.at[layer_idx, pids].set(new), pools, pg)
-    return pools, nbytes, csums
+    return pools, nbytes, csums, tags
 
 
 # ---------------------------------------------------------------------------
@@ -545,10 +551,14 @@ class PagedKVEngine:
         assert self.prefill_chunk % page_size == 0, \
             (self.prefill_chunk, page_size)
         # fused kernels where the codec brings them and Pallas compiles
-        # natively; the generic jnp path elsewhere
-        self.use_fused = ((not default_interpret()
-                           if use_fused is None else use_fused)
-                          and self.codec.has_fused_kernels)
+        # natively; the generic jnp path elsewhere.  Attention and
+        # page-fill gate separately: a codec may ship a fused fill
+        # (gbdi, adaptive) without a fused attention kernel.
+        want_fused = (not default_interpret()
+                      if use_fused is None else use_fused)
+        self.use_fused = want_fused and self.codec.has_fused_kernels
+        self.use_fused_fill = want_fused and (
+            self.codec.has_fused_kernels or self.codec.has_fused_fill)
         lyr, k, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         self.pools = self.codec.init_pools(lyr, n_pool_pages, k,
                                            page_size, dh)
@@ -561,6 +571,10 @@ class PagedKVEngine:
         # publish-time integrity checksums (serving/faults.py); consulted
         # only for currently-mapped pages, so stale slots are harmless
         self.page_checksum = np.zeros(n_pool_pages, np.uint32)
+        # per-page codec-id tags (Touché-style page-table metadata):
+        # always 0 for single-algorithm codecs, the winning member id
+        # under the adaptive composite
+        self.page_codec_id = np.zeros(n_pool_pages, np.int32)
         self.integrity = integrity
         self.faults = faults
         # degradation-ladder level 1 (scheduler-driven): drop speculative
@@ -673,11 +687,13 @@ class PagedKVEngine:
         self.stats["preemptions"] += 1
 
     def _record_publish(self, seq: Sequence, pids: list[int],
-                        nbytes: np.ndarray, csums: np.ndarray) -> None:
+                        nbytes: np.ndarray, csums: np.ndarray,
+                        tags: np.ndarray) -> None:
         """Attach freshly published pages (one per layer) to a sequence."""
         for li, pid in enumerate(pids):
             self.page_bytes[pid] = int(nbytes[li])
             self.page_checksum[pid] = csums[li]
+            self.page_codec_id[pid] = int(tags[li])
             seq.pages[li].append(pid)
         self.stats["pages_compressed"] += len(pids)
         self.stats["bytes_raw"] += self.page_raw_bytes() * len(pids)
@@ -1000,17 +1016,20 @@ class PagedKVEngine:
         m = len(seqs)
         pids = self._reserve_pages(lyr * m)
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
-        self.pools, nbytes, csums = _publish_blocks(
+        self.pools, nbytes, csums, tags = _publish_blocks(
             self.pools, k_blocks, v_blocks, layer_idx,
             jnp.asarray(pids, jnp.int32), codec=self.codec,
-            use_fused=self.use_fused)
-        nbytes, csums = jax.device_get((nbytes, csums))  # 1 sync per publish
+            use_fused=self.use_fused_fill)
+        # 1 sync per publish
+        nbytes, csums, tags = jax.device_get((nbytes, csums, tags))
         nbytes, csums = np.asarray(nbytes), np.asarray(csums)
+        tags = np.asarray(tags)
         for j, seq in enumerate(seqs):
             if seq.preempted:      # victim of our own reservation
                 self.free.extend(pids[j::m])
                 continue
-            self._record_publish(seq, pids[j::m], nbytes[j::m], csums[j::m])
+            self._record_publish(seq, pids[j::m], nbytes[j::m], csums[j::m],
+                                 tags[j::m])
             if blocks is not None and self.prefix_cache is not None:
                 self._register_prompt_page(seq, blocks[j], pids[j::m],
                                            int(nbytes[j::m].sum()))
@@ -1038,7 +1057,9 @@ class PagedKVEngine:
         assert blk == len(seq.chain), (blk, len(seq.chain))
         parent = seq.chain[-1] if seq.chain else 0
         toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
-        eid, created = cache.insert(parent, toks, pids, nbytes)
+        eid, created = cache.insert(
+            parent, toks, pids, nbytes,
+            codec_ids=[int(self.page_codec_id[p]) for p in pids])
         self.free.extend(cache.drain_displaced())   # healed-over pages
         if eid is None:            # pinned corrupt twin: block stays private
             self.stats["shed_inserts"] += 1

@@ -243,6 +243,10 @@ class Entry:
     toks: tuple[int, ...]        # this page's token ids (trie edge label)
     pages: list[int] = field(default_factory=list)   # [L] pool ids
     nbytes: int = 0              # device-reported compressed bytes, all layers
+                                 # (post-selection under the adaptive codec,
+                                 # so SIP size bins rank on real footprint)
+    codec_ids: list[int] = field(default_factory=list)  # [L] per-page codec
+                                 # tags (0 for single-algorithm codecs)
     refcount: int = 0            # live sequences mapping this entry
     children: int = 0            # resident child entries (evict leaf-first)
     hits: int = 0                # chain-hit reuse counter (SIP/CAMP feed)
@@ -364,11 +368,14 @@ class PrefixCache:
     # -- publish -------------------------------------------------------------
 
     def insert(self, parent: int, toks: tuple[int, ...], pages: list[int],
-               nbytes: int) -> tuple[int | None, bool]:
+               nbytes: int, codec_ids: list[int] | None = None
+               ) -> tuple[int | None, bool]:
         """Register a freshly published prompt page.
 
         ``pages`` are the pool ids (one per layer) the publisher just
-        wrote; ``nbytes`` the device-reported compressed byte total.
+        wrote; ``nbytes`` the device-reported compressed byte total;
+        ``codec_ids`` the per-layer codec tags the publisher recorded
+        (``None`` -> all zeros, the single-algorithm case).
         Returns ``(eid, created)`` — ``created=False`` means an identical
         page is already resident (same parent chain, same token ids): the
         caller should free its duplicate pool pages and map the existing
@@ -387,6 +394,9 @@ class PrefixCache:
         private.
         """
         assert len(toks) == self.page and len(pages) == self.n_layers
+        if codec_ids is None:
+            codec_ids = [0] * self.n_layers
+        assert len(codec_ids) == self.n_layers
         eid = self._child.get((parent, toks))
         if eid is not None:
             e = self.entries[eid]
@@ -396,6 +406,7 @@ class PrefixCache:
                 self._displaced.extend(e.pages)
                 e.pages = list(pages)
                 e.nbytes = int(nbytes)
+                e.codec_ids = list(codec_ids)
                 e.corrupt = False
                 self._n_corrupt -= 1
                 self.stats["healed"] += 1
@@ -406,7 +417,7 @@ class PrefixCache:
         e = Entry(eid=self._next_eid, parent=parent,
                   depth=(self.entries[parent].depth + 1 if parent else 0),
                   toks=toks, pages=list(pages), nbytes=int(nbytes),
-                  born=self._clock)
+                  codec_ids=list(codec_ids), born=self._clock)
         self._next_eid += 1
         self.entries[e.eid] = e
         self._child[(parent, toks)] = e.eid
@@ -478,6 +489,7 @@ class PrefixCache:
             "entries": [{"eid": e.eid, "parent": e.parent,
                          "depth": e.depth, "toks": list(e.toks),
                          "pages": list(e.pages), "nbytes": e.nbytes,
+                         "codec_ids": list(e.codec_ids),
                          "refcount": e.refcount, "children": e.children,
                          "hits": e.hits, "born": e.born,
                          "corrupt": e.corrupt}
@@ -502,9 +514,11 @@ class PrefixCache:
         for d in st["entries"]:
             e = Entry(eid=d["eid"], parent=d["parent"], depth=d["depth"],
                       toks=tuple(d["toks"]), pages=list(d["pages"]),
-                      nbytes=d["nbytes"], refcount=d["refcount"],
-                      children=d["children"], hits=d["hits"],
-                      born=d["born"], corrupt=d["corrupt"])
+                      nbytes=d["nbytes"],
+                      codec_ids=list(d.get("codec_ids",
+                                           [0] * self.n_layers)),
+                      refcount=d["refcount"], children=d["children"],
+                      hits=d["hits"], born=d["born"], corrupt=d["corrupt"])
             self.entries[e.eid] = e
             self._child[(e.parent, e.toks)] = e.eid
             self._n_corrupt += int(e.corrupt)

@@ -131,6 +131,8 @@ class ReferencePagedKVEngine:
         # publish-time integrity checksums (faults.page_checksums),
         # verified at the same trust boundaries as the batched engine
         self.page_checksum = np.zeros(n_pool_pages, np.uint32)
+        # per-page codec-id tags, mirroring the batched engine
+        self.page_codec_id = np.zeros(n_pool_pages, np.int32)
         self.integrity = integrity
         self.faults = faults
         # degradation-ladder level >= 1 (scheduler-driven): stop inserting
@@ -245,12 +247,16 @@ class ReferencePagedKVEngine:
                              jax.tree.leaves(pg)):
             pool[li, pid] = np.asarray(new[0])
         # same byte-accounting function as the batched engine's device
-        # path, so CAMP values and stats match bit-for-bit
+        # path, so CAMP values and stats match bit-for-bit on prompt
+        # pages (shared prefill dispatch) — decode-tail pages are only
+        # token-pinned across engines, so codecs whose sizes read exact
+        # bits (ulp_stable_sizes=False) may differ by a few bytes there
         nbytes = int(np.asarray(self.codec.page_nbytes(pg))[0])
         self.page_bytes[pid] = nbytes
         # publish-time checksum: same jitted function the batched engine
         # runs inside its publish dispatch, on the same compressed bits
         self.page_checksum[pid] = np.asarray(F._checksum_jit(pg))[0]
+        self.page_codec_id[pid] = int(np.asarray(self.codec.page_tags(pg))[0])
         seq.pages[li].append(pid)
         self.stats["pages_compressed"] += 1
         self.stats["bytes_raw"] += self.page_raw_bytes()
@@ -281,7 +287,9 @@ class ReferencePagedKVEngine:
         toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
         pids = [seq.pages[li][blk] for li in range(lyr)]
         nbytes = sum(int(self.page_bytes[p]) for p in pids)
-        eid, created = cache.insert(parent, toks, pids, nbytes)
+        eid, created = cache.insert(
+            parent, toks, pids, nbytes,
+            codec_ids=[int(self.page_codec_id[p]) for p in pids])
         self.free.extend(cache.drain_displaced())   # healed-over pages
         if eid is None:            # pinned corrupt twin: block stays private
             self.stats["shed_inserts"] += 1

@@ -88,6 +88,7 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
     arrays["tail_v"] = engine.tail_v
     arrays["page_bytes"] = engine.page_bytes
     arrays["page_checksum"] = engine.page_checksum
+    arrays["page_codec_id"] = engine.page_codec_id
 
     co = engine._cohort
     co_meta = None
@@ -190,6 +191,7 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
     eng.tail_v = jnp.asarray(arrays["tail_v"])
     eng.page_bytes = arrays["page_bytes"].copy()
     eng.page_checksum = arrays["page_checksum"].copy()
+    eng.page_codec_id = arrays["page_codec_id"].copy()
     eng.free = list(em["free"])
     eng._free_slots = list(em["free_slots"])
     eng._pmax = em["pmax"]

@@ -11,8 +11,8 @@ page/refcount/slot leaks.  Token identity across restarts is exactly
 the canonical-prefix contract: published pages are pure functions of
 the token prefix, so recompute-from-prompt regenerates the same bits.
 
-Runs under every ``REPRO_CODEC`` (bdi | zero | raw — the CI chaos-smoke
-matrix) and exercises both engines.
+Runs under every ``REPRO_CODEC`` (bdi | zero | raw | gbdi | fpc |
+adaptive — the CI chaos-smoke matrix) and exercises both engines.
 """
 
 import jax
