@@ -16,8 +16,16 @@ make TTFT worse), and the warm run's token-weighted ``prefix_hit_rate``
 must stay >= ``--min-hit-rate``.  The mixed-content codec rows carry
 two adaptive-selection gates, also structural (every codec row shares
 the same arrival gap): ``adaptive_ratio >= max(single_codec_ratio)``
-and ``adaptive_goodput >= 0.97 * best_single_goodput``.  Exit 1 with a
-per-metric report otherwise.
+and ``adaptive_goodput >= 0.97 * best_single_goodput``.  The
+``telemetry_overhead`` row gates the observability layer itself:
+``traced_vs_untraced_goodput >= 0.97`` — full request tracing must stay
+within 3% of the disabled-tracer fast path on the serving hot path.
+Exit 1 with a per-metric report otherwise.
+
+Both the current results and the baseline are schema-stamped
+(``schema_version``, written by ``bench_serve.save_json`` /
+:func:`update_baseline`); a mismatch fails immediately with a
+regenerate hint instead of a KeyError deep in a row comparison.
 This is what keeps wins like the 21x batched decode (PR #1), the
 chunked-prefill speedup (PR #2), and the continuous-batching goodput win
 (PR #3) from silently rotting.
@@ -40,6 +48,13 @@ import json
 import os
 import sys
 
+try:
+    from benchmarks.bench_serve import SCHEMA_VERSION
+except ImportError:     # run as a plain script, not -m benchmarks....
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.bench_serve import SCHEMA_VERSION
+
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
                         "serve_ci.json")
 # throughput floors gated per engine kind (values scaled by the derate)
@@ -52,13 +67,31 @@ def _gated_rows(payload: dict) -> dict[tuple[str, int], dict]:
             if r.get("engine") in METRICS}
 
 
+def _check_schema(payload: dict, what: str) -> list[str]:
+    """Schema-version gate: refuse mismatched payloads up front with a
+    regenerate hint rather than KeyError-ing deep in a row comparison."""
+    sv = payload.get("schema_version")
+    if sv == SCHEMA_VERSION:
+        return []
+    fix = ("re-run benchmarks.bench_serve" if what == "current results"
+           else "re-run check_serve_regression --update from a fresh "
+                "bench JSON")
+    return [f"{what} schema_version {sv!r} != expected {SCHEMA_VERSION} "
+            f"— {fix} so the row schema matches this checker"]
+
+
 def check(current: dict, baseline: dict, max_drop: float,
           min_goodput_ratio: float, min_hit_rate: float) -> list[str]:
     """Return a list of failure messages (empty == pass)."""
+    schema_failures = (_check_schema(current, "current results")
+                       + _check_schema(baseline, "baseline"))
+    if schema_failures:
+        return schema_failures
     cur, base = _gated_rows(current), _gated_rows(baseline)
     failures = []
     failures += _check_prefix_rows(current, min_hit_rate)
     failures += _check_mixed_rows(current)
+    failures += _check_telemetry_rows(current)
     failures += _check_fault_counters(current)
     for key, brow in sorted(base.items()):
         engine, batch = key
@@ -168,6 +201,30 @@ def _check_mixed_rows(current: dict) -> list[str]:
     return failures
 
 
+# tracing must be nearly free on the serving hot path: the traced arm
+# of the telemetry-overhead bench (full span tracer + iteration
+# timeline) must hold >= this fraction of the untraced (disabled
+# fast path) goodput at the same arrival rate
+_TRACE_OVERHEAD_FRAC = 0.97
+
+
+def _check_telemetry_rows(current: dict) -> list[str]:
+    rows = [r for r in current["rows"]
+            if r.get("engine") == "telemetry_overhead"]
+    if not rows:
+        return ["telemetry_overhead row missing from current results"]
+    failures = []
+    for r in rows:
+        ratio = r.get("traced_vs_untraced_goodput", 0.0)
+        if ratio < _TRACE_OVERHEAD_FRAC:
+            failures.append(
+                f"telemetry_overhead batch {r['batch']} "
+                f"traced_vs_untraced_goodput: {ratio:.3f} < "
+                f"{_TRACE_OVERHEAD_FRAC:.2f} — request tracing is "
+                "slowing the serving hot path")
+    return failures
+
+
 # a no-fault smoke must finish every request normally: any nonzero
 # counter means the scheduler rejected, expired, retried, or requeued
 # work without fault injection — a resilience-path leak into the happy
@@ -175,7 +232,8 @@ def _check_mixed_rows(current: dict) -> list[str]:
 _FAULT_COUNTERS = ("rejected", "deadline_missed", "corrupt_retries",
                    "requeues")
 _COUNTED_ENGINES = ("scheduler", "prefix_cold", "prefix_warm",
-                    "prefix_restored", "mixed_codec")
+                    "prefix_restored", "mixed_codec",
+                    "telemetry_overhead")
 
 
 def _check_fault_counters(current: dict) -> list[str]:
@@ -204,6 +262,7 @@ def update_baseline(current: dict, path: str, derate: float) -> None:
             row[metric] = round(r[metric] * derate, 1)
         rows.append(row)
     payload = {
+        "schema_version": SCHEMA_VERSION,
         "note": ("Derated serving-throughput floors for the CI bench-smoke "
                  "gate; values are measured tok/s scaled by the derate "
                  "factor to absorb dev-vs-CI runner speed variance (the "
@@ -280,6 +339,12 @@ def main() -> int:
                   f"{row['restored_vs_cold_ttft_p95']:.2f} (>= 1.00), "
                   f"prefix_hit_rate={row['prefix_hit_rate']:.3f} "
                   f"(>= {args.min_hit_rate:.3f})")
+        elif row.get("engine") == "telemetry_overhead":
+            print(f"  ok telemetry batch {row['batch']}: "
+                  f"traced_vs_untraced_goodput="
+                  f"{row['traced_vs_untraced_goodput']:.3f} "
+                  f"(>= {_TRACE_OVERHEAD_FRAC:.2f}), "
+                  f"trace_events={row['trace_events']}")
         elif row.get("engine") == "mixed_summary":
             print(f"  ok mixed adaptive: ratio={row['adaptive_ratio']:.3f}"
                   f" (>= best single {row['best_single_ratio']:.3f} "

@@ -44,6 +44,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -66,7 +67,12 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              deadline: int | None = None,
              max_queue: int | None = None, overload: bool = False,
              chaos: int | None = None,
-             snapshot_dir: str | None = None) -> dict:
+             snapshot_dir: str | None = None,
+             trace_out: str | None = None,
+             metrics: bool = False,
+             metrics_port: int | None = None,
+             metrics_out: str | None = None,
+             metrics_jsonl: str | None = None) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -82,6 +88,11 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         from repro.serving.engine import PagedKVEngine
         from repro.serving.prefix_cache import PrefixCache
         from repro.serving.scheduler import ContinuousScheduler
+        from repro.serving.telemetry import (Telemetry,
+                                             start_metrics_server)
+        # one shared Telemetry: engine + scheduler write one registry,
+        # one monotonic clock, one (optional) tracer
+        tel = Telemetry(trace=trace_out is not None)
         cache = (PrefixCache.for_model(cfg, 8) if prefix_cache else None)
         injector = None
         if chaos is not None:
@@ -91,12 +102,22 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
                             max_batch=batch, prefill_chunk=prefill_chunk,
                             prefix_cache=cache, codec=codec,
-                            faults=injector)
+                            faults=injector, telemetry=tel)
         sched = ContinuousScheduler(eng, token_budget=token_budget,
                                     requeue_preempted=requeue_preempted,
                                     max_queue=max_queue,
                                     ladder=PressureLadder() if overload
-                                    else None)
+                                    else None, telemetry=tel)
+        server = None
+        if metrics_port is not None:
+            server = start_metrics_server([tel.registry], metrics_port)
+            print(f"[serve] serving /metrics on port "
+                  f"{server.server_address[1]}")
+        for p in (trace_out, metrics_out, metrics_jsonl):
+            if p is not None and os.path.dirname(p):
+                os.makedirs(os.path.dirname(p), exist_ok=True)
+        jsonl_f = (open(metrics_jsonl, "w") if metrics_jsonl is not None
+                   else None)
         # shared system prompt: every request reuses the first
         # ``shared_prefix`` prompt tokens (prefix-cache showcase)
         if shared_prefix:
@@ -108,10 +129,15 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                 [jnp.tile(sys_toks[None], (batch, 1)),
                  prompts[:, shared_prefix:]], axis=1)
         arrivals = {b: b * arrival_stagger for b in range(batch)}
-        t0 = time.time()
+        t0 = tel.clock.now()
         pending = dict(arrivals)
         snap_step = None
         while pending or not sched.idle:
+            if sched.iteration % 16 == 0:
+                eng.sample_gauges()       # keep exported gauges fresh
+                if jsonl_f is not None:
+                    jsonl_f.write(tel.registry.to_jsonl_line(
+                        iteration=sched.iteration) + "\n")
             for rid, at in list(pending.items()):
                 if at <= sched.iteration:
                     sched.submit(rid, [int(t) for t in prompts[rid]],
@@ -127,7 +153,19 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                 snap_step = sched.iteration
                 save_snapshot(snapshot_dir, eng, sched, step=snap_step)
             sched.step()
-        dt = time.time() - t0
+        dt = tel.clock.now() - t0
+        eng.sample_gauges()
+        if jsonl_f is not None:
+            jsonl_f.write(tel.registry.to_jsonl_line(
+                iteration=sched.iteration, final=True) + "\n")
+            jsonl_f.close()
+        if metrics_out is not None:
+            with open(metrics_out, "w") as f:
+                f.write(tel.registry.to_prometheus())
+        if trace_out is not None:
+            tel.tracer.write_chrome_trace(trace_out)
+        if server is not None:
+            server.shutdown()
         fin = sched.finished()
         outs = [fin[b].out_tokens for b in range(batch)]
         # first_token_iter stays None when a request retires preempted
@@ -154,6 +192,8 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         if cache is not None:
             out["prefix_cache"] = dict(cache.stats,
                                        hit_rate=round(cache.hit_rate(), 3))
+        if metrics or metrics_out is not None or trace_out is not None:
+            out["metrics_summary"] = _metrics_summary(tel, eng, sched)
         if snap_step is not None:
             # restore the mid-stream snapshot into a fresh engine and
             # drive it to drain: outputs must match the original run
@@ -171,7 +211,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
 
     if paged or paged_reference:
         reqs = {b: [int(t) for t in prompts[b]] for b in range(batch)}
-        t0 = time.time()
+        t0 = time.perf_counter()
         if paged_reference:
             from repro.serving.reference import ReferencePagedKVEngine
             eng = ReferencePagedKVEngine(cfg, params, page_size=8,
@@ -188,7 +228,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
             eng.add_requests(reqs)      # one chunked-batch prefill pass
             for _ in range(gen):
                 eng.decode_batch()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         outs = [eng.seqs[b].tokens[prompt_len:] for b in range(batch)]
         return {"tokens": outs, "codec": eng.codec.name,
                 "kv_compression_ratio": eng.compression_ratio(),
@@ -200,7 +240,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
     if cfg.is_encdec:
         batch_d["enc_embeds"] = (jax.random.normal(
             key, (batch, prompt_len, cfg.d_model)) * 0.02)
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = model.prefill(params, batch_d, max_len)
     toks = jnp.argmax(logits, -1)
     out = [toks]
@@ -209,13 +249,68 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         logits, cache = step(params, cache, toks, jnp.int32(t))
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
         out.append(toks)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     gen_toks = jnp.stack(out, axis=1)
     return {"tokens": gen_toks.tolist(), "tok_per_s": batch * gen / dt}
 
 
+def _metrics_summary(tel, eng, sched) -> dict:
+    """End-of-run summary table data (--metrics): per-codec ratio, TTFT
+    percentiles, inter-token latency, ladder transitions — read from
+    the shared registry's histograms, not recomputed ad hoc."""
+    reg = tel.registry
+    per_codec = {}
+    for labels, pages in reg.series("engine_pages_by_codec_total"):
+        name = labels["codec"]
+        ratios = [m for lb, m in
+                  reg.series("engine_page_compression_ratio")
+                  if lb["codec"] == name]
+        per_codec[name] = {
+            "pages": pages.value,
+            "ratio_p50": round(ratios[0].quantile(0.5), 3) if ratios
+            else None}
+
+    def pct(name):
+        hs = [m for _, m in reg.series(name)]
+        if not hs or hs[0].count == 0:
+            return None
+        h = hs[0]
+        return {"p50": round(h.quantile(0.5), 4),
+                "p95": round(h.quantile(0.95), 4),
+                "p99": round(h.quantile(0.99), 4), "n": h.count}
+
+    return {"ttft_s": pct("serve_ttft_seconds"),
+            "intertoken_s": pct("serve_intertoken_seconds"),
+            "latency_s": pct("serve_request_latency_seconds"),
+            "dispatch_s": pct("sched_dispatch_seconds"),
+            "per_codec": per_codec,
+            "ladder_transitions": sched.stats["ladder_transitions"],
+            "pool_used_pages": eng.pool_used_pages()}
+
+
+_EPILOG = """\
+observability (scheduler mode):
+  --metrics            print an end-of-run summary: TTFT / inter-token /
+                       latency percentiles (from the registry's streaming
+                       histograms), per-codec page counts and ratio, ladder
+                       transitions, pool occupancy
+  --trace-out PATH     write the run's Chrome trace_event timeline; open it
+                       at https://ui.perfetto.dev (or chrome://tracing) to
+                       scrub per-request spans + per-iteration counters
+  --metrics-port N     serve Prometheus text on http://127.0.0.1:N/metrics
+                       for the duration of the run (0 = ephemeral port)
+  --metrics-out PATH   write one final Prometheus text snapshot
+  --metrics-jsonl PATH append JSON-lines registry snapshots every 16
+                       iterations (one object per line, `ts` + `metrics`)
+See src/repro/serving/README.md ("Observability") for the metrics
+reference table and trace schema.
+"""
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -267,6 +362,21 @@ def main() -> None:
                     help="snapshot the engine mid-stream into this dir, "
                          "then restore and verify token-identical "
                          "completion (scheduler mode)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome/Perfetto trace_event timeline "
+                         "here (scheduler mode; see epilog)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print an end-of-run metrics summary table "
+                         "(scheduler mode; see epilog)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on this port during the "
+                         "run (scheduler mode; 0 = ephemeral)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a final Prometheus text snapshot here "
+                         "(scheduler mode)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append JSON-lines registry snapshots here "
+                         "(scheduler mode)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
@@ -280,7 +390,11 @@ def main() -> None:
                    codec=args.codec, ttft_deadline=args.ttft_deadline,
                    deadline=args.deadline, max_queue=args.max_queue,
                    overload=args.overload, chaos=args.chaos,
-                   snapshot_dir=args.snapshot_dir)
+                   snapshot_dir=args.snapshot_dir,
+                   trace_out=args.trace_out, metrics=args.metrics,
+                   metrics_port=args.metrics_port,
+                   metrics_out=args.metrics_out,
+                   metrics_jsonl=args.metrics_jsonl)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
@@ -297,6 +411,19 @@ def main() -> None:
                   f"{out['codec']} ratio "
                   f"{'n/a' if ratio is None else f'{ratio:.2f}x'} "
                   f"({r['reason']})")
+    if "metrics_summary" in out:
+        ms = out["metrics_summary"]
+        print("[serve] metrics summary:")
+        for k in ("ttft_s", "intertoken_s", "latency_s", "dispatch_s"):
+            v = ms[k]
+            if v is not None:
+                print(f"[serve]   {k:<13} p50 {v['p50']}  p95 {v['p95']}  "
+                      f"p99 {v['p99']}  (n={v['n']})")
+        for name, pc in ms["per_codec"].items():
+            print(f"[serve]   codec {name}: {pc['pages']} pages, "
+                  f"page-ratio p50 {pc['ratio_p50']}")
+        print(f"[serve]   ladder transitions {ms['ladder_transitions']}, "
+              f"pool used {ms['pool_used_pages']} pages")
     if "faults" in out:
         print(f"[serve] injected faults: {out['faults']}")
     if "prefix_cache" in out:

@@ -111,6 +111,7 @@ from repro.kernels._backend import default_interpret
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.serving import faults as F
+from repro.serving.telemetry import Telemetry
 from repro.serving.prefix_cache import (PrefixCache, canonical_update,
                                         prefix_chunk_attention)
 
@@ -528,7 +529,8 @@ class PagedKVEngine:
                  prefix_cache: PrefixCache | None = None,
                  codec: str | codecs.PageCodec | None = None,
                  faults: "F.FaultInjector | None" = None,
-                 integrity: bool = True):
+                 integrity: bool = True,
+                 telemetry: Telemetry | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -589,10 +591,80 @@ class PagedKVEngine:
         self._pt_dev: jax.Array | None = None
         self._pt_dirty = True
         self._cohort: _Cohort | None = None
-        self.stats = {"pages_compressed": 0, "pages_evicted": 0,
-                      "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0, "prefix_pages_evicted": 0,
-                      "shed_inserts": 0, "integrity_failures": 0}
+        # registry-backed counters behind the legacy `.stats` property
+        # (serving/telemetry.py); the reference oracle mirrors the same
+        # series so engine-vs-oracle stats equality keeps holding
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._init_metrics()
+        if faults is not None:
+            faults.telemetry = self.telemetry
+        if prefix_cache is not None:
+            prefix_cache.telemetry = self.telemetry
+
+    _STAT_KEYS = ("pages_compressed", "pages_evicted", "bytes_raw",
+                  "bytes_compressed", "preemptions",
+                  "prefix_pages_evicted", "shed_inserts",
+                  "integrity_failures")
+
+    def _init_metrics(self) -> None:
+        reg = self.telemetry.registry
+        cn = self.codec.name
+        self._m = {k: reg.counter(f"engine_{k}_total", codec=cn)
+                   for k in self._STAT_KEYS}
+        self._g_pool_used = reg.gauge(
+            "engine_pool_used_pages", "mapped pool pages (id 0 excluded)")
+        self._g_free = reg.gauge(
+            "engine_free_list_depth", "pages on the free list")
+        self._g_pressure = reg.gauge(
+            "engine_pool_pressure", "non-reclaimable pool fraction [0,1]")
+        # per-codec publish telemetry: under the adaptive composite each
+        # page's winning member is its tag, so ratio/byte series split by
+        # member name; single-algorithm codecs have one series
+        members = getattr(self.codec, "members", None)
+        self._tag_names = ([m.name for m in members] if members
+                           else [cn])
+        self._tag_metrics: dict[int, tuple] = {}
+
+    def _publish_metrics(self, tag: int):
+        tm = self._tag_metrics.get(tag)
+        if tm is None:
+            reg = self.telemetry.registry
+            name = (self._tag_names[tag] if tag < len(self._tag_names)
+                    else str(tag))
+            tm = self._tag_metrics[tag] = (
+                reg.counter("engine_pages_by_codec_total",
+                            "published pages by winning codec",
+                            codec=name),
+                reg.counter("engine_compressed_bytes_by_codec_total",
+                            "compressed bytes by winning codec",
+                            codec=name),
+                reg.histogram("engine_page_compressed_bytes",
+                              "per-page compressed size", codec=name),
+                reg.histogram("engine_page_compression_ratio",
+                              "per-page raw/compressed ratio",
+                              codec=name))
+        return tm
+
+    @property
+    def stats(self) -> dict:
+        """Legacy stats mapping, rebuilt from the metrics registry."""
+        return {k: m.value for k, m in self._m.items()}
+
+    def load_stats_dict(self, s: dict) -> None:
+        """Restore counters from a legacy stats dict (snapshot compat)."""
+        for k, m in self._m.items():
+            if k in s:
+                m.value = s[k]
+
+    def sample_gauges(self) -> None:
+        """Refresh pool-occupancy gauges (called before an export)."""
+        self._g_pool_used.set(self.pool_used_pages())
+        self._g_free.set(len(self.free))
+        self._g_pressure.set(round(self.pool_pressure(), 6))
+        if self.prefix_cache is not None:
+            self.prefix_cache.sample_metrics()
+        if self.faults is not None:
+            self.faults.sample_metrics()
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -629,7 +701,7 @@ class PagedKVEngine:
         if not pids:
             return False
         self.free.extend(pids)
-        self.stats["prefix_pages_evicted"] += len(pids)
+        self._m["prefix_pages_evicted"].inc(len(pids))
         return True
 
     def _seq_value(self, seq: Sequence) -> float:
@@ -658,7 +730,7 @@ class PagedKVEngine:
         for lp in seq.pages:
             self.free.extend(lp[ns:])
             if count_evicted:
-                self.stats["pages_evicted"] += len(lp) - ns
+                self._m["pages_evicted"].inc(len(lp) - ns)
         if seq.chain:
             self.prefix_cache.release(seq.chain)
             seq.chain = []
@@ -679,27 +751,37 @@ class PagedKVEngine:
         # actually occur)
         if self.integrity and self.faults is not None \
                 and not F.verify_seq(self, victim.sid):
-            self.stats["integrity_failures"] += 1
+            self._m["integrity_failures"].inc()
         self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
         self._pt_dirty = True
-        self.stats["preemptions"] += 1
+        self._m["preemptions"].inc()
 
     def _record_publish(self, seq: Sequence, pids: list[int],
                         nbytes: np.ndarray, csums: np.ndarray,
                         tags: np.ndarray) -> None:
         """Attach freshly published pages (one per layer) to a sequence."""
+        raw = self.page_raw_bytes()
         for li, pid in enumerate(pids):
-            self.page_bytes[pid] = int(nbytes[li])
+            nb = int(nbytes[li])
+            tag = int(tags[li])
+            self.page_bytes[pid] = nb
             self.page_checksum[pid] = csums[li]
-            self.page_codec_id[pid] = int(tags[li])
+            self.page_codec_id[pid] = tag
             seq.pages[li].append(pid)
-        self.stats["pages_compressed"] += len(pids)
-        self.stats["bytes_raw"] += self.page_raw_bytes() * len(pids)
-        self.stats["bytes_compressed"] += int(nbytes.sum())
+            # per-codec page-tag distribution + per-page ratio histogram
+            # (the adaptive composite's member mix shows up here)
+            pages_c, bytes_c, h_bytes, h_ratio = self._publish_metrics(tag)
+            pages_c.inc()
+            bytes_c.inc(nb)
+            h_bytes.observe(nb)
+            h_ratio.observe(raw / max(nb, 1))
+        self._m["pages_compressed"].inc(len(pids))
+        self._m["bytes_raw"].inc(raw * len(pids))
+        self._m["bytes_compressed"].inc(int(nbytes.sum()))
         rb = self.request_bytes.setdefault(seq.sid, [0, 0])
-        rb[0] += self.page_raw_bytes() * len(pids)
+        rb[0] += raw * len(pids)
         rb[1] += int(nbytes.sum())
         self._pt_dirty = True
 
@@ -829,7 +911,11 @@ class PagedKVEngine:
                     # there, never serving bad bytes)
                     vstart, chain = F.verified_prefix(self, start, chain)
                     if vstart != start:
-                        self.stats["integrity_failures"] += 1
+                        self._m["integrity_failures"].inc()
+                        if self.telemetry.tracer.enabled:
+                            self.telemetry.tracer.event(
+                                sid, "hit_truncated", hit=start,
+                                verified=vstart)
                         start = vstart
                 self.prefix_cache.pin(chain)
             ent = [self.prefix_cache.entries[e] for e in chain]
@@ -1052,7 +1138,7 @@ class PagedKVEngine:
             # block is shed the sequence's chain is broken, so later
             # blocks must stay private too (blk != len(chain)) even
             # after pressure clears.
-            self.stats["shed_inserts"] += 1
+            self._m["shed_inserts"].inc()
             return
         assert blk == len(seq.chain), (blk, len(seq.chain))
         parent = seq.chain[-1] if seq.chain else 0
@@ -1060,9 +1146,13 @@ class PagedKVEngine:
         eid, created = cache.insert(
             parent, toks, pids, nbytes,
             codec_ids=[int(self.page_codec_id[p]) for p in pids])
-        self.free.extend(cache.drain_displaced())   # healed-over pages
+        displaced = cache.drain_displaced()         # healed-over pages
+        self.free.extend(displaced)
+        if displaced and self.telemetry.tracer.enabled:
+            self.telemetry.tracer.event(seq.sid, "cache_heal",
+                                        pages=len(displaced))
         if eid is None:            # pinned corrupt twin: block stays private
-            self.stats["shed_inserts"] += 1
+            self._m["shed_inserts"].inc()
             return
         cache.pin([eid])
         seq.chain.append(eid)
@@ -1077,9 +1167,9 @@ class PagedKVEngine:
             # _record_publish accounting so compression stats count each
             # resident page once (mirrored in the reference oracle)
             lyr = self.cfg.n_layers
-            self.stats["pages_compressed"] -= lyr
-            self.stats["bytes_raw"] -= self.page_raw_bytes() * lyr
-            self.stats["bytes_compressed"] -= nbytes
+            self._m["pages_compressed"].inc(-lyr)
+            self._m["bytes_raw"].inc(-self.page_raw_bytes() * lyr)
+            self._m["bytes_compressed"].inc(-nbytes)
 
     # -- decode ------------------------------------------------------------------
 
@@ -1224,9 +1314,9 @@ class PagedKVEngine:
     # -- metrics ------------------------------------------------------------------
 
     def compression_ratio(self) -> float:
-        if not self.stats["bytes_compressed"]:
+        if not self._m["bytes_compressed"].value:
             return 1.0
-        return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
+        return self._m["bytes_raw"].value / self._m["bytes_compressed"].value
 
     def pool_used_pages(self) -> int:
         return (self.n_pool_pages - 1) - len(self.free)

@@ -256,6 +256,18 @@ class FaultInjector:
         self._holds: list[tuple[int, list[int]]] = []   # (release_iter, pids)
         self._holds_started: set[int] = set()
         self.stats = {"corruptions": 0, "garbled": 0, "pages_held": 0}
+        # set by the owning engine (serving/telemetry.py); injected-fault
+        # counters are pushed into its registry by :meth:`sample_metrics`
+        self.telemetry = None
+
+    def sample_metrics(self) -> None:
+        """Mirror injector counters into the attached telemetry registry
+        (export-time, off the injection hot path)."""
+        if self.telemetry is None:
+            return
+        reg = self.telemetry.registry
+        for k, v in self.stats.items():
+            reg.gauge(f"faults_{k}_injected").set(v)
 
     # -- compressed-page corruption (publish / codec-roundtrip hook) -------
 

@@ -279,6 +279,10 @@ class PrefixCache:
                       "evicted": 0, "quarantined": 0, "healed": 0}
         self._n_corrupt = 0
         self._displaced: list[int] = []   # pool ids freed by healing
+        # set by the owning engine; :meth:`sample_metrics` pushes the
+        # cache's counters into its registry at export time (zero cost
+        # on the lookup/insert hot path)
+        self.telemetry = None
 
     @classmethod
     def for_model(cls, cfg, page_size: int, **kw) -> "PrefixCache":
@@ -477,6 +481,22 @@ class PrefixCache:
         if not self.stats["lookup_tokens"]:
             return 0.0
         return self.stats["hit_tokens"] / self.stats["lookup_tokens"]
+
+    def sample_metrics(self) -> None:
+        """Push cache counters into the attached telemetry registry
+        (called from the owning engine's ``sample_gauges``)."""
+        if self.telemetry is None:
+            return
+        reg = self.telemetry.registry
+        for k, v in self.stats.items():
+            reg.gauge(f"prefix_cache_{k}").set(v)
+        reg.gauge("prefix_cache_entries",
+                  "resident trie entries").set(len(self.entries))
+        reg.gauge("prefix_cache_retained_pages",
+                  "refcount-0 pages held only by the cache"
+                  ).set(self.retained_pages())
+        reg.gauge("prefix_cache_hit_rate",
+                  "token-weighted hit rate").set(round(self.hit_rate(), 6))
 
     # -- snapshot / restore ----------------------------------------------------
 

@@ -64,6 +64,7 @@ from repro.models import layers as L
 from repro.serving import engine as _E
 from repro.serving import faults as F
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.telemetry import Telemetry
 
 
 @dataclass
@@ -100,7 +101,8 @@ class ReferencePagedKVEngine:
                  prefill_chunk: int | None = None,
                  codec: str | codecs.PageCodec | None = None,
                  faults: "F.FaultInjector | None" = None,
-                 integrity: bool = True):
+                 integrity: bool = True,
+                 telemetry: Telemetry | None = None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -142,10 +144,25 @@ class ReferencePagedKVEngine:
         # cumulative published bytes per request (mirror of the batched
         # engine's per-request compression report)
         self.request_bytes: dict[int, list[int]] = {}
-        self.stats = {"pages_compressed": 0, "pages_evicted": 0,
-                      "bytes_raw": 0, "bytes_compressed": 0,
-                      "preemptions": 0, "prefix_pages_evicted": 0,
-                      "shed_inserts": 0, "integrity_failures": 0}
+        # registry-backed counters mirroring the batched engine's exact
+        # metric series (same names/labels), so engine-vs-oracle stats
+        # equality holds through the `.stats` properties
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._init_metrics()
+        if faults is not None:
+            faults.telemetry = self.telemetry
+        if prefix_cache is not None:
+            prefix_cache.telemetry = self.telemetry
+
+    # telemetry plumbing is shared with the batched engine by
+    # construction — identical attribute contracts (codec, telemetry,
+    # free, pool_used_pages), identical metric series
+    _STAT_KEYS = _E.PagedKVEngine._STAT_KEYS
+    _init_metrics = _E.PagedKVEngine._init_metrics
+    _publish_metrics = _E.PagedKVEngine._publish_metrics
+    stats = _E.PagedKVEngine.stats
+    load_stats_dict = _E.PagedKVEngine.load_stats_dict
+    sample_gauges = _E.PagedKVEngine.sample_gauges
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -177,7 +194,7 @@ class ReferencePagedKVEngine:
         if not pids:
             return False
         self.free.extend(pids)
-        self.stats["prefix_pages_evicted"] += len(pids)
+        self._m["prefix_pages_evicted"].inc(len(pids))
         return True
 
     def _seq_value(self, seq: Sequence) -> float:
@@ -200,7 +217,7 @@ class ReferencePagedKVEngine:
         for lp in seq.pages:
             self.free.extend(lp[ns:])
             if count_evicted:
-                self.stats["pages_evicted"] += len(lp) - ns
+                self._m["pages_evicted"].inc(len(lp) - ns)
         if seq.chain:
             self.prefix_cache.release(seq.chain)
             seq.chain = []
@@ -219,11 +236,11 @@ class ReferencePagedKVEngine:
         # corrupted page must not influence tokens the absorb path keeps
         if self.integrity and self.faults is not None \
                 and not F.verify_seq(self, victim.sid):
-            self.stats["integrity_failures"] += 1
+            self._m["integrity_failures"].inc()
         self._drop_seq_pages(victim, count_evicted=True)
         victim.tail_len = 0
         victim.preempted = True
-        self.stats["preemptions"] += 1
+        self._m["preemptions"].inc()
 
     def _publish_page(self, seq: Sequence, li: int,
                       k_blk: np.ndarray, v_blk: np.ndarray) -> None:
@@ -258,9 +275,15 @@ class ReferencePagedKVEngine:
         self.page_checksum[pid] = np.asarray(F._checksum_jit(pg))[0]
         self.page_codec_id[pid] = int(np.asarray(self.codec.page_tags(pg))[0])
         seq.pages[li].append(pid)
-        self.stats["pages_compressed"] += 1
-        self.stats["bytes_raw"] += self.page_raw_bytes()
-        self.stats["bytes_compressed"] += nbytes
+        tag = int(self.page_codec_id[pid])
+        pages_c, bytes_c, h_bytes, h_ratio = self._publish_metrics(tag)
+        pages_c.inc()
+        bytes_c.inc(nbytes)
+        h_bytes.observe(nbytes)
+        h_ratio.observe(self.page_raw_bytes() / max(nbytes, 1))
+        self._m["pages_compressed"].inc()
+        self._m["bytes_raw"].inc(self.page_raw_bytes())
+        self._m["bytes_compressed"].inc(nbytes)
         rb = self.request_bytes.setdefault(seq.sid, [0, 0])
         rb[0] += self.page_raw_bytes()
         rb[1] += nbytes
@@ -280,7 +303,7 @@ class ReferencePagedKVEngine:
             # degradation-ladder shed, or the chain already broke on an
             # earlier shed block — later blocks stay private (a chain
             # entry's position must equal its block index)
-            self.stats["shed_inserts"] += 1
+            self._m["shed_inserts"].inc()
             return
         page, cache, lyr = self.page, self.prefix_cache, self.cfg.n_layers
         parent = seq.chain[-1] if seq.chain else 0
@@ -292,7 +315,7 @@ class ReferencePagedKVEngine:
             codec_ids=[int(self.page_codec_id[p]) for p in pids])
         self.free.extend(cache.drain_displaced())   # healed-over pages
         if eid is None:            # pinned corrupt twin: block stays private
-            self.stats["shed_inserts"] += 1
+            self._m["shed_inserts"].inc()
             return
         cache.pin([eid])
         seq.chain.append(eid)
@@ -303,9 +326,9 @@ class ReferencePagedKVEngine:
                 seq.pages[li][blk] = ent.pages[li]
             # reverse the duplicate's publish accounting (mirror of the
             # batched engine): stats count each resident page once
-            self.stats["pages_compressed"] -= lyr
-            self.stats["bytes_raw"] -= self.page_raw_bytes() * lyr
-            self.stats["bytes_compressed"] -= nbytes
+            self._m["pages_compressed"].inc(-lyr)
+            self._m["bytes_raw"].inc(-self.page_raw_bytes() * lyr)
+            self._m["bytes_compressed"].inc(-nbytes)
 
     # -- request lifecycle -----------------------------------------------------
 
@@ -387,7 +410,7 @@ class ReferencePagedKVEngine:
                 # page — truncate the chain and recompute from there
                 vstart, chain = F.verified_prefix(self, start, chain)
                 if vstart != start:
-                    self.stats["integrity_failures"] += 1
+                    self._m["integrity_failures"].inc()
                     start = vstart
             self.prefix_cache.pin(chain)
         ent = [self.prefix_cache.entries[e] for e in chain]
@@ -566,9 +589,9 @@ class ReferencePagedKVEngine:
     # -- metrics ------------------------------------------------------------------
 
     def compression_ratio(self) -> float:
-        if not self.stats["bytes_compressed"]:
+        if not self._m["bytes_compressed"].value:
             return 1.0
-        return self.stats["bytes_raw"] / self.stats["bytes_compressed"]
+        return self._m["bytes_raw"].value / self._m["bytes_compressed"].value
 
     def pool_used_pages(self) -> int:
         return (self.n_pool_pages - 1) - len(self.free)

@@ -66,11 +66,11 @@ when no request progresses for ``stall_limit`` iterations.
 
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 
 from repro.serving.faults import FinishReason, SchedulerStalledError
+from repro.serving.telemetry import Telemetry
 
 
 @dataclass
@@ -99,6 +99,7 @@ class Track:
     finished_iter: int | None = None
     finished_t: float | None = None
     finish_reason: str | None = None      # a FinishReason value
+    last_token_t: float | None = None     # inter-token latency anchor
     out_tokens: list[int] = field(default_factory=list)
     pf_pos: int = 0                       # prompt tokens prefilled so far
     pf_start: int = 0                     # prefix-cache hit boundary
@@ -124,7 +125,8 @@ class ContinuousScheduler:
                  max_queue: int | None = None, ladder=None,
                  max_retries: int = 3, retry_backoff: int = 2,
                  stall_limit: int = 1000,
-                 verify_finish: bool | None = None):
+                 verify_finish: bool | None = None,
+                 telemetry: Telemetry | None = None):
         assert token_budget >= 1, token_budget
         self.engine = engine
         self.token_budget = token_budget
@@ -150,18 +152,67 @@ class ContinuousScheduler:
         self._delayed: list[tuple[int, int]] = []   # (ready_iter, rid)
         self._last_progress = 0
         self.iteration = 0
-        # stats are labeled by the engine's page codec so serving reports
-        # and bench JSONs stay comparable across codecs
-        self.stats = {"iterations": 0, "idle_iterations": 0,
-                      "mixed_iterations": 0, "prefill_tokens": 0,
-                      "decode_tokens": 0, "chunk_splits": 0,
-                      "requeues": 0, "prefix_cached_tokens": 0,
-                      "rejected": 0, "deadline_missed": 0,
-                      "corrupt_events": 0, "corrupt_retries": 0,
-                      "ladder_level": 0, "ladder_transitions": 0,
-                      "stalled": False,
-                      "codec": getattr(getattr(engine, "codec", None),
-                                       "name", "?")}
+        # telemetry: registry-backed counters replace the old ad-hoc
+        # stats dict (the `.stats` property rebuilds the same mapping),
+        # plus latency histograms and the opt-in request tracer.  The
+        # monotonic clock is the only time source in this file — never
+        # time.time(), so an NTP step can't corrupt TTFT/deadline stats.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.clock = self.telemetry.clock
+        self.trace = self.telemetry.tracer
+        reg = self.telemetry.registry
+        self._m = {k: reg.counter(f"sched_{k}_total") for k in (
+            "iterations", "idle_iterations", "mixed_iterations",
+            "prefill_tokens", "decode_tokens", "chunk_splits",
+            "requeues", "prefix_cached_tokens", "rejected",
+            "deadline_missed", "corrupt_events", "corrupt_retries")}
+        self._g_ladder = reg.gauge("sched_ladder_level")
+        self._g_ladder_tr = reg.gauge("sched_ladder_transitions_total")
+        self._g_stalled = reg.gauge("sched_stalled")
+        self._g_running = reg.gauge("sched_running")
+        self._g_waiting = reg.gauge("sched_waiting")
+        # stats/series are labeled by the engine's page codec so serving
+        # reports and bench JSONs stay comparable across codecs
+        self._codec_name = getattr(getattr(engine, "codec", None),
+                                   "name", "?")
+        hist, cn = reg.histogram, self._codec_name
+        self._h_ttft = hist("serve_ttft_seconds",
+                            "submit -> first token (monotonic clock)",
+                            codec=cn)
+        self._h_ttft_it = hist("serve_ttft_iterations",
+                               "submit -> first token, in scheduler "
+                               "iterations (deterministic)", codec=cn)
+        self._h_itl = hist("serve_intertoken_seconds",
+                           "gap between consecutive decode tokens",
+                           codec=cn)
+        self._h_lat = hist("serve_request_latency_seconds",
+                           "submit -> finish for requests that produced "
+                           "output", codec=cn)
+        self._h_lat_it = hist("serve_request_latency_iterations",
+                              "submit -> finish, in iterations",
+                              codec=cn)
+        self._h_disp = hist("sched_dispatch_seconds",
+                            "host wall time around the engine dispatch "
+                            "(includes the device sync)", codec=cn)
+
+    @property
+    def stats(self) -> dict:
+        """Legacy stats mapping, rebuilt from the metrics registry."""
+        s = {k: m.value for k, m in self._m.items()}
+        s["ladder_level"] = self._g_ladder.value
+        s["ladder_transitions"] = self._g_ladder_tr.value
+        s["stalled"] = bool(self._g_stalled.value)
+        s["codec"] = self._codec_name
+        return s
+
+    def load_stats_dict(self, s: dict) -> None:
+        """Restore counters from a legacy stats dict (snapshot compat)."""
+        for k, m in self._m.items():
+            if k in s:
+                m.value = s[k]
+        self._g_ladder.set(s.get("ladder_level", 0))
+        self._g_ladder_tr.set(s.get("ladder_transitions", 0))
+        self._g_stalled.set(int(s.get("stalled", False)))
 
     # -- queue -----------------------------------------------------------------
 
@@ -181,24 +232,42 @@ class ContinuousScheduler:
         assert max_new_tokens >= 1, max_new_tokens
         req = Request(rid, list(prompt), max_new_tokens, eos_id,
                       ttft_deadline, deadline)
-        now = time.time()
+        now = self.clock.now()
         tr = Track(req=req, state="waiting",
                    submitted_iter=self.iteration, submitted_t=now,
                    orig_prompt=list(prompt))
         self.tracks[rid] = tr
+        if self.trace.enabled:
+            self.trace.event(rid, "submit", prompt_tokens=len(prompt),
+                             max_new_tokens=max_new_tokens)
+            self.trace.phase(rid, "queued")
         over_queue = (self.max_queue is not None
                       and len(self.waiting) >= self.max_queue)
         shedding = self.ladder is not None \
             and self.ladder.level >= self.ladder.n_levels
         if over_queue or shedding:
-            tr.state = "finished"
-            tr.finish_reason = FinishReason.REJECTED
-            tr.finished_iter = self.iteration
-            tr.finished_t = now
-            self.stats["rejected"] += 1
+            self._m["rejected"].inc()
+            self._finish(tr, FinishReason.REJECTED, self.iteration, now)
             return False
         self.waiting.append(req)
         return True
+
+    def _finish(self, tr: Track, reason: str, it: int, now: float) -> None:
+        """Move a track to its terminal state; one place stamps times,
+        finish histograms, the per-reason counter, and the trace's
+        single terminal event."""
+        tr.state = "finished"
+        tr.finish_reason = reason
+        tr.finished_iter = it
+        tr.finished_t = now
+        reg = self.telemetry.registry
+        reg.counter("sched_requests_finished_total",
+                    "terminal requests by FinishReason",
+                    reason=str(reason)).inc()
+        if tr.out_tokens:                 # latency only for served work
+            self._h_lat.observe(now - tr.submitted_t)
+            self._h_lat_it.observe(it - tr.submitted_iter)
+        self.trace.finish(tr.req.rid, reason)
 
     @property
     def idle(self) -> bool:
@@ -227,38 +296,67 @@ class ContinuousScheduler:
         released = self._release_delayed(it)
         expired = self._expire_deadlines(it)
         if self.ladder is not None:
+            prev_lvl = self._g_ladder.value
             lvl = self.ladder.update(self.engine.pool_pressure())
             # level 1: shed prefix-cache insertions (engine-side)
             if hasattr(self.engine, "shed_cache_inserts"):
                 self.engine.shed_cache_inserts = lvl >= 1
-            self.stats["ladder_level"] = lvl
-            self.stats["ladder_transitions"] = self.ladder.transitions
+            self._g_ladder.set(lvl)
+            self._g_ladder_tr.set(self.ladder.transitions)
+            if lvl != prev_lvl and self.trace.enabled:
+                self.trace.event(None, "ladder_transition",
+                                 level=lvl, prev=prev_lvl)
         admitted = self._admit()
         decode_rids = list(self._running)
         n_pf = self._plan_prefill_tokens(len(decode_rids))
+        self._g_running.set(len(self._running))
+        self._g_waiting.set(len(self.waiting))
         if not decode_rids and n_pf == 0:
             self._check_stall(it, bool(admitted or released or expired))
             self.iteration += 1
-            self.stats["iterations"] += 1
-            self.stats["idle_iterations"] += 1
+            self._m["iterations"].inc()
+            self._m["idle_iterations"].inc()
+            if self.trace.enabled:
+                self._trace_iteration(it, {}, 0, 0.0)
             return {"iteration": it, "admitted": admitted, "decoded": {},
                     "prefilled": 0, "completed_prefills": [],
                     "retired": expired, "idle": True}
 
+        # host wall time around the whole dispatch: for the batched
+        # engine the decode post-step materializes the step's tokens on
+        # host (the block_until_ready of this design), so this span is
+        # submit-to-sync, not just call overhead
+        t_disp = self.clock.now()
         out, completed = self._dispatch(decode_rids, n_pf)
+        dispatch_s = self.clock.now() - t_disp
+        self._h_disp.observe(dispatch_s)
         self._validate_tokens(out)
 
-        now = time.time()
+        now = self.clock.now()
         for rid, tok in out.items():
             tr = self.tracks[rid]
             tr.out_tokens.append(tok)
             if tr.first_token_iter is None:
                 tr.first_token_iter = it
                 tr.first_token_t = now
-        self.stats["decode_tokens"] += len(out)
-        self.stats["prefill_tokens"] += n_pf
+                self._h_ttft.observe(now - tr.submitted_t)
+                self._h_ttft_it.observe(it - tr.submitted_iter)
+                if self.trace.enabled:
+                    self.trace.event(rid, "first_token", token=tok)
+            else:
+                if tr.last_token_t is not None:
+                    self._h_itl.observe(now - tr.last_token_t)
+                if self.trace.enabled:
+                    self.trace.event(rid, "decode_token", token=tok)
+            tr.last_token_t = now
+        self._m["decode_tokens"].inc(len(out))
+        self._m["prefill_tokens"].inc(n_pf)
         if decode_rids and n_pf:
-            self.stats["mixed_iterations"] += 1
+            self._m["mixed_iterations"].inc()
+        if n_pf and self.trace.enabled:
+            for rid in self._prefill:
+                self.trace.event(rid, "prefill_chunk", tokens=n_pf,
+                                 pf_pos=self.tracks[rid].pf_pos)
 
         for rid in completed:
             tr = self.tracks[rid]
@@ -267,15 +365,39 @@ class ContinuousScheduler:
             tr.state = "running"
             tr.prefill_done_iter = it
             self._running.append(rid)
+            if self.trace.enabled:
+                self.trace.event(rid, "prefill_done")
+                self.trace.phase(rid, "decode")
         self._prefill = [r for r in self._prefill if r not in completed]
 
         retired = self._retire(out, now)
         self._check_stall(it, True)       # a dispatch ran: progress
         self.iteration += 1
-        self.stats["iterations"] += 1
+        self._m["iterations"].inc()
+        if self.trace.enabled:
+            self._trace_iteration(it, out, n_pf, dispatch_s)
         return {"iteration": it, "admitted": admitted, "decoded": out,
                 "prefilled": n_pf, "completed_prefills": completed,
                 "retired": expired + retired, "idle": False}
+
+    def _trace_iteration(self, it: int, out: dict, n_pf: int,
+                         dispatch_s: float) -> None:
+        """One timeline sample: budget split, dispatch wall time, queue
+        depths, pool occupancy / free-list depth."""
+        eng = self.engine
+        series = {"decode_tokens": len(out), "prefill_tokens": n_pf,
+                  "token_budget": self.token_budget,
+                  "running": len(self._running),
+                  "waiting": len(self.waiting),
+                  "prefill_cohort": len(self._prefill),
+                  "dispatch_ms": dispatch_s * 1e3}
+        if hasattr(eng, "pool_used_pages"):
+            series["pool_used_pages"] = eng.pool_used_pages()
+        if hasattr(eng, "free"):
+            series["free_list_depth"] = len(eng.free)
+        if self.ladder is not None:
+            series["ladder_level"] = self._g_ladder.value
+        self.trace.iteration(it, **series)
 
     def run(self, *, max_iterations: int = 100_000) -> dict[int, Track]:
         """Drive iterations until every submitted request finishes.
@@ -288,7 +410,7 @@ class ContinuousScheduler:
                 break
             self.step()
         if not self.idle:
-            self.stats["stalled"] = True
+            self._g_stalled.set(1)
             raise SchedulerStalledError(
                 f"not drained after {max_iterations} iterations")
         return self.finished()
@@ -306,6 +428,10 @@ class ContinuousScheduler:
         self._delayed = [e for e in self._delayed if e[0] > it]
         self.waiting.extendleft(self.tracks[rid].req
                                 for _, rid in reversed(ready))
+        if self.trace.enabled:
+            for _, rid in ready:
+                self.trace.event(rid, "backoff_released")
+                self.trace.phase(rid, "queued")
         return [rid for _, rid in ready]
 
     def _expire_deadlines(self, it: int) -> list[tuple[int, str]]:
@@ -322,7 +448,7 @@ class ContinuousScheduler:
                  and age >= r.ttft_deadline)
             if miss:
                 expired.append((rid, FinishReason.DEADLINE))
-        now = time.time()
+        now = self.clock.now()
         for rid, reason in expired:
             tr = self.tracks[rid]
             if tr.state == "waiting":
@@ -333,11 +459,11 @@ class ContinuousScheduler:
                 if rid in self.engine.seqs:
                     self.engine.abort(rid)
                 self._detach(rid)
-            tr.state = "finished"
-            tr.finish_reason = reason
-            tr.finished_iter = it
-            tr.finished_t = now
-            self.stats["deadline_missed"] += 1
+            self._m["deadline_missed"].inc()
+            if self.trace.enabled:
+                self.trace.event(rid, "deadline_miss",
+                                 age=it - tr.submitted_iter)
+            self._finish(tr, reason, it, now)
         return expired
 
     def _validate_tokens(self, out: dict[int, int]) -> None:
@@ -347,7 +473,9 @@ class ContinuousScheduler:
         vocab = self.engine.cfg.vocab
         for rid in [r for r, t in out.items() if not 0 <= t < vocab]:
             self.tracks[rid].corrupt_hit = True
-            self.stats["corrupt_events"] += 1
+            self._m["corrupt_events"].inc()
+            if self.trace.enabled:
+                self.trace.event(rid, "corrupt_token")
             del out[rid]
 
     def _check_stall(self, it: int, progress: bool) -> None:
@@ -355,7 +483,7 @@ class ContinuousScheduler:
             self._last_progress = it
         elif not self.idle \
                 and it - self._last_progress >= self.stall_limit:
-            self.stats["stalled"] = True
+            self._g_stalled.set(1)
             raise SchedulerStalledError(
                 f"no request progressed for {self.stall_limit} iterations "
                 f"(waiting {len(self.waiting)}, prefill "
@@ -397,14 +525,22 @@ class ContinuousScheduler:
             tr.admitted_iter = self.iteration
             tr.pf_start = starts[r.rid]
             tr.pf_pos = starts[r.rid]
-            self.stats["prefix_cached_tokens"] += starts[r.rid]
+            self._m["prefix_cached_tokens"].inc(starts[r.rid])
+            if self.trace.enabled:
+                self.trace.event(r.rid, "admitted",
+                                 cached_tokens=starts[r.rid])
+                if starts[r.rid] > 0:
+                    self.trace.event(r.rid, "cache_hit",
+                                     tokens=starts[r.rid])
             if starts[r.rid] >= len(r.prompt) - 1:
                 tr.state = "running"          # full hit: no prefill phase
                 tr.prefill_done_iter = self.iteration
                 self._running.append(r.rid)
+                self.trace.phase(r.rid, "decode")
             else:
                 tr.state = "prefill"
                 self._prefill.append(r.rid)
+                self.trace.phase(r.rid, "prefill")
         self._cohort_pos = 0
         return [r.rid for r in cohort]
 
@@ -457,7 +593,7 @@ class ContinuousScheduler:
         # not a hard cap), else prefill could starve forever
         n = max(n, 1)
         if n < min(chunk, max(rems)):
-            self.stats["chunk_splits"] += 1
+            self._m["chunk_splits"].inc()
         return n
 
     def set_reference_prefill_chunk(self, chunk: int) -> None:
@@ -531,7 +667,7 @@ class ContinuousScheduler:
                 # this answer before declaring it finished
                 corrupt = not self.engine.verify_seq(rid)
                 if corrupt:
-                    self.stats["corrupt_events"] += 1
+                    self._m["corrupt_events"].inc()
             if corrupt:
                 if tr.corrupt_retries < self.max_retries:
                     restarted.append(rid)
@@ -569,10 +705,9 @@ class ContinuousScheduler:
                     retired.append((rid, FinishReason.PREEMPTED))
         for rid, reason in retired:
             tr = self.tracks[rid]
-            tr.state = "finished"
-            tr.finish_reason = reason
-            tr.finished_iter = self.iteration
-            tr.finished_t = now
+            if self.trace.enabled and reason == FinishReason.PREEMPTED:
+                self.trace.event(rid, "preempt")
+            self._finish(tr, reason, self.iteration, now)
             self._detach(rid)
         for rid in requeued:
             tr = self.tracks[rid]
@@ -584,7 +719,11 @@ class ContinuousScheduler:
             tr.absorbed = len(tr.out_tokens)
             tr.requeues += 1
             tr.state = "waiting"
-            self.stats["requeues"] += 1
+            self._m["requeues"].inc()
+            if self.trace.enabled:
+                self.trace.event(rid, "preempt")
+                self.trace.event(rid, "requeue", requeues=tr.requeues)
+                self.trace.phase(rid, "queued")
         self.waiting.extendleft(self.tracks[rid].req
                                 for rid in reversed(requeued))
         for rid in restarted:
@@ -600,7 +739,11 @@ class ContinuousScheduler:
         exponential backoff delay."""
         tr = self.tracks[rid]
         tr.corrupt_retries += 1
-        self.stats["corrupt_retries"] += 1
+        self._m["corrupt_retries"].inc()
+        if self.trace.enabled:
+            self.trace.event(rid, "corrupt_retry",
+                             retry=tr.corrupt_retries)
+            self.trace.phase(rid, "backoff")
         if rid in self.engine.seqs:
             self.engine.abort(rid)
         self._detach(rid)
@@ -611,6 +754,7 @@ class ContinuousScheduler:
         tr.pf_pos = tr.pf_start = 0
         tr.first_token_iter = None
         tr.first_token_t = None
+        tr.last_token_t = None
         tr.state = "waiting"
         delay = self.retry_backoff * (2 ** (tr.corrupt_retries - 1))
         self._delayed.append((self.iteration + delay, rid))

@@ -37,6 +37,7 @@ from repro.checkpoint import store
 from repro.serving.engine import PagedKVEngine, Sequence, _Cohort
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request, Track
+from repro.serving.telemetry import Telemetry
 
 
 def _seq_meta(s: Sequence) -> dict:
@@ -61,6 +62,7 @@ def _track_meta(rid: int, tr: Track) -> dict:
             "first_token_iter": tr.first_token_iter,
             "first_token_t": tr.first_token_t,
             "finished_iter": tr.finished_iter, "finished_t": tr.finished_t,
+            "last_token_t": tr.last_token_t,
             "finish_reason": (None if tr.finish_reason is None
                               else str(tr.finish_reason)),
             "out_tokens": list(tr.out_tokens), "pf_pos": tr.pf_pos,
@@ -117,6 +119,7 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
             "free": list(engine.free),
             "free_slots": list(engine._free_slots),
             "pmax": engine._pmax, "stats": dict(engine.stats),
+            "telemetry": engine.telemetry.state(),
             "request_bytes": {str(k): list(v)
                               for k, v in engine.request_bytes.items()},
             "seqs": [_seq_meta(s) for s in engine.seqs.values()],
@@ -141,6 +144,9 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
             "cohort_pos": scheduler._cohort_pos,
             "last_progress": scheduler._last_progress,
             "stats": dict(scheduler.stats),
+            "telemetry": (None if scheduler.telemetry
+                          is engine.telemetry
+                          else scheduler.telemetry.state()),
             "waiting": [r.rid for r in scheduler.waiting],
             "delayed": [list(e) for e in scheduler._delayed],
             "prefill": list(scheduler._prefill),
@@ -181,7 +187,7 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
         n_pool_pages=em["n_pool_pages"], max_batch=em["max_batch"],
         use_fused=em["use_fused"], prefill_chunk=em["prefill_chunk"],
         prefix_cache=cache, codec=em["codec"], faults=faults,
-        integrity=em["integrity"])
+        integrity=em["integrity"], telemetry=Telemetry())
 
     leaves, tdef = jax.tree_util.tree_flatten(eng.pools)
     eng.pools = jax.tree_util.tree_unflatten(
@@ -196,7 +202,12 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
     eng._free_slots = list(em["free_slots"])
     eng._pmax = em["pmax"]
     eng._pt_dirty = True
-    eng.stats.update(em["stats"])
+    # telemetry round-trip: counters/histograms restore into the fresh
+    # registry; legacy snapshots (stats dict only) restore counters
+    if em.get("telemetry") is not None:
+        eng.telemetry.load_state(em["telemetry"])
+    else:
+        eng.load_stats_dict(em["stats"])
     eng.shed_cache_inserts = em["shed_cache_inserts"]
     eng.request_bytes = {int(k): list(v)
                          for k, v in em["request_bytes"].items()}
@@ -231,7 +242,7 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
         max_requeues=sm["max_requeues"], max_queue=sm["max_queue"],
         ladder=ladder, max_retries=sm["max_retries"],
         retry_backoff=sm["retry_backoff"], stall_limit=sm["stall_limit"],
-        verify_finish=sm["verify_finish"])
+        verify_finish=sm["verify_finish"], telemetry=eng.telemetry)
     for d in sm["tracks"]:
         rm = d["req"]
         req = Request(d["rid"], list(rm["prompt"]), rm["max_new_tokens"],
@@ -245,6 +256,7 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
             first_token_iter=d["first_token_iter"],
             first_token_t=d["first_token_t"],
             finished_iter=d["finished_iter"], finished_t=d["finished_t"],
+            last_token_t=d.get("last_token_t"),
             finish_reason=d["finish_reason"],
             out_tokens=list(d["out_tokens"]), pf_pos=d["pf_pos"],
             pf_start=d["pf_start"], requeues=d["requeues"],
@@ -258,5 +270,9 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
     sched.iteration = sm["iteration"]
     sched._cohort_pos = sm["cohort_pos"]
     sched._last_progress = sm["last_progress"]
-    sched.stats.update(sm["stats"])
+    if sm.get("telemetry") is not None:
+        # saved from a non-shared registry: merge into the shared one
+        sched.telemetry.load_state(sm["telemetry"])
+    elif "telemetry" not in sm:
+        sched.load_stats_dict(sm["stats"])      # legacy snapshot
     return eng, sched
