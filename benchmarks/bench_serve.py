@@ -46,7 +46,17 @@ structural wins ``adaptive_ratio >= max(single_codec_ratio)`` and
 And the **telemetry-overhead bench**: the scheduler workload replayed
 with full request tracing on vs off (the disabled-tracer fast path),
 reporting ``traced_vs_untraced_goodput`` — CI gates >= 0.97, pinning
-the observability layer's cost on the serving hot path.  The traced run
+the observability layer's cost on the serving hot path.  The
+**observatory-overhead bench** holds the memory-hierarchy observatory
+(``serving/observatory.py``: reuse tracking + shadow policy/codec
+simulators + decision audit) to the same bar:
+``observed_vs_plain_goodput >= 0.97`` at the same fixed arrival rate.
+The prefix-cache warm run additionally attaches an observatory, so its
+row reports shadow-policy hit rates (CI gates shadow-SIP >=
+shadow-FIFO on the shared-prefix stream), the run prints the joint
+size-bin × reuse-distance table, and ``results/serve/`` gains the
+decision-audit JSONL (``audit_smoke.jsonl``) and the rendered
+``launch/observe.py`` report (``observe_smoke.txt``) as CI artifacts.  The traced run
 exports ``results/serve/trace_smoke.json`` (Chrome trace_event /
 Perfetto), ``metrics_smoke.prom`` and ``metrics_smoke.jsonl`` as CI
 artifacts.  Per-request TTFT / inter-token / latency percentiles on
@@ -79,7 +89,9 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
 # results/serve/ payload schema: bump when row fields or payload keys
 # change shape; check_serve_regression refuses mismatched payloads
 # (stdlib-importable — keep this module's top level free of jax imports)
-SCHEMA_VERSION = 2
+# v3: prefix_warm rows carry shadow-policy hit rates + reuse counts;
+#     new observatory_overhead row gates observed_vs_plain_goodput
+SCHEMA_VERSION = 3
 
 PROMPT_LEN = 12
 PAGE = 8
@@ -407,14 +419,16 @@ def _prefix_workload(cfg, n_req: int, salt: int) -> list[dict]:
 
 
 def _primed_engine(cfg, params, slots: int, pool: int,
-                   codec: str | None = None):
+                   codec: str | None = None, telemetry=None,
+                   observatory=None):
     """Engine with a prefix cache primed by one system-prompt request."""
     from repro.serving.engine import PagedKVEngine
     from repro.serving.prefix_cache import PrefixCache
 
     cache = PrefixCache.for_model(cfg, PAGE)
     eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
-                        max_batch=slots, prefix_cache=cache, codec=codec)
+                        max_batch=slots, prefix_cache=cache, codec=codec,
+                        telemetry=telemetry, observatory=observatory)
     eng.add_requests({-1: _sys_prompt(cfg) + [1]})
     eng.release(-1)          # pages stay cache-retained
     return eng
@@ -465,12 +479,22 @@ def _bench_prefix(cfg, params, mode: str,
                     slots, pool, codec=codec)
     gap = (time.perf_counter() - t0) / max(1, n_req) * 0.5
 
+    from repro.serving.observatory import Observatory
+    from repro.serving.telemetry import Telemetry
+
     reqs = _prefix_workload(cfg, n_req, 0)
     cold = _run_continuous(cfg, params, reqs, gap, slots, pool,
                            codec=codec)
-    warm_eng = _primed_engine(cfg, params, slots, pool, codec)
+    # the warm arm carries the memory-hierarchy observatory: the
+    # shared-prefix stream is where shadow retention policies separate
+    # (SIP must keep the hot system pages — CI gates shadow-SIP >=
+    # shadow-FIFO) and where real cross-request reuse distances exist
+    tel = Telemetry()
+    obs = Observatory(tel)
+    warm_eng = _primed_engine(cfg, params, slots, pool, codec,
+                              telemetry=tel, observatory=obs)
     warm = _run_continuous(cfg, params, reqs, gap, slots, pool,
-                           engine=warm_eng)
+                           engine=warm_eng, tel=tel)
     hit_rate = warm_eng.prefix_cache.hit_rate()
 
     # snapshot/restore warm-hit scenario: persist the warm engine + its
@@ -491,6 +515,8 @@ def _bench_prefix(cfg, params, mode: str,
     cold.update({"bench": "serve_prefix", "engine": "prefix_cold",
                  "batch": slots, "n_requests": n_req,
                  "sys_prompt_len": SYS_PROMPT_LEN})
+    shadow = obs.shadow.hit_rates()
+    joint = obs.reuse.joint_counts()
     warm.update({
         "bench": "serve_prefix", "engine": "prefix_warm", "batch": slots,
         "n_requests": n_req, "sys_prompt_len": SYS_PROMPT_LEN,
@@ -498,7 +524,26 @@ def _bench_prefix(cfg, params, mode: str,
         # structural headline: warm admission skips the cached prefix
         "warm_vs_cold_ttft_p95": round(
             cold["ttft_s_p95"] / max(warm["ttft_s_p95"], 1e-9), 2),
+        # counterfactual retention policies over the same access stream
+        # (check_serve_regression gates sip >= fifo)
+        "shadow_hit_rates": {p: round(v, 3) for p, v in shadow.items()},
+        "shadow_sip_hit_rate": round(shadow["sip"], 3),
+        "shadow_fifo_hit_rate": round(shadow["fifo"], 3),
+        "reuse_events": int(sum(joint.values())),
     })
+    # observatory artifacts for CI: the decision-audit JSONL and the
+    # rendered observe.py report, from the warm shared-prefix run
+    from repro.launch.observe import render_report
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    obs.audit.to_jsonl(os.path.join(RESULTS_DIR, "audit_smoke.jsonl"))
+    with open(os.path.join(RESULTS_DIR, "observe_smoke.txt"), "w") as f:
+        f.write(render_report(tel.registry.snapshot(),
+                              audit_records=obs.audit.records))
+    print(f"# prefix_warm shadow hit rates: "
+          + ", ".join(f"{p}={v:.3f}" for p, v in shadow.items()))
+    print("# prefix_warm size-bin x reuse-distance:")
+    for ln in obs.reuse_table().splitlines():
+        print(f"#   {ln}")
     restored.update({
         "bench": "serve_prefix", "engine": "prefix_restored",
         "batch": slots, "n_requests": n_req,
@@ -619,6 +664,72 @@ def _bench_telemetry(cfg, params, mode: str,
         "traced_vs_untraced_goodput": round(
             traced["goodput_tok_s"]
             / max(untraced["goodput_tok_s"], 1e-9), 3),
+    })
+    return [row]
+
+
+def _bench_observatory(cfg, params, mode: str,
+                       codec: str | None = None) -> list[dict]:
+    """Observatory-overhead bench: the scheduler workload with the full
+    memory-hierarchy observatory attached (reuse tracker + four shadow
+    caches + codec what-if + audit log) vs a plain engine, at the same
+    fixed under-loaded arrival rate.  Same framing and best-of-N
+    discipline as :func:`_bench_telemetry` (and must run after it — the
+    jit shapes are shared); check_serve_regression gates
+    ``observed_vs_plain_goodput >= 0.97``, the issue's "observatory-
+    enabled goodput >= 0.97x untraced" acceptance bar."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.observatory import Observatory
+    from repro.serving.telemetry import Telemetry
+
+    n_req, slots = _SCHED_MODES[mode]
+    pool = 256
+    reqs = _sched_workload(cfg, _OVERHEAD_REPS * n_req)
+
+    def observed_engine():
+        tel = Telemetry()
+        obs = Observatory(tel)
+        eng = PagedKVEngine(cfg, params, page_size=PAGE,
+                            n_pool_pages=pool, max_batch=slots,
+                            codec=codec, telemetry=tel, observatory=obs)
+        return eng, tel
+
+    t0 = time.perf_counter()
+    _run_continuous(cfg, params, reqs, 0.0, slots, pool, codec=codec)
+    gap = ((time.perf_counter() - t0) / max(1, len(reqs))
+           * MIXED_GAP_FACTOR)
+
+    # discard pair (residual warmup), then alternate best-of-N arms
+    _run_continuous(cfg, params, reqs, gap, slots, pool, codec=codec)
+    eng, tel = observed_engine()
+    _run_continuous(cfg, params, reqs, gap, slots, pool, engine=eng,
+                    tel=tel)
+
+    plain_runs, observed_runs = [], []
+    for _ in range(_OVERHEAD_TRIALS):
+        plain_runs.append(
+            _run_continuous(cfg, params, reqs, gap, slots, pool,
+                            codec=codec))
+        eng, tel = observed_engine()
+        observed_runs.append(
+            (_run_continuous(cfg, params, reqs, gap, slots, pool,
+                             engine=eng, tel=tel), eng))
+    plain = max(plain_runs, key=lambda m: m["goodput_tok_s"])
+    observed, eng = max(observed_runs,
+                        key=lambda e: e[0]["goodput_tok_s"])
+
+    row = dict(observed)
+    row.update({
+        "bench": "serve_observatory", "engine": "observatory_overhead",
+        "batch": slots, "n_requests": len(reqs),
+        "token_budget": SCHED_BUDGET,
+        "reuse_ticks": eng.obs.reuse.tick,
+        "audit_decisions": sum(eng.obs.audit.counts().values()),
+        "observed_goodput_tok_s": observed["goodput_tok_s"],
+        "plain_goodput_tok_s": plain["goodput_tok_s"],
+        "observed_vs_plain_goodput": round(
+            observed["goodput_tok_s"]
+            / max(plain["goodput_tok_s"], 1e-9), 3),
     })
     return [row]
 
@@ -785,6 +896,7 @@ def rows(mode: str = "full", codec: str | None = None) -> list[dict]:
         out.extend([batched, refr])
     out.extend(_bench_scheduler(cfg, params, mode, codec))
     out.extend(_bench_telemetry(cfg, params, mode, codec))
+    out.extend(_bench_observatory(cfg, params, mode, codec))
     out.extend(_bench_prefix(cfg, params, mode, codec))
     # the mixed-content bench sweeps MIXED_CODECS itself (it is the
     # adaptive-vs-single-codec comparison), so --codec does not apply

@@ -20,6 +20,13 @@ and ``adaptive_goodput >= 0.97 * best_single_goodput``.  The
 ``telemetry_overhead`` row gates the observability layer itself:
 ``traced_vs_untraced_goodput >= 0.97`` — full request tracing must stay
 within 3% of the disabled-tracer fast path on the serving hot path.
+The memory-hierarchy observatory adds two more structural gates: the
+``prefix_warm`` row's shadow-policy hit rates must show
+``shadow_sip_hit_rate >= shadow_fifo_hit_rate`` (size-indicates-reuse
+retention must not lose to FIFO on the shared-prefix stream it was
+built for), and the ``observatory_overhead`` row must hold
+``observed_vs_plain_goodput >= 0.97`` — the full observatory (reuse
+tracker + shadow simulators + audit log) priced like tracing.
 Exit 1 with a per-metric report otherwise.
 
 Both the current results and the baseline are schema-stamped
@@ -92,6 +99,7 @@ def check(current: dict, baseline: dict, max_drop: float,
     failures += _check_prefix_rows(current, min_hit_rate)
     failures += _check_mixed_rows(current)
     failures += _check_telemetry_rows(current)
+    failures += _check_observatory_rows(current)
     failures += _check_fault_counters(current)
     for key, brow in sorted(base.items()):
         engine, batch = key
@@ -159,6 +167,23 @@ def _check_prefix_rows(current: dict, min_hit_rate: float) -> list[str]:
                 failures.append(
                     f"{kind} batch {batch} prefix_hit_rate: {hit:.3f} < "
                     f"required {min_hit_rate:.3f}")
+            if kind == "prefix_warm":
+                # shadow-policy gate: on the shared-prefix stream the
+                # SIP ghost cache must at least match FIFO's hit rate —
+                # the structural claim the retention policy is built on
+                sip = wrow.get("shadow_sip_hit_rate")
+                fifo = wrow.get("shadow_fifo_hit_rate")
+                if sip is None or fifo is None:
+                    failures.append(
+                        f"prefix_warm batch {batch}: shadow hit rates "
+                        "missing (observatory not attached to the warm "
+                        "run)")
+                elif sip < fifo:
+                    failures.append(
+                        f"prefix_warm batch {batch} shadow_sip_hit_rate "
+                        f"{sip:.3f} < shadow_fifo_hit_rate {fifo:.3f} — "
+                        "SIP retention losing to FIFO on its home "
+                        "workload")
     return failures
 
 
@@ -225,6 +250,30 @@ def _check_telemetry_rows(current: dict) -> list[str]:
     return failures
 
 
+# the full memory-hierarchy observatory (reuse tracker + four shadow
+# caches + codec what-if + audit log) must stay as cheap as tracing:
+# the observed arm of the observatory-overhead bench must hold >= this
+# fraction of the plain engine's goodput at the same arrival rate
+_OBS_OVERHEAD_FRAC = 0.97
+
+
+def _check_observatory_rows(current: dict) -> list[str]:
+    rows = [r for r in current["rows"]
+            if r.get("engine") == "observatory_overhead"]
+    if not rows:
+        return ["observatory_overhead row missing from current results"]
+    failures = []
+    for r in rows:
+        ratio = r.get("observed_vs_plain_goodput", 0.0)
+        if ratio < _OBS_OVERHEAD_FRAC:
+            failures.append(
+                f"observatory_overhead batch {r['batch']} "
+                f"observed_vs_plain_goodput: {ratio:.3f} < "
+                f"{_OBS_OVERHEAD_FRAC:.2f} — the observatory is slowing "
+                "the serving hot path")
+    return failures
+
+
 # a no-fault smoke must finish every request normally: any nonzero
 # counter means the scheduler rejected, expired, retried, or requeued
 # work without fault injection — a resilience-path leak into the happy
@@ -233,7 +282,7 @@ _FAULT_COUNTERS = ("rejected", "deadline_missed", "corrupt_retries",
                    "requeues")
 _COUNTED_ENGINES = ("scheduler", "prefix_cold", "prefix_warm",
                     "prefix_restored", "mixed_codec",
-                    "telemetry_overhead")
+                    "telemetry_overhead", "observatory_overhead")
 
 
 def _check_fault_counters(current: dict) -> list[str]:
@@ -333,6 +382,10 @@ def main() -> int:
                   f"warm_vs_cold_ttft_p95={row['warm_vs_cold_ttft_p95']:.2f}"
                   f" (>= 1.00), prefix_hit_rate={row['prefix_hit_rate']:.3f}"
                   f" (>= {args.min_hit_rate:.3f})")
+            print(f"  ok shadow batch {row['batch']}: "
+                  f"sip={row['shadow_sip_hit_rate']:.3f} >= "
+                  f"fifo={row['shadow_fifo_hit_rate']:.3f} "
+                  f"({row['reuse_events']} reuse events)")
         elif row.get("engine") == "prefix_restored":
             print(f"  ok restored batch {row['batch']}: "
                   f"restored_vs_cold_ttft_p95="
@@ -345,6 +398,13 @@ def main() -> int:
                   f"{row['traced_vs_untraced_goodput']:.3f} "
                   f"(>= {_TRACE_OVERHEAD_FRAC:.2f}), "
                   f"trace_events={row['trace_events']}")
+        elif row.get("engine") == "observatory_overhead":
+            print(f"  ok observatory batch {row['batch']}: "
+                  f"observed_vs_plain_goodput="
+                  f"{row['observed_vs_plain_goodput']:.3f} "
+                  f"(>= {_OBS_OVERHEAD_FRAC:.2f}), "
+                  f"reuse_ticks={row['reuse_ticks']}, "
+                  f"audit_decisions={row['audit_decisions']}")
         elif row.get("engine") == "mixed_summary":
             print(f"  ok mixed adaptive: ratio={row['adaptive_ratio']:.3f}"
                   f" (>= best single {row['best_single_ratio']:.3f} "

@@ -72,7 +72,9 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              metrics: bool = False,
              metrics_port: int | None = None,
              metrics_out: str | None = None,
-             metrics_jsonl: str | None = None) -> dict:
+             metrics_jsonl: str | None = None,
+             observatory: bool = False,
+             audit_out: str | None = None) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -89,10 +91,17 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         from repro.serving.prefix_cache import PrefixCache
         from repro.serving.scheduler import ContinuousScheduler
         from repro.serving.telemetry import (Telemetry,
-                                             start_metrics_server)
+                                             start_metrics_server,
+                                             stop_metrics_server)
         # one shared Telemetry: engine + scheduler write one registry,
         # one monotonic clock, one (optional) tracer
         tel = Telemetry(trace=trace_out is not None)
+        obs = None
+        if observatory or audit_out is not None:
+            # hierarchy observatory: reuse tracking, shadow policy/codec
+            # simulators, decision audit — all on the shared registry
+            from repro.serving.observatory import Observatory
+            obs = Observatory(tel)
         cache = (PrefixCache.for_model(cfg, 8) if prefix_cache else None)
         injector = None
         if chaos is not None:
@@ -102,7 +111,8 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
                             max_batch=batch, prefill_chunk=prefill_chunk,
                             prefix_cache=cache, codec=codec,
-                            faults=injector, telemetry=tel)
+                            faults=injector, telemetry=tel,
+                            observatory=obs)
         sched = ContinuousScheduler(eng, token_budget=token_budget,
                                     requeue_preempted=requeue_preempted,
                                     max_queue=max_queue,
@@ -113,7 +123,7 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
             server = start_metrics_server([tel.registry], metrics_port)
             print(f"[serve] serving /metrics on port "
                   f"{server.server_address[1]}")
-        for p in (trace_out, metrics_out, metrics_jsonl):
+        for p in (trace_out, metrics_out, metrics_jsonl, audit_out):
             if p is not None and os.path.dirname(p):
                 os.makedirs(os.path.dirname(p), exist_ok=True)
         jsonl_f = (open(metrics_jsonl, "w") if metrics_jsonl is not None
@@ -132,40 +142,46 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         t0 = tel.clock.now()
         pending = dict(arrivals)
         snap_step = None
-        while pending or not sched.idle:
-            if sched.iteration % 16 == 0:
-                eng.sample_gauges()       # keep exported gauges fresh
-                if jsonl_f is not None:
-                    jsonl_f.write(tel.registry.to_jsonl_line(
-                        iteration=sched.iteration) + "\n")
-            for rid, at in list(pending.items()):
-                if at <= sched.iteration:
-                    sched.submit(rid, [int(t) for t in prompts[rid]],
-                                 max_new_tokens=gen,
-                                 ttft_deadline=ttft_deadline,
-                                 deadline=deadline)
-                    del pending[rid]
-            if snapshot_dir is not None and snap_step is None \
-                    and not pending and (sched._running or sched._prefill):
-                # mid-stream snapshot with requests in flight: the
-                # restore demo below finishes them token-identically
-                from repro.serving.snapshot import save_snapshot
-                snap_step = sched.iteration
-                save_snapshot(snapshot_dir, eng, sched, step=snap_step)
-            sched.step()
-        dt = tel.clock.now() - t0
-        eng.sample_gauges()
-        if jsonl_f is not None:
-            jsonl_f.write(tel.registry.to_jsonl_line(
-                iteration=sched.iteration, final=True) + "\n")
-            jsonl_f.close()
+        try:
+            while pending or not sched.idle:
+                if sched.iteration % 16 == 0:
+                    eng.sample_gauges()   # keep exported gauges fresh
+                    if jsonl_f is not None:
+                        jsonl_f.write(tel.registry.to_jsonl_line(
+                            iteration=sched.iteration) + "\n")
+                for rid, at in list(pending.items()):
+                    if at <= sched.iteration:
+                        sched.submit(rid, [int(t) for t in prompts[rid]],
+                                     max_new_tokens=gen,
+                                     ttft_deadline=ttft_deadline,
+                                     deadline=deadline)
+                        del pending[rid]
+                if snapshot_dir is not None and snap_step is None \
+                        and not pending \
+                        and (sched._running or sched._prefill):
+                    # mid-stream snapshot with requests in flight: the
+                    # restore demo below finishes them token-identically
+                    from repro.serving.snapshot import save_snapshot
+                    snap_step = sched.iteration
+                    save_snapshot(snapshot_dir, eng, sched, step=snap_step)
+                sched.step()
+            dt = tel.clock.now() - t0
+            eng.sample_gauges()
+            if jsonl_f is not None:
+                jsonl_f.write(tel.registry.to_jsonl_line(
+                    iteration=sched.iteration, final=True) + "\n")
+        finally:
+            # clean exit or mid-run crash: release the file handle and
+            # the metrics port (stop_metrics_server joins the thread)
+            if jsonl_f is not None:
+                jsonl_f.close()
+            if server is not None:
+                stop_metrics_server(server)
         if metrics_out is not None:
             with open(metrics_out, "w") as f:
                 f.write(tel.registry.to_prometheus())
         if trace_out is not None:
             tel.tracer.write_chrome_trace(trace_out)
-        if server is not None:
-            server.shutdown()
         fin = sched.finished()
         outs = [fin[b].out_tokens for b in range(batch)]
         # first_token_iter stays None when a request retires preempted
@@ -194,6 +210,11 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                                        hit_rate=round(cache.hit_rate(), 3))
         if metrics or metrics_out is not None or trace_out is not None:
             out["metrics_summary"] = _metrics_summary(tel, eng, sched)
+        if obs is not None:
+            out["observatory"] = obs.summary()
+            out["reuse_table"] = obs.reuse_table()
+            if audit_out is not None:
+                obs.audit.to_jsonl(audit_out)
         if snap_step is not None:
             # restore the mid-stream snapshot into a fresh engine and
             # drive it to drain: outputs must match the original run
@@ -302,8 +323,18 @@ observability (scheduler mode):
   --metrics-out PATH   write one final Prometheus text snapshot
   --metrics-jsonl PATH append JSON-lines registry snapshots every 16
                        iterations (one object per line, `ts` + `metrics`)
+  --observatory        attach the memory-hierarchy observatory: live
+                       size-bin x reuse-distance histograms, shadow
+                       retention-policy / single-codec simulators, and
+                       the decision audit log; the report adds shadow
+                       hit rates and the joint reuse table
+  --audit-out PATH     write the decision audit log (SIP evictions, CAMP
+                       preemptions, ladder transitions, admission
+                       rejections + driving inputs) as JSONL; implies
+                       --observatory
 See src/repro/serving/README.md ("Observability") for the metrics
-reference table and trace schema.
+reference table, audit schema, and trace schema; render saved artifacts
+with `python -m repro.launch.observe`.
 """
 
 
@@ -377,6 +408,12 @@ def main() -> None:
     ap.add_argument("--metrics-jsonl", default=None,
                     help="append JSON-lines registry snapshots here "
                          "(scheduler mode)")
+    ap.add_argument("--observatory", action="store_true",
+                    help="attach the memory-hierarchy observatory "
+                         "(scheduler mode; see epilog)")
+    ap.add_argument("--audit-out", default=None,
+                    help="write the decision audit log as JSONL here "
+                         "(scheduler mode; implies --observatory)")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
@@ -394,7 +431,9 @@ def main() -> None:
                    trace_out=args.trace_out, metrics=args.metrics,
                    metrics_port=args.metrics_port,
                    metrics_out=args.metrics_out,
-                   metrics_jsonl=args.metrics_jsonl)
+                   metrics_jsonl=args.metrics_jsonl,
+                   observatory=args.observatory,
+                   audit_out=args.audit_out)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
     if "kv_compression_ratio" in out:
@@ -424,6 +463,19 @@ def main() -> None:
                   f"page-ratio p50 {pc['ratio_p50']}")
         print(f"[serve]   ladder transitions {ms['ladder_transitions']}, "
               f"pool used {ms['pool_used_pages']} pages")
+    if "observatory" in out:
+        ob = out["observatory"]
+        print(f"[serve] observatory: shadow hit rates "
+              f"{ob['shadow_hit_rates']}")
+        print(f"[serve]   live pages {ob['live_pages']}, reuse ticks "
+              f"{ob['reuse_ticks']}, audit decisions "
+              f"{ob['audit_decisions']}")
+        if ob["codec_wouldbe_bytes"]:
+            print(f"[serve]   single-codec what-if bytes: "
+                  f"{ob['codec_wouldbe_bytes']}")
+        print("[serve] size-bin x reuse-distance:")
+        for ln in out["reuse_table"].splitlines():
+            print(f"[serve]   {ln}")
     if "faults" in out:
         print(f"[serve] injected faults: {out['faults']}")
     if "prefix_cache" in out:

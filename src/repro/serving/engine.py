@@ -107,6 +107,7 @@ import numpy as np
 
 from repro import codecs
 from repro.configs.base import ArchConfig
+from repro.core.camp import _pow2_bucket
 from repro.kernels._backend import default_interpret
 from repro.models import attention as A
 from repro.models import layers as L
@@ -475,10 +476,12 @@ def _gather_tail_blocks(tk, tv, slots):
             vb.reshape((-1,) + vb.shape[2:]))
 
 
-@functools.partial(jax.jit, static_argnames=("codec", "use_fused"),
+@functools.partial(jax.jit,
+                   static_argnames=("codec", "use_fused", "member_sizes"),
                    donate_argnums=(0,))
 def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
-                    codec: codecs.PageCodec, use_fused: bool = False):
+                    codec: codecs.PageCodec, use_fused: bool = False,
+                    member_sizes: bool = False):
     """Compress [n, K, page, D] KV blocks and scatter them into the pools.
 
     One dispatch publishes every filled page of every layer: the batched
@@ -497,6 +500,15 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
     zeros for single-algorithm codecs, the winning member id for the
     adaptive composite.  Computed inside this dispatch so the tag rides
     the same host sync as bytes and checksums.
+
+    ``member_sizes`` (static; observatory-only, requires a composite
+    codec with ``members``) additionally returns every member codec's
+    *would-be* per-page byte counts [n_members, n] — the adaptive
+    compress already produced each member's encoding, so this is a
+    per-member ``page_nbytes`` reduction riding the same dispatch and
+    host sync, feeding the what-if codec sampling
+    (``serving/shadow.CodecShadow``).  ``None`` when off, so default
+    traces are unchanged.
     """
     compress = (codec.compress_kv_pages_fused if use_fused
                 else codec.compress_kv_pages)
@@ -504,9 +516,14 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
     nbytes = codec.page_nbytes(pg)
     csums = F.page_checksums(pg)
     tags = codec.page_tags(pg)
+    msizes = None
+    if member_sizes:
+        msizes = jnp.stack(
+            [m.page_nbytes(c) for m, c in
+             zip(codec.members, codec._member_pages(pg))])
     pools = jax.tree.map(
         lambda pool, new: pool.at[layer_idx, pids].set(new), pools, pg)
-    return pools, nbytes, csums, tags
+    return pools, nbytes, csums, tags, msizes
 
 
 # ---------------------------------------------------------------------------
@@ -530,7 +547,8 @@ class PagedKVEngine:
                  codec: str | codecs.PageCodec | None = None,
                  faults: "F.FaultInjector | None" = None,
                  integrity: bool = True,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 observatory=None):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -600,6 +618,13 @@ class PagedKVEngine:
             faults.telemetry = self.telemetry
         if prefix_cache is not None:
             prefix_cache.telemetry = self.telemetry
+        # opt-in hierarchy observatory (serving/observatory.py): reuse
+        # analytics, shadow policy/codec simulation, decision audit.
+        # None keeps every hook a single attribute check, so a default
+        # engine is byte-identical in behavior and metrics.
+        self.obs = observatory
+        if observatory is not None:
+            observatory.bind_engine(self)
 
     _STAT_KEYS = ("pages_compressed", "pages_evicted", "bytes_raw",
                   "bytes_compressed", "preemptions",
@@ -665,6 +690,9 @@ class PagedKVEngine:
             self.prefix_cache.sample_metrics()
         if self.faults is not None:
             self.faults.sample_metrics()
+        obs = getattr(self, "obs", None)   # absent on the reference oracle
+        if obs is not None:
+            obs.sample_gauges()
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -701,8 +729,25 @@ class PagedKVEngine:
         if not pids:
             return False
         self.free.extend(pids)
+        if self.obs is not None:
+            self.obs.on_release(pids)
         self._m["prefix_pages_evicted"].inc(len(pids))
         return True
+
+    def _seq_reclaimable_bytes(self, seq: Sequence) -> int:
+        """Compressed bytes preempting this sequence would make
+        evictable: its private pages, plus shared prefix entries it is
+        the sole pinner of (they drop to refcount 0 and free next
+        reclaim round); pages still pinned by another sharer count
+        nothing."""
+        ns = len(seq.chain)
+        size = sum(int(self.page_bytes[p])
+                   for lp in seq.pages for p in lp[ns:])
+        for eid in seq.chain:
+            e = self.prefix_cache.entries[eid]
+            if e.refcount == 1:
+                size += e.nbytes
+        return size
 
     def _seq_value(self, seq: Sequence) -> float:
         """CAMP/MVE value: reuse proxy / *reclaimable* compressed size
@@ -713,14 +758,8 @@ class PagedKVEngine:
         sequence look like a cheap victim."""
         if seq.done:
             return -1.0
-        ns = len(seq.chain)
-        size = sum(int(self.page_bytes[p])
-                   for lp in seq.pages for p in lp[ns:])
-        for eid in seq.chain:
-            e = self.prefix_cache.entries[eid]
-            if e.refcount == 1:
-                size += e.nbytes
-        return (len(seq.tokens) + 1) / max(size, 1)
+        return ((len(seq.tokens) + 1)
+                / max(self._seq_reclaimable_bytes(seq), 1))
 
     def _drop_seq_pages(self, seq: Sequence, *, count_evicted: bool) -> None:
         """Detach a sequence from its pages: free the private ones, unpin
@@ -729,6 +768,8 @@ class PagedKVEngine:
         ns = len(seq.chain)
         for lp in seq.pages:
             self.free.extend(lp[ns:])
+            if self.obs is not None:
+                self.obs.on_release(lp[ns:])
             if count_evicted:
                 self._m["pages_evicted"].inc(len(lp) - ns)
         if seq.chain:
@@ -744,6 +785,14 @@ class PagedKVEngine:
                 f"pool exhausted with nothing evictable "
                 f"({self.n_pool_pages - 1} pages, {len(self.free)} free)")
         victim = min(cands, key=self._seq_value)
+        if self.obs is not None:
+            rb = self._seq_reclaimable_bytes(victim)
+            self.obs.audit.record(
+                "camp_preempt", sid=victim.sid,
+                value=self._seq_value(victim), reclaimable_bytes=rb,
+                pow2_bucket=_pow2_bucket(max(rb, 1)),
+                tokens=len(victim.tokens), pins=len(victim.chain),
+                candidates=len(cands))
         # verify the victim's pages *before* dropping them: a preemption
         # requeue absorbs generated tokens into the prompt, so corrupted-
         # influenced tokens must be flagged here or they would silently
@@ -760,8 +809,13 @@ class PagedKVEngine:
 
     def _record_publish(self, seq: Sequence, pids: list[int],
                         nbytes: np.ndarray, csums: np.ndarray,
-                        tags: np.ndarray) -> None:
-        """Attach freshly published pages (one per layer) to a sequence."""
+                        tags: np.ndarray,
+                        msizes: np.ndarray | None = None) -> None:
+        """Attach freshly published pages (one per layer) to a sequence.
+
+        ``msizes`` [n_members, L] carries each member codec's would-be
+        byte count per page (observatory-on adaptive publishes only).
+        """
         raw = self.page_raw_bytes()
         for li, pid in enumerate(pids):
             nb = int(nbytes[li])
@@ -777,6 +831,13 @@ class PagedKVEngine:
             bytes_c.inc(nb)
             h_bytes.observe(nb)
             h_ratio.observe(raw / max(nb, 1))
+            if self.obs is not None:
+                name = (self._tag_names[tag] if tag < len(self._tag_names)
+                        else str(tag))
+                wb = (None if msizes is None else
+                      {self._tag_names[k]: int(msizes[k][li])
+                       for k in range(msizes.shape[0])})
+                self.obs.on_publish(pid, nb, name, wb)
         self._m["pages_compressed"].inc(len(pids))
         self._m["bytes_raw"].inc(raw * len(pids))
         self._m["bytes_compressed"].inc(int(nbytes.sum()))
@@ -819,7 +880,12 @@ class PagedKVEngine:
         self._drop_seq_pages(seq, count_evicted=False)
         if self.prefix_cache is not None:
             # reclaim quarantined entries the moment their last pin drops
-            self.free.extend(self.prefix_cache.purge_corrupt())
+            purged = self.prefix_cache.purge_corrupt()
+            self.free.extend(purged)
+            if self.obs is not None:
+                self.obs.on_release(purged)
+        if self.obs is not None:
+            self.obs.on_retire(sid)
         self._free_slots.append(seq.slot)
         self._pt_dirty = True
 
@@ -926,6 +992,12 @@ class PagedKVEngine:
                            chain=list(chain), prefilling=True)
             self.seqs[sid] = seq
             cached[sid] = start
+            if self.obs is not None:
+                # counterfactual access stream: one key per full prompt
+                # block regardless of the real lookup outcome; the warm
+                # chain's pages score real reuse accesses
+                self.obs.on_admit(sid, prompt, (len(prompt) - 1) // page,
+                                  [pid for e in ent for pid in e.pages])
             if start >= len(prompt) - 1:
                 # full prefix hit: every stored token is already paged in
                 # — no prefill work, straight to decode (tail is empty:
@@ -1102,20 +1174,29 @@ class PagedKVEngine:
         m = len(seqs)
         pids = self._reserve_pages(lyr * m)
         layer_idx = jnp.asarray(np.repeat(np.arange(lyr), m), jnp.int32)
-        self.pools, nbytes, csums, tags = _publish_blocks(
+        # observatory + composite codec: also pull every member's
+        # would-be page size out of the same dispatch (what-if sampling)
+        want_members = (self.obs is not None
+                        and getattr(self.codec, "members", None)
+                        is not None)
+        self.pools, nbytes, csums, tags, msizes = _publish_blocks(
             self.pools, k_blocks, v_blocks, layer_idx,
             jnp.asarray(pids, jnp.int32), codec=self.codec,
-            use_fused=self.use_fused_fill)
+            use_fused=self.use_fused_fill, member_sizes=want_members)
         # 1 sync per publish
-        nbytes, csums, tags = jax.device_get((nbytes, csums, tags))
+        nbytes, csums, tags, msizes = jax.device_get(
+            (nbytes, csums, tags, msizes))
         nbytes, csums = np.asarray(nbytes), np.asarray(csums)
         tags = np.asarray(tags)
+        if msizes is not None:
+            msizes = np.asarray(msizes)
         for j, seq in enumerate(seqs):
             if seq.preempted:      # victim of our own reservation
                 self.free.extend(pids[j::m])
                 continue
             self._record_publish(seq, pids[j::m], nbytes[j::m], csums[j::m],
-                                 tags[j::m])
+                                 tags[j::m],
+                                 None if msizes is None else msizes[:, j::m])
             if blocks is not None and self.prefix_cache is not None:
                 self._register_prompt_page(seq, blocks[j], pids[j::m],
                                            int(nbytes[j::m].sum()))
@@ -1148,6 +1229,8 @@ class PagedKVEngine:
             codec_ids=[int(self.page_codec_id[p]) for p in pids])
         displaced = cache.drain_displaced()         # healed-over pages
         self.free.extend(displaced)
+        if self.obs is not None:
+            self.obs.on_release(displaced)
         if displaced and self.telemetry.tracer.enabled:
             self.telemetry.tracer.event(seq.sid, "cache_heal",
                                         pages=len(displaced))
@@ -1156,12 +1239,17 @@ class PagedKVEngine:
             return
         cache.pin([eid])
         seq.chain.append(eid)
-        if not created:            # in-cohort dedup: map the shared pages
+        if created:
+            if self.obs is not None:
+                self.obs.on_cache_insert(seq.sid, blk, nbytes)
+        else:                      # in-cohort dedup: map the shared pages
             ent = cache.entries[eid]
             for li in range(self.cfg.n_layers):
                 assert seq.pages[li][blk] == pids[li]
                 seq.pages[li][blk] = ent.pages[li]
             self.free.extend(pids)
+            if self.obs is not None:
+                self.obs.on_dedup(seq.sid, blk, nbytes, pids, ent.pages)
             self._pt_dirty = True
             # the duplicate never lands in the pool: reverse its
             # _record_publish accounting so compression stats count each

@@ -283,6 +283,10 @@ class PrefixCache:
         # cache's counters into its registry at export time (zero cost
         # on the lookup/insert hot path)
         self.telemetry = None
+        # optional hierarchy observatory (serving/observatory.py), set
+        # by the owning engine when one is attached; :meth:`evict_for`
+        # records each SIP victim ranking in its decision audit log
+        self.observatory = None
 
     @classmethod
     def for_model(cls, cfg, page_size: int, **kw) -> "PrefixCache":
@@ -453,6 +457,15 @@ class PrefixCache:
             victim = min(cands, key=lambda e:
                          (not e.corrupt,     # quarantined entries go first
                           self.policy.value(e.hits, e.nbytes), e.born))
+            if self.observatory is not None:
+                self.observatory.audit.record(
+                    "sip_evict", eid=victim.eid, hits=victim.hits,
+                    nbytes=victim.nbytes,
+                    value=self.policy.value(victim.hits, victim.nbytes),
+                    pow2_bucket=_pow2_bucket(max(victim.nbytes, 1)),
+                    size_bin=self.policy.bin(victim.nbytes),
+                    born=victim.born, corrupt=victim.corrupt,
+                    candidates=len(cands))
             freed.extend(self._drop(victim))
         return freed
 

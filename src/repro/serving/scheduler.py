@@ -247,6 +247,15 @@ class ContinuousScheduler:
             and self.ladder.level >= self.ladder.n_levels
         if over_queue or shedding:
             self._m["rejected"].inc()
+            obs = getattr(self.engine, "obs", None)
+            if obs is not None:
+                obs.audit.record(
+                    "admission_reject", rid=rid,
+                    queue_depth=len(self.waiting),
+                    max_queue=self.max_queue,
+                    ladder_level=(self.ladder.level if self.ladder
+                                  else 0),
+                    over_queue=over_queue, shedding=shedding)
             self._finish(tr, FinishReason.REJECTED, self.iteration, now)
             return False
         self.waiting.append(req)
@@ -297,15 +306,22 @@ class ContinuousScheduler:
         expired = self._expire_deadlines(it)
         if self.ladder is not None:
             prev_lvl = self._g_ladder.value
-            lvl = self.ladder.update(self.engine.pool_pressure())
+            pressure = self.engine.pool_pressure()
+            lvl = self.ladder.update(pressure)
             # level 1: shed prefix-cache insertions (engine-side)
             if hasattr(self.engine, "shed_cache_inserts"):
                 self.engine.shed_cache_inserts = lvl >= 1
             self._g_ladder.set(lvl)
             self._g_ladder_tr.set(self.ladder.transitions)
-            if lvl != prev_lvl and self.trace.enabled:
-                self.trace.event(None, "ladder_transition",
-                                 level=lvl, prev=prev_lvl)
+            if lvl != prev_lvl:
+                if self.trace.enabled:
+                    self.trace.event(None, "ladder_transition",
+                                     level=lvl, prev=prev_lvl)
+                obs = getattr(self.engine, "obs", None)
+                if obs is not None:
+                    obs.audit.record("ladder_transition", iteration=it,
+                                     level=lvl, prev=prev_lvl,
+                                     pressure=round(pressure, 6))
         admitted = self._admit()
         decode_rids = list(self._running)
         n_pf = self._plan_prefill_tokens(len(decode_rids))

@@ -120,6 +120,11 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
             "free_slots": list(engine._free_slots),
             "pmax": engine._pmax, "stats": dict(engine.stats),
             "telemetry": engine.telemetry.state(),
+            # observatory host state (reuse tracker, shadow caches,
+            # audit ring); its registry-backed metrics already ride the
+            # telemetry state above
+            "observatory": (None if engine.obs is None
+                            else engine.obs.state()),
             "request_bytes": {str(k): list(v)
                               for k, v in engine.request_bytes.items()},
             "seqs": [_seq_meta(s) for s in engine.seqs.values()],
@@ -182,12 +187,23 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
         cache = PrefixCache(cfg.n_layers, em["page"], meta["cache_line"])
         cache.load_state(meta["cache"])
 
+    # a snapshotted observatory restores into a fresh one sharing the
+    # fresh telemetry: registry metrics return through the telemetry
+    # state, host trackers through the observatory state below — so
+    # reuse histograms and shadow hit counters continue, not restart
+    tel = Telemetry()
+    obs = None
+    om = em.get("observatory")
+    if om is not None:
+        from repro.serving.observatory import Observatory
+        obs = Observatory(tel)
+
     eng = PagedKVEngine(
         cfg, params, page_size=em["page"],
         n_pool_pages=em["n_pool_pages"], max_batch=em["max_batch"],
         use_fused=em["use_fused"], prefill_chunk=em["prefill_chunk"],
         prefix_cache=cache, codec=em["codec"], faults=faults,
-        integrity=em["integrity"], telemetry=Telemetry())
+        integrity=em["integrity"], telemetry=tel, observatory=obs)
 
     leaves, tdef = jax.tree_util.tree_flatten(eng.pools)
     eng.pools = jax.tree_util.tree_unflatten(
@@ -208,6 +224,8 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
         eng.telemetry.load_state(em["telemetry"])
     else:
         eng.load_stats_dict(em["stats"])
+    if obs is not None:
+        obs.load_state(om)
     eng.shed_cache_inserts = em["shed_cache_inserts"]
     eng.request_bytes = {int(k): list(v)
                          for k, v in em["request_bytes"].items()}

@@ -81,6 +81,11 @@ class Counter:
     def inc(self, delta=1):
         self.value += delta
 
+    def merge(self, other: "Counter") -> "Counter":
+        """Fold another counter in (per-host aggregation): totals add."""
+        self.value += other.value
+        return self
+
     def state(self):
         return self.value
 
@@ -102,6 +107,14 @@ class Gauge:
 
     def inc(self, delta=1):
         self.value += delta
+
+    def merge(self, other: "Gauge") -> "Gauge":
+        """Fold another gauge in.  Gauges aggregate by *sum* — the
+        cross-host reading of occupancy/depth gauges is total bytes or
+        total pages; rate-style gauges should be exported per-host
+        instead of merged."""
+        self.value += other.value
+        return self
 
     def state(self):
         return self.value
@@ -169,6 +182,26 @@ class Histogram:
     def percentiles(self, qs=(0.5, 0.95, 0.99)) -> dict[float, float]:
         return {q: self.quantile(q) for q in qs}
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold another histogram into this one.
+
+        Log-bucketed histograms merge exactly: same GAMMA means the same
+        bucket boundaries everywhere, so bucket-wise addition loses
+        nothing — the merged quantile error stays within the single
+        histogram's ~2% bound (pinned in tests/test_telemetry.py).  This
+        is what makes per-host registries aggregatable.
+        """
+        self.count += other.count
+        self.sum += other.sum
+        if other.min < self.min:
+            self.min = other.min
+        if other.max > self.max:
+            self.max = other.max
+        self.zero += other.zero
+        for i, c in other.buckets.items():
+            self.buckets[i] = self.buckets.get(i, 0) + c
+        return self
+
     def state(self):
         return {"count": self.count, "sum": self.sum,
                 "min": None if self.count == 0 else self.min,
@@ -233,6 +266,23 @@ class MetricsRegistry:
         """All (labels, metric) series registered under ``name``."""
         return [(dict(lk), m) for (n, lk), m in self._metrics.items()
                 if n == name]
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold another registry into this one (per-host aggregation).
+
+        Series are matched by ``(name, labels)``; missing series are
+        created, existing ones are merged metric-wise (counters and
+        gauges add, histograms add bucket-wise).  A name registered with
+        different kinds on the two sides raises, same as ``_get``.  To
+        keep hosts distinguishable, label per-host series (e.g.
+        ``host="a"``) before merging.
+        """
+        cls = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+        for (name, lk), m in other._metrics.items():
+            mine = self._get(cls[m.kind], name,
+                             other._help.get(name, ""), dict(lk))
+            mine.merge(m)
+        return self
 
     # -- exporters -------------------------------------------------------------
 
@@ -327,6 +377,37 @@ def _escape(v: str) -> str:
     return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
 
 
+def _unescape(v: str) -> str:
+    """Inverse of :func:`_escape` (Prometheus label-value escaping).
+
+    Left-to-right scan so ``\\\\n`` stays a literal backslash-n instead
+    of being misread as a newline — the property the round-trip test
+    pins.  Consumers: ``launch/observe.py`` parsing saved ``.prom``
+    artifacts back into label dicts.
+    """
+    out: list[str] = []
+    i, n = 0, len(v)
+    while i < n:
+        c = v[i]
+        if c == "\\" and i + 1 < n:
+            nxt = v[i + 1]
+            if nxt == "\\":
+                out.append("\\")
+                i += 2
+                continue
+            if nxt == '"':
+                out.append('"')
+                i += 2
+                continue
+            if nxt == "n":
+                out.append("\n")
+                i += 2
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
 def _fmt_val(v) -> str:
     f = float(v)
     return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
@@ -366,7 +447,9 @@ def start_metrics_server(sources, port: int = 0):
     are concatenated — e.g. the engine's and the scheduler's).  Returns
     the ``ThreadingHTTPServer``; read the bound port from
     ``server.server_address[1]`` (pass ``port=0`` for an ephemeral one)
-    and stop it with ``server.shutdown()``.
+    and stop it with :func:`stop_metrics_server` — which also closes the
+    listening socket and joins the serving thread, so back-to-back runs
+    in one process don't leak daemon threads or bound ports.
     """
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
@@ -392,4 +475,19 @@ def start_metrics_server(sources, port: int = 0):
     t = threading.Thread(target=server.serve_forever, daemon=True,
                          name="metrics-http")
     t.start()
+    server._serve_thread = t          # joined by stop_metrics_server
     return server
+
+
+def stop_metrics_server(server) -> None:
+    """Fully stop a server from :func:`start_metrics_server`.
+
+    ``shutdown()`` alone stops the accept loop but leaves the listening
+    socket open and the serving thread alive; this also closes the
+    socket and joins the thread so nothing outlives the run.
+    """
+    server.shutdown()
+    server.server_close()
+    t = getattr(server, "_serve_thread", None)
+    if t is not None:
+        t.join(timeout=5.0)

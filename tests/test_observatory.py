@@ -1,0 +1,364 @@
+"""Memory-hierarchy observatory suite: reuse tracking, shadow policy
+divergence, decision audit, engine integration, snapshot continuity.
+
+The unit tests pin the building blocks: the reuse tracker's joint
+size-bin × reuse-distance accounting on a hand-built event stream, the
+shadow caches' policy separation on a stream engineered so SIP beats
+FIFO (small hot blocks vs large one-shot blocks), and the audit ring's
+bounds and JSONL round-trip.  The integration tests attach an
+Observatory to a real engine+scheduler and drive a two-wave
+shared-prefix workload: the warm wave must register shadow hits and
+joint reuse counts, decisions must be audited, and an identical run
+*without* the observatory must produce identical tokens and engine
+stats (the hooks observe, never steer).  The snapshot test requires a
+restored engine's observatory to carry the full pre-snapshot state and
+keep counting from there, not from zero.
+"""
+
+import json
+
+import pytest
+
+from repro.serving.audit import AuditLog
+from repro.serving.observatory import Observatory
+from repro.serving.reuse import ReuseTracker, dist_pow2, joint_table_str
+from repro.serving.shadow import POLICIES, ShadowCache, ShadowSet, block_keys
+from repro.serving.telemetry import MetricsRegistry, Telemetry
+
+PAGE = 8
+
+
+# ------------------------------------------------------------- reuse tracker
+
+
+def test_reuse_tracker_joint_accounting():
+    reg = MetricsRegistry()
+    rt = ReuseTracker(reg, line_bytes=64)
+    rt.page_birth(1, 32, "bdi")            # tick 0; (32-1)*8//64 -> bin 3
+    rt.page_birth(2, 64, "bdi")            # tick 1; bin 7
+    rt.page_access(1)                      # tick 2, d=2 -> pow2 bucket 2
+    rt.page_access(1)                      # tick 3, d=1 -> pow2 bucket 1
+    rt.page_access(999)                    # unknown pid: tolerated, no tick
+    assert rt.tick == 4
+    assert rt.joint_counts() == {(3, 2): 1, (3, 1): 1}
+    rt.page_release(1)
+    rt.page_release(2)
+    rt.page_release(2)                     # double release: tolerated
+    assert rt.n_live() == 0
+    life = reg.histogram("obs_page_lifetime", size_bin=3)
+    assert life.count == 1 and life.sum == 4.0      # born 0, released at 4
+    reuses = reg.histogram("obs_page_reuses", size_bin=3)
+    assert reuses.count == 1 and reuses.sum == 2.0
+    born = reg.counter("obs_pages_born_total", size_bin=3, codec="bdi")
+    assert born.value == 1
+
+    # the rendered table shows only non-empty rows, both distance cols
+    table = joint_table_str(rt.joint_counts())
+    assert "size_bin" in table and "3" in table
+    assert joint_table_str({}) == "(no reuse events recorded)"
+
+
+def test_reuse_tracker_wouldbe_member_sizes():
+    reg = MetricsRegistry()
+    rt = ReuseTracker(reg, line_bytes=512)
+    rt.page_birth(7, 100, "gbdi",
+                  wouldbe={"bdi": 200, "gbdi": 100, "raw": 512})
+    for name, nb in (("bdi", 200), ("gbdi", 100), ("raw", 512)):
+        assert reg.counter("obs_wouldbe_bytes_total", codec=name).value == nb
+        h = reg.histogram("obs_wouldbe_page_bytes", codec=name)
+        assert h.count == 1
+    # the winner's actual size lands regardless of the wouldbe map
+    assert reg.histogram("obs_page_bytes", codec="gbdi").count == 1
+
+
+def test_dist_pow2_buckets():
+    assert [dist_pow2(d) for d in (0, 1, 2, 3, 4, 1000)] \
+        == [0, 1, 2, 2, 3, 10]
+
+
+def test_reuse_tracker_state_roundtrip():
+    reg = MetricsRegistry()
+    rt = ReuseTracker(reg, line_bytes=64)
+    rt.page_birth(1, 32, "bdi")
+    rt.page_access(1)
+    rt2 = ReuseTracker(MetricsRegistry())
+    rt2.load_state(json.loads(json.dumps(rt.state())))
+    assert (rt2.tick, rt2.line) == (rt.tick, rt.line)
+    assert rt2.live == rt.live
+
+
+# ------------------------------------------------------------ shadow caches
+
+
+def _policy_separating_stream(cache):
+    """Small hot blocks + large one-shot blocks under byte pressure.
+
+    SIP keeps the small reused blocks (value (hits+1)/pow2(size) favors
+    them); FIFO keeps whatever arrived last and thrashes the hot set.
+    """
+    smalls = [f"s{i}" for i in range(4)]
+    for r in range(12):
+        for k in smalls:
+            if not cache.access(k):
+                cache.install(k, 64)
+        cache.install(f"big{r}", 512)      # unique, never accessed again
+    return cache
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_shadow_cache_basic(policy):
+    c = ShadowCache(policy, capacity_bytes=1024)
+    assert not c.access("a")               # cold miss
+    c.install("a", 100)
+    assert c.access("a")                   # now resident
+    c.install("a", 80)                     # twin install: size refresh
+    assert c.used_bytes == 80
+    c.install("huge", 4096)                # larger than budget: bypassed
+    assert "huge" not in c.entries
+    assert c.hit_rate() == 0.5
+    c2 = ShadowCache(policy, capacity_bytes=1024)
+    c2.load_state(json.loads(json.dumps(c.state())))
+    assert c2.entries == c.entries and c2.hit_rate() == c.hit_rate()
+
+
+def test_shadow_sip_beats_fifo_on_hot_small_blocks():
+    rates = {p: _policy_separating_stream(
+        ShadowCache(p, capacity_bytes=1024)).hit_rate() for p in POLICIES}
+    assert rates["sip"] > rates["fifo"], rates
+    # the size term is doing work: sip >= the size-oblivious ablation
+    assert rates["sip"] >= rates["gcamp"], rates
+    assert rates["sip"] > 0.8 and rates["fifo"] < 0.6, rates
+
+
+def test_shadow_cache_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        ShadowCache("belady", 1024)
+
+
+def test_block_keys_prefix_identity():
+    a = block_keys([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12], 4)
+    b = block_keys([1, 2, 3, 4, 5, 6, 7, 8, 99, 98, 97, 96], 4)
+    assert len(a) == len(b) == 3
+    assert a[:2] == b[:2]                  # shared 2-block prefix
+    assert a[2] != b[2]                    # diverging third block
+    # chained digest: same block content after a different prefix
+    # yields a different key (identity covers the whole prefix)
+    c = block_keys([7, 7, 7, 7, 5, 6, 7, 8], 4)
+    assert c[1] != a[1]
+    # deterministic across calls (crc32, not salted hash)
+    assert a == block_keys([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12], 4)
+
+
+def test_shadow_set_publishes_per_policy_counters():
+    reg = MetricsRegistry()
+    ss = ShadowSet(reg, capacity_bytes=1024)
+    ss.note_request(0, ["k0", "k1"])       # two cold misses everywhere
+    ss.install_for(0, 0, 64)
+    ss.install_for(0, 5, 64)               # out-of-range block: ignored
+    ss.note_request(1, ["k0"])             # warm hit everywhere
+    for p in POLICIES:
+        assert reg.counter("shadow_hits_total", policy=p).value == 1
+        assert reg.counter("shadow_misses_total", policy=p).value == 2
+        assert reg.gauge("shadow_occupancy_bytes", policy=p).value == 64
+    ss.forget(0)
+    assert 0 not in ss._seq_keys
+    ss2 = ShadowSet(MetricsRegistry(), capacity_bytes=1024)
+    ss2.load_state(json.loads(json.dumps(ss.state())))
+    assert ss2.hit_rates() == ss.hit_rates()
+
+
+# -------------------------------------------------------------- audit log
+
+
+def test_audit_log_ring_counts_and_jsonl():
+    reg = MetricsRegistry()
+    log = AuditLog(reg, cap=3)
+    for i in range(5):
+        log.record("sip_evict", eid=i, nbytes=64 * (i + 1))
+    assert log.seq == 5
+    assert [r["seq"] for r in log.records] == [2, 3, 4]   # ring kept tail
+    assert log.counts() == {"sip_evict": 3}               # retained window
+    # the registry counter survives the ring wrap
+    assert reg.counter("audit_decisions_total", kind="sip_evict").value == 5
+    lines = log.to_jsonl_lines()
+    assert [json.loads(ln)["eid"] for ln in lines] == [2, 3, 4]
+    log2 = AuditLog(MetricsRegistry())
+    log2.load_state(json.loads(json.dumps(log.state())))
+    assert log2.records == log.records and log2.seq == 5
+
+
+def test_audit_log_emits_tracer_counters():
+    tel = Telemetry(trace=True)
+    log = AuditLog(tel.registry, tel.tracer)
+    log.record("camp_preempt", sid=3, value=0.25, note="text-skipped",
+               corrupt=False)
+    names = {k for _, _, series in tel.tracer.counters for k in series}
+    assert names == {"audit_camp_preempt_sid", "audit_camp_preempt_value"}
+
+
+# ------------------------------------------------------ engine integration
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.models.api import get_model
+
+    cfg = get_arch("yi-6b").reduced(n_layers=2, d_model=64)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _build(cfg, params, *, observe, codec="adaptive", max_queue=None,
+           pool=96):
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.prefix_cache import PrefixCache
+    from repro.serving.scheduler import ContinuousScheduler
+
+    tel = Telemetry()
+    obs = Observatory(tel) if observe else None
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=pool,
+                        max_batch=3, prefix_cache=PrefixCache.for_model(
+                            cfg, PAGE),
+                        codec=codec, telemetry=tel, observatory=obs)
+    sched = ContinuousScheduler(eng, token_budget=24, max_queue=max_queue,
+                                telemetry=tel)
+    return eng, sched, obs
+
+
+def _two_waves(sched, gen=4):
+    # wave 1 fills the prefix cache; wave 2 reuses a 2-block (16-token)
+    # shared prefix -> warm chain hits feed reuse + shadow streams
+    shared = [1 + j for j in range(16)]
+    sched.submit(0, shared + [100, 101, 102, 103], max_new_tokens=gen)
+    sched.submit(1, shared + [200, 201, 202, 203], max_new_tokens=gen)
+    sched.run()
+    sched.submit(2, shared + [300, 301, 302, 303], max_new_tokens=gen)
+    sched.submit(3, shared + [400, 401, 402, 403], max_new_tokens=gen)
+    sched.run()
+    return sched.finished()
+
+
+def test_observatory_two_wave_shared_prefix(small_model):
+    cfg, params = small_model
+    eng, sched, obs = _build(cfg, params, observe=True)
+    fin = _two_waves(sched)
+    assert set(fin) == {0, 1, 2, 3}
+    eng.debug_validate()
+
+    # the warm wave hit the shared prefix in every shadow policy
+    rates = obs.shadow.hit_rates()
+    assert set(rates) == set(POLICIES)
+    assert all(r > 0 for r in rates.values()), rates
+    assert rates["sip"] >= rates["fifo"]
+    # ... and produced joint size-bin x reuse-distance mass
+    joint = obs.reuse.joint_counts()
+    assert joint and sum(joint.values()) > 0
+    assert "size_bin" in obs.reuse_table()
+    # adaptive publish recorded every member codec's would-be bytes
+    wb = obs.codec_shadow.bytes
+    assert {"bdi", "zero", "raw", "gbdi", "fpc"} <= set(wb)
+    assert all(v > 0 for v in wb.values())
+    # summary is JSON-serializable and complete
+    s = json.loads(json.dumps(obs.summary(), default=float))
+    assert {"shadow_hit_rates", "reuse_ticks", "live_pages",
+            "codec_wouldbe_bytes", "audit_decisions"} <= set(s)
+    assert s["reuse_ticks"] > 0
+
+
+def test_observatory_is_pure_observer(small_model):
+    # identical workload with and without the observatory: tokens,
+    # engine stats, and scheduler stats must match exactly
+    cfg, params = small_model
+    eng_a, sched_a, _ = _build(cfg, params, observe=True)
+    eng_b, sched_b, _ = _build(cfg, params, observe=False)
+    fin_a, fin_b = _two_waves(sched_a), _two_waves(sched_b)
+    assert {r: t.out_tokens for r, t in fin_a.items()} \
+        == {r: t.out_tokens for r, t in fin_b.items()}
+    assert eng_a.stats == eng_b.stats
+    assert sched_a.stats == sched_b.stats
+
+
+def test_admission_rejections_are_audited(small_model):
+    cfg, params = small_model
+    eng, sched, obs = _build(cfg, params, observe=True, max_queue=1)
+    for rid in range(4):
+        sched.submit(rid, [1 + rid] * 6, max_new_tokens=2)
+    sched.run()
+    assert sched.stats["rejected"] >= 1
+    rejects = [r for r in obs.audit.records
+               if r["kind"] == "admission_reject"]
+    assert len(rejects) == sched.stats["rejected"]
+    for r in rejects:
+        assert {"rid", "queue_depth", "max_queue"} <= set(r)
+        assert r["over_queue"] or r["shedding"]
+    assert eng.telemetry.registry.counter(
+        "audit_decisions_total", kind="admission_reject").value \
+        == len(rejects)
+
+
+def test_sip_evictions_are_audited(small_model):
+    # a tiny pool + waves of distinct prompts force prefix-cache
+    # evictions; each victim ranking must leave an audit record
+    # carrying the SIP inputs that drove it
+    cfg, params = small_model
+    eng, sched, obs = _build(cfg, params, observe=True, pool=20)
+    rid = 0
+    for wave in range(6):
+        base = 1000 * (wave + 1)
+        for tail in (0, 500):
+            sched.submit(rid, [base + tail + j for j in range(20)],
+                         max_new_tokens=2)
+            rid += 1
+        sched.run()
+    assert eng.stats["prefix_pages_evicted"] > 0
+    evicts = [r for r in obs.audit.records if r["kind"] == "sip_evict"]
+    assert evicts
+    for rec in evicts:
+        assert {"eid", "hits", "nbytes", "value", "pow2_bucket",
+                "size_bin", "candidates"} <= set(rec)
+        assert rec["nbytes"] > 0 and rec["candidates"] >= 1
+    eng.debug_validate()
+
+
+def test_snapshot_carries_observatory_state(small_model, tmp_path):
+    from repro.serving.snapshot import restore_snapshot, save_snapshot
+
+    cfg, params = small_model
+    eng, sched, obs = _build(cfg, params, observe=True)
+    shared = [1 + j for j in range(16)]
+    sched.submit(0, shared + [100, 101, 102, 103], max_new_tokens=4)
+    sched.submit(1, shared + [200, 201, 202, 203], max_new_tokens=4)
+    sched.run()                            # wave 1: cache filled
+    sched.submit(2, shared + [300, 301, 302, 303], max_new_tokens=6)
+    for _ in range(3):                     # wave 2 mid-flight
+        sched.step()
+    save_snapshot(str(tmp_path), eng, sched, step=1)
+    snap = eng.telemetry.registry.snapshot()
+
+    eng2, sched2 = restore_snapshot(str(tmp_path), cfg, params)
+    assert eng2.obs is not None
+    obs2 = eng2.obs
+    # full observatory state restored: registry series, host tables
+    assert eng2.telemetry.registry.snapshot() == snap
+    assert obs2.reuse.tick == obs.reuse.tick
+    assert obs2.reuse.live == obs.reuse.live
+    assert obs2.shadow.hit_rates() == obs.shadow.hit_rates()
+    assert obs2.audit.seq == obs.audit.seq
+    assert obs2.page == eng2.page
+
+    born = sum(m.value for _, m in
+               eng2.telemetry.registry.series("obs_pages_born_total"))
+    ticks = obs2.reuse.tick
+    assert born > 0 and ticks > 0
+    # the restored run continues the histograms/counters, not restarts:
+    # finishing request 2 publishes more pages on the same series
+    sched2.run()
+    born2 = sum(m.value for _, m in
+                eng2.telemetry.registry.series("obs_pages_born_total"))
+    assert born2 > born
+    assert obs2.reuse.tick > ticks
+    eng2.debug_validate()

@@ -24,7 +24,9 @@ import pytest
 
 from repro.serving.telemetry import (GAMMA, Clock, Histogram,
                                      MetricsRegistry, Telemetry,
-                                     start_metrics_server)
+                                     _escape, _unescape,
+                                     start_metrics_server,
+                                     stop_metrics_server)
 from repro.serving.trace import FINISH, PHASES, Tracer
 
 PAGE = 8
@@ -71,6 +73,33 @@ def test_histogram_edge_cases():
     assert (h2.count, h2.sum, h2.zero) == (h.count, h.sum, h.zero)
 
 
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "exponential"])
+def test_merged_histogram_quantiles_match_numpy(dist):
+    # per-host aggregation: two hosts observe disjoint halves of one
+    # stream; the merged histogram's quantiles must match numpy on the
+    # concatenation within the same ~2% GAMMA bound as a single
+    # histogram (log-bucket merge is exact — shared boundaries)
+    rng = np.random.default_rng(1)
+    xs = {"uniform": rng.uniform(1e-4, 10.0, 6000),
+          "lognormal": rng.lognormal(0.0, 2.0, 6000),
+          "exponential": rng.exponential(0.05, 6000)}[dist]
+    a, b = Histogram(), Histogram()
+    for v in xs[:2000]:
+        a.observe(float(v))
+    for v in xs[2000:]:
+        b.observe(float(v))
+    a.merge(b)
+    for q in (0.05, 0.5, 0.9, 0.95, 0.99):
+        exact = float(np.percentile(xs, 100 * q))
+        assert a.quantile(q) == pytest.approx(exact, rel=0.05), (dist, q)
+    assert a.count == len(xs)
+    assert a.sum == pytest.approx(float(xs.sum()), rel=1e-9)
+    # merging an empty histogram is the identity
+    snap = (a.count, a.sum, a.zero, dict(a.buckets))
+    a.merge(Histogram())
+    assert (a.count, a.sum, a.zero, dict(a.buckets)) == snap
+
+
 def test_histogram_relative_error_bound():
     # the design bound: representative = geometric bucket midpoint, so
     # any single sample is recovered within sqrt(GAMMA)-1
@@ -104,6 +133,47 @@ def test_registry_kinds_labels_and_state():
     reg2.load_state(json.loads(json.dumps(reg.state())))
     assert reg2.snapshot() == reg.snapshot()
     assert reg2.counter("req_total", codec="bdi").value == 5
+
+
+def test_registry_merge_aggregates_hosts():
+    # two per-host registries fold into one: counters/gauges add,
+    # histograms merge bucket-wise, label sets union
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("req_total", codec="bdi").inc(3)
+    b.counter("req_total", codec="bdi").inc(4)
+    b.counter("req_total", codec="raw").inc(1)      # only on host b
+    a.gauge("depth").set(2)
+    b.gauge("depth").set(5)
+    for v in (0.1, 0.2):
+        a.histogram("lat_seconds").observe(v)
+    b.histogram("lat_seconds").observe(0.4)
+    a.merge(b)
+    assert a.counter("req_total", codec="bdi").value == 7
+    assert a.counter("req_total", codec="raw").value == 1
+    assert a.gauge("depth").value == 7               # sum semantics
+    h = a.histogram("lat_seconds")
+    assert h.count == 3 and h.sum == pytest.approx(0.7)
+    assert (h.min, h.max) == (0.1, 0.4)
+    # merging b again is additive, and b itself is untouched
+    assert b.counter("req_total", codec="bdi").value == 4
+    # kind conflicts refuse to merge rather than corrupt
+    c = MetricsRegistry()
+    c.gauge("req_total").set(1)
+    with pytest.raises(ValueError):
+        c.merge(a)
+
+
+def test_label_escape_round_trip():
+    for s in ('plain', 'a"b', 'back\\slash', 'multi\nline',
+              '\\n is not a newline', 'tricky\\"\\n\\\\end', ''):
+        assert _unescape(_escape(s)) == s, repr(s)
+    # exposition output parses back to the original label value
+    reg = MetricsRegistry()
+    reg.counter("esc_total", tag='a"b\\c\nd\\ne').inc()
+    line = [ln for ln in reg.to_prometheus().splitlines()
+            if ln.startswith("esc_total{")][0]
+    quoted = line[line.index('="') + 2:line.rindex('"}')]
+    assert _unescape(quoted) == 'a"b\\c\nd\\ne'
 
 
 def test_prometheus_exposition_format():
@@ -155,6 +225,23 @@ def test_metrics_http_server():
             assert r.read().decode() == "ok\n"
     finally:
         server.shutdown()
+
+
+def test_stop_metrics_server_joins_thread_and_closes_socket():
+    reg = MetricsRegistry()
+    reg.counter("x_total").inc()
+    server = start_metrics_server([reg], port=0)
+    port = server.server_address[1]
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/health", timeout=10) as r:
+        assert r.read().decode() == "ok\n"
+    stop_metrics_server(server)
+    t = server._serve_thread
+    assert not t.is_alive()                 # thread joined, not leaked
+    with pytest.raises(OSError):            # listening socket closed
+        urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/health", timeout=2)
+    stop_metrics_server(server)             # idempotent
 
 
 # ------------------------------------------------------------------- tracer
