@@ -91,7 +91,10 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
 # (stdlib-importable — keep this module's top level free of jax imports)
 # v3: prefix_warm rows carry shadow-policy hit rates + reuse counts;
 #     new observatory_overhead row gates observed_vs_plain_goodput
-SCHEMA_VERSION = 3
+# v4: new tier_multiturn row (host-tier chat scenario): per-turn TTFT
+#     for a tiered vs tierless arm with the device pool recycled
+#     between turns, plus tier demotion/promotion counters
+SCHEMA_VERSION = 4
 
 PROMPT_LEN = 12
 PAGE = 8
@@ -144,6 +147,19 @@ _MIXED_MODES = {
 # of the measured span — well inside the 0.97 goodput gate
 MIXED_GAP_FACTOR = 8.0
 MIXED_CODECS = ("bdi", "zero", "raw", "gbdi", "fpc", "adaptive")
+
+# host-tier multi-turn chat benchmark: (turns, timed reps).  Both arms
+# recycle the entire device pool between turns; only the tiered arm can
+# bring the conversation's pages back without re-prefilling, so the
+# warm/cold TTFT ratio isolates exactly what the tier buys
+_TIER_MODES = {
+    "full": (6, 3),
+    "quick": (6, 2),
+    "smoke": (6, 2),
+}
+TIER_SEED_PROMPT = 96        # 12 pages; grows ~2 pages per turn
+TIER_GEN = 8
+TIER_HOST_MB = 8
 
 
 def _build(cfg, params, engine: str, batch: int, pool: int,
@@ -871,6 +887,87 @@ def _bench_mixed(cfg, params, mode: str) -> list[dict]:
     return out
 
 
+def _run_chat(cfg, params, turns: int, *, tiered: bool,
+              codec: str | None = None) -> tuple[list[float], dict]:
+    """One multi-turn conversation with the device pool fully recycled
+    between turns.  Returns (per-turn TTFT seconds, tier stats).
+
+    The conversation is deterministic (greedy decode, fixed user
+    tokens), so the tiered and tierless arms see identical prompts at
+    every turn — tier promotion round-trips bit-identical pages, making
+    the decoded replies (and therefore turn N+1's prompt) match too."""
+    from repro.serving.engine import PagedKVEngine
+    from repro.serving.prefix_cache import PrefixCache
+    from repro.serving.tier import TieredPageStore
+
+    cache = PrefixCache.for_model(cfg, PAGE)
+    eng = PagedKVEngine(cfg, params, page_size=PAGE, n_pool_pages=256,
+                        max_batch=1, codec=codec, prefix_cache=cache,
+                        cache_decode_pages=True)
+    tier = None
+    if tiered:
+        tier = TieredPageStore.for_model(cfg, PAGE, eng.codec,
+                                         host_mb=TIER_HOST_MB)
+        eng.attach_tier(tier)
+    convo = [1 + (j * 7) % (cfg.vocab - 1) for j in range(TIER_SEED_PROMPT)]
+    ttfts = []
+    for t in range(1, turns + 1):
+        t0 = time.perf_counter()
+        eng.add_requests({t: convo})
+        toks = [eng.decode_one(t)]
+        ttfts.append(time.perf_counter() - t0)
+        toks += [eng.decode_one(t) for _ in range(TIER_GEN - 1)]
+        eng.release(t)
+        eng.recycle_device_pool()
+        convo = convo + toks + [1 + (t * 13 + j) % (cfg.vocab - 1)
+                                for j in range(8)]
+    return ttfts, (dict(tier.stats) if tier is not None else {})
+
+
+def _bench_tier(cfg, params, mode: str, codec: str | None = None
+                ) -> list[dict]:
+    """Host-tier multi-turn chat benchmark (one ``tier_multiturn`` row).
+
+    The structural claim under test: after the device pool is fully
+    recycled, a turn-N prompt re-admitted through the tier promotes its
+    prefix from host RAM instead of re-prefilling, so its TTFT must
+    beat the tierless cold TTFT by >2x (check_serve_regression gates
+    ``turnN_ttft_p95 <= 0.5 * cold_ttft_p95``).  The ratio is between
+    two arms of the same process at the same turn/prompt length, so it
+    is insensitive to the absolute speed of the CI runner."""
+    turns, reps = _TIER_MODES[mode]
+    # throwaway rep per arm: jit-traces every per-turn prefill shape and
+    # the tier's gather/scatter paths, so the timed reps are steady-state
+    _run_chat(cfg, params, turns, tiered=False, codec=codec)
+    _run_chat(cfg, params, turns, tiered=True, codec=codec)
+    cold_runs = [_run_chat(cfg, params, turns, tiered=False, codec=codec)[0]
+                 for _ in range(reps)]
+    warm_runs, tier_stats = [], {}
+    for _ in range(reps):
+        tt, st = _run_chat(cfg, params, turns, tiered=True, codec=codec)
+        warm_runs.append(tt)
+        tier_stats = st
+    cold_last = [r[-1] for r in cold_runs]
+    warm_last = [r[-1] for r in warm_runs]
+    cold_p95 = _percentile(cold_last, 0.95)
+    warm_p95 = _percentile(warm_last, 0.95)
+    from repro.codecs.base import resolve
+    return [{
+        "bench": "serve_tier", "engine": "tier_multiturn",
+        "codec": resolve(codec).name, "turns": turns, "reps": reps,
+        "seed_prompt_len": TIER_SEED_PROMPT, "gen": TIER_GEN,
+        "tier_host_mb": TIER_HOST_MB,
+        "cold_ttft_p95": round(cold_p95, 4),
+        "turnN_ttft_p95": round(warm_p95, 4),
+        "turnN_vs_cold": round(warm_p95 / max(cold_p95, 1e-9), 3),
+        "per_turn_ttft_cold": [round(x, 4) for x in cold_runs[-1]],
+        "per_turn_ttft_warm": [round(x, 4) for x in warm_runs[-1]],
+        "tier_demotions": tier_stats.get("demotions", 0),
+        "tier_promotions": tier_stats.get("promotions", 0),
+        "tier_corrupt": tier_stats.get("corrupt", 0),
+    }]
+
+
 def rows(mode: str = "full", codec: str | None = None) -> list[dict]:
     import jax
 
@@ -901,6 +998,7 @@ def rows(mode: str = "full", codec: str | None = None) -> list[dict]:
     # the mixed-content bench sweeps MIXED_CODECS itself (it is the
     # adaptive-vs-single-codec comparison), so --codec does not apply
     out.extend(_bench_mixed(cfg, params, mode))
+    out.extend(_bench_tier(cfg, params, mode, codec))
     return out
 
 

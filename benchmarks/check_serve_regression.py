@@ -27,6 +27,12 @@ retention must not lose to FIFO on the shared-prefix stream it was
 built for), and the ``observatory_overhead`` row must hold
 ``observed_vs_plain_goodput >= 0.97`` — the full observatory (reuse
 tracker + shadow simulators + audit log) priced like tracing.
+The ``tier_multiturn`` row gates the host memory tier on the chat
+scenario: after the device pool is fully recycled between turns, the
+tiered arm's last-turn TTFT must beat the tierless cold TTFT by >2x
+(``turnN_ttft_p95 <= 0.5 * cold_ttft_p95``, a same-process two-arm
+ratio, so runner-speed independent), and the run must actually have
+exercised the tier (nonzero demotion and promotion counters).
 Exit 1 with a per-metric report otherwise.
 
 Both the current results and the baseline are schema-stamped
@@ -100,6 +106,7 @@ def check(current: dict, baseline: dict, max_drop: float,
     failures += _check_mixed_rows(current)
     failures += _check_telemetry_rows(current)
     failures += _check_observatory_rows(current)
+    failures += _check_tier_rows(current)
     failures += _check_fault_counters(current)
     for key, brow in sorted(base.items()):
         engine, batch = key
@@ -274,6 +281,41 @@ def _check_observatory_rows(current: dict) -> list[str]:
     return failures
 
 
+# the host memory tier must make turn-N TTFT collapse vs a cold
+# re-prefill once the device pool has been recycled: both arms run in
+# the same process at the same turn/prompt length, so the ratio is
+# structural (runner-speed independent), and the counters prove the
+# demote -> promote path actually carried the pages
+_TIER_TTFT_FRAC = 0.5
+
+
+def _check_tier_rows(current: dict) -> list[str]:
+    rows = [r for r in current["rows"]
+            if r.get("engine") == "tier_multiturn"]
+    if not rows:
+        return ["tier_multiturn row missing from current results"]
+    failures = []
+    for r in rows:
+        cold, warm = r.get("cold_ttft_p95", 0.0), r.get("turnN_ttft_p95")
+        if warm is None or warm > _TIER_TTFT_FRAC * cold:
+            failures.append(
+                f"tier_multiturn turnN_ttft_p95 {warm} > "
+                f"{_TIER_TTFT_FRAC:.2f} * cold_ttft_p95 {cold:.4f} — "
+                "tier promotion is not beating a cold re-prefill by >2x "
+                "after a full device-pool recycle")
+        for c in ("tier_demotions", "tier_promotions"):
+            if r.get(c, 0) <= 0:
+                failures.append(
+                    f"tier_multiturn {c}: {r.get(c, 0)} == 0 — the run "
+                    "never exercised the demote/promote path it claims "
+                    "to measure")
+        if r.get("tier_corrupt", 0) != 0:
+            failures.append(
+                f"tier_multiturn tier_corrupt: {r['tier_corrupt']} != 0 "
+                "(host-arena integrity failures in a no-fault bench)")
+    return failures
+
+
 # a no-fault smoke must finish every request normally: any nonzero
 # counter means the scheduler rejected, expired, retried, or requeued
 # work without fault injection — a resilience-path leak into the happy
@@ -405,6 +447,13 @@ def main() -> int:
                   f"(>= {_OBS_OVERHEAD_FRAC:.2f}), "
                   f"reuse_ticks={row['reuse_ticks']}, "
                   f"audit_decisions={row['audit_decisions']}")
+        elif row.get("engine") == "tier_multiturn":
+            print(f"  ok tier multiturn ({row['turns']} turns): "
+                  f"turnN_ttft_p95={row['turnN_ttft_p95']:.4f} <= "
+                  f"{_TIER_TTFT_FRAC:.2f} * cold {row['cold_ttft_p95']:.4f}"
+                  f" (ratio {row['turnN_vs_cold']:.3f}), demotions="
+                  f"{row['tier_demotions']}, promotions="
+                  f"{row['tier_promotions']}")
         elif row.get("engine") == "mixed_summary":
             print(f"  ok mixed adaptive: ratio={row['adaptive_ratio']:.3f}"
                   f" (>= best single {row['best_single_ratio']:.3f} "

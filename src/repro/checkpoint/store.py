@@ -183,6 +183,33 @@ def load_flat(ckpt_dir: str, *, step: int | None = None
     return out, manifest
 
 
+def persist(ckpt_dir: str, step: int, arrays: dict, meta: dict, *,
+            kind: str, compress: bool = True) -> dict:
+    """Persist a serving component (flat ``{name: array}`` + JSON meta)
+    through the atomic/verified/compressed checkpoint path.
+
+    ``kind`` stamps the manifest so :func:`restore_component` can refuse
+    a checkpoint of the wrong component (e.g. a tier cache restored as
+    an engine snapshot).  Returns the manifest.
+    """
+    return save(ckpt_dir, step, arrays,
+                extra={"kind": kind, "meta": meta}, compress=compress)
+
+
+def restore_component(ckpt_dir: str, *, kind: str, step: int | None = None
+                      ) -> tuple[dict[str, np.ndarray], dict, dict]:
+    """Load a component persisted by :func:`persist`.
+
+    Returns ``(arrays, meta, manifest)``; asserts the manifest's kind
+    stamp matches ``kind``.
+    """
+    arrays, manifest = load_flat(ckpt_dir, step=step)
+    extra = manifest["extra"]
+    assert extra.get("kind") == kind, \
+        f"checkpoint kind mismatch: {extra.get('kind')!r} != {kind!r}"
+    return arrays, extra["meta"], manifest
+
+
 def prune_old(ckpt_dir: str, keep: int = 3) -> None:
     """Retention policy: keep the newest `keep` checkpoints."""
     if not os.path.isdir(ckpt_dir):

@@ -270,6 +270,12 @@ class GlobalCache:
         self.bin_priority = np.zeros(N_SIZE_BINS, dtype=bool)
         self.size_aware = policy in ("gmve", "gcamp")
         self._hand = 0                  # V-Way rotating replacement pointer
+        # eviction/deletion split: an optional demotion hook consulted
+        # with each victim *before* its tag/data leave the store, so a
+        # lower memory tier (serving/tier.py's host/disk arenas are the
+        # live-serving twin) can capture the payload instead of losing
+        # it.  None keeps _evict byte-identical to the fused behavior.
+        self.evict_cb = None
 
     def _in_training(self) -> bool:
         return (self.clock % self.train_period) < self.train_period // 10
@@ -329,8 +335,15 @@ class GlobalCache:
                 if b is not victim and b.reuse_ctr > 0:
                     b.reuse_ctr -= 1
             self._hand = (start + len(cand)) % n
-            self.used_segments -= victim.segments(self.segment)
-            del self.blocks[victim.tag]
+            self._release(victim)
+
+    def _release(self, victim: Block) -> None:
+        """Drop a victim from the tag/data store, consulting the
+        demotion hook first (the deletion half of the old fused evict)."""
+        if self.evict_cb is not None:
+            self.evict_cb(victim)
+        self.used_segments -= victim.segments(self.segment)
+        del self.blocks[victim.tag]
 
     def access(self, addr: int, size: int) -> bool:
         self.clock += 1

@@ -31,7 +31,14 @@ Resilience (scheduler mode; serving/faults.py): ``--ttft-deadline`` /
 bounds the waiting queue, ``--overload`` arms the pool-pressure
 degradation ladder, and ``--chaos SEED`` injects a deterministic fault
 schedule (page corruption + garbage decode tokens) — every request
-still ends with a deterministic ``finish_reason``.  ``--snapshot-dir``
+still ends with a deterministic ``finish_reason``.  ``--tier-host-mb``
+attaches the host/disk memory tier (``serving/tier.py``): evicted
+prefix-cache chains demote into host RAM (optionally spilling to an
+mmap disk arena via ``--tier-disk-dir``) and promote back on warm
+lookups; ``--persist-cache DIR`` carries the warm cache across process
+restarts, and ``--multi-turn N`` runs the chat scenario that recycles
+the whole device pool between turns and reports per-turn TTFT.
+``--snapshot-dir``
 demos engine snapshot/restore: the engine state is checkpointed
 mid-stream, then restored after the run and driven to completion; the
 report's ``snapshot.restored_match`` confirms token-identical output.
@@ -74,7 +81,11 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
              metrics_out: str | None = None,
              metrics_jsonl: str | None = None,
              observatory: bool = False,
-             audit_out: str | None = None) -> dict:
+             audit_out: str | None = None,
+             tier_host_mb: float | None = None,
+             tier_disk_dir: str | None = None,
+             persist_cache: str | None = None,
+             multi_turn: int = 0) -> dict:
     cfg = get_arch(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -83,6 +94,83 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
     key = jax.random.PRNGKey(1)
     prompts = jax.random.randint(key, (batch, prompt_len), 1, cfg.vocab,
                                  jnp.int32)
+
+    def _build_tier(eng):
+        """Host/disk memory tier behind the device pool (serving/tier.py);
+        restores a persisted warm cache when --persist-cache points at an
+        existing checkpoint."""
+        from repro.checkpoint import store as ckpt_store
+        from repro.serving.tier import TieredPageStore
+        host_mb = tier_host_mb if tier_host_mb else 64.0
+        if (persist_cache is not None
+                and ckpt_store.latest_step(persist_cache) is not None):
+            tier = TieredPageStore.restore(
+                persist_cache, cfg, eng.codec, host_mb=host_mb,
+                disk_dir=tier_disk_dir)
+        else:
+            tier = TieredPageStore.for_model(
+                cfg, eng.page, eng.codec, host_mb=host_mb,
+                disk_dir=tier_disk_dir)
+        eng.attach_tier(tier)
+        return tier
+
+    if multi_turn:
+        # multi-turn chat scenario: one growing conversation, the device
+        # pool fully recycled between turns.  Without the tier every turn
+        # re-prefills from scratch; with it, turn N's prefix promotes
+        # back from host RAM and TTFT collapses to the new-token tail.
+        from repro.serving.engine import PagedKVEngine
+        from repro.serving.prefix_cache import PrefixCache
+        from repro.serving.telemetry import Telemetry
+
+        tel = Telemetry()
+        cache = PrefixCache.for_model(cfg, 8)
+        eng = PagedKVEngine(cfg, params, page_size=8, n_pool_pages=512,
+                            max_batch=1, prefill_chunk=prefill_chunk,
+                            prefix_cache=cache, codec=codec, telemetry=tel,
+                            cache_decode_pages=True)
+        tier = _build_tier(eng)
+        convo = [int(t) for t in prompts[0]]
+        # throwaway primer turn: jit-compile prefill/decode so turn 1's
+        # TTFT is not dominated by compilation
+        eng.add_requests({-1: convo[: eng.page]})
+        eng.decode_one(-1)
+        eng.release(-1)
+        eng.recycle_device_pool()
+        base = dict(tier.stats)
+        turns, total_toks, t_run = [], 0, time.perf_counter()
+        for turn in range(1, multi_turn + 1):
+            t0 = time.perf_counter()
+            cached = eng.add_requests({turn: convo})[turn]
+            out_toks = [eng.decode_one(turn)]
+            ttft = time.perf_counter() - t0
+            out_toks += [eng.decode_one(turn) for _ in range(gen - 1)]
+            eng.release(turn)
+            freed = eng.recycle_device_pool()
+            d = {k: tier.stats[k] - base[k] for k in tier.stats}
+            turns.append({"turn": turn, "prompt_tokens": len(convo),
+                          "ttft_s": round(ttft, 4),
+                          "cached_tokens": cached,
+                          "recycled_pages": freed,
+                          "demotions": d["demotions"],
+                          "promotions": d["promotions"]})
+            base = dict(tier.stats)
+            total_toks += len(out_toks)
+            # next user message: the model's reply plus fresh user tokens
+            extra = jax.random.randint(jax.random.PRNGKey(100 + turn),
+                                       (8,), 1, cfg.vocab)
+            convo = convo + out_toks + [int(t) for t in extra]
+        dt = time.perf_counter() - t_run
+        eng.debug_validate()
+        eng.sample_gauges()
+        if persist_cache is not None:
+            tier.persist(persist_cache)
+        return {"turns": turns, "codec": eng.codec.name,
+                "tier": dict(tier.stats),
+                "tier_logical_bytes": tier.logical_bytes(),
+                "kv_compression_ratio": eng.compression_ratio(),
+                "stats": eng.stats, "tok_per_s": total_toks / dt,
+                "persisted": persist_cache}
 
     if scheduler:
         from repro.core.camp import PressureLadder
@@ -113,6 +201,12 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
                             prefix_cache=cache, codec=codec,
                             faults=injector, telemetry=tel,
                             observatory=obs)
+        tier = None
+        if tier_host_mb or tier_disk_dir or persist_cache:
+            assert cache is not None, \
+                "--tier-host-mb/--tier-disk-dir/--persist-cache need " \
+                "--prefix-cache (the tier backs the prefix cache)"
+            tier = _build_tier(eng)
         sched = ContinuousScheduler(eng, token_budget=token_budget,
                                     requeue_preempted=requeue_preempted,
                                     max_queue=max_queue,
@@ -208,6 +302,11 @@ def generate(arch: str, *, smoke: bool = True, batch: int = 4,
         if cache is not None:
             out["prefix_cache"] = dict(cache.stats,
                                        hit_rate=round(cache.hit_rate(), 3))
+        if tier is not None:
+            out["tier"] = dict(tier.stats)
+            if persist_cache is not None:
+                tier.persist(persist_cache)
+                out["persisted"] = persist_cache
         if metrics or metrics_out is not None or trace_out is not None:
             out["metrics_summary"] = _metrics_summary(tel, eng, sched)
         if obs is not None:
@@ -414,6 +513,26 @@ def main() -> None:
     ap.add_argument("--audit-out", default=None,
                     help="write the decision audit log as JSONL here "
                          "(scheduler mode; implies --observatory)")
+    ap.add_argument("--tier-host-mb", type=float, default=None,
+                    help="attach the host-RAM memory tier behind the "
+                         "device pool with this arena budget; evicted "
+                         "prefix-cache chains demote here instead of "
+                         "dropping (needs --prefix-cache in scheduler "
+                         "mode)")
+    ap.add_argument("--tier-disk-dir", default=None,
+                    help="add an mmap-backed disk arena under this dir; "
+                         "host-arena evictions spill there instead of "
+                         "dropping")
+    ap.add_argument("--persist-cache", default=None,
+                    help="persist the tier through the checkpoint store "
+                         "into this dir at exit, and restore from it at "
+                         "start when it already holds a checkpoint "
+                         "(warm cache across restarts)")
+    ap.add_argument("--multi-turn", type=int, default=0,
+                    help="multi-turn chat scenario: N turns of one "
+                         "growing conversation with the device pool "
+                         "fully recycled between turns; reports per-turn "
+                         "TTFT and tier demotion/promotion counts")
     args = ap.parse_args()
     out = generate(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                    gen=args.gen, paged=args.paged,
@@ -433,9 +552,21 @@ def main() -> None:
                    metrics_out=args.metrics_out,
                    metrics_jsonl=args.metrics_jsonl,
                    observatory=args.observatory,
-                   audit_out=args.audit_out)
+                   audit_out=args.audit_out,
+                   tier_host_mb=args.tier_host_mb,
+                   tier_disk_dir=args.tier_disk_dir,
+                   persist_cache=args.persist_cache,
+                   multi_turn=args.multi_turn)
     print(f"[serve] {args.batch}x{args.gen} tokens at "
           f"{out['tok_per_s']:.1f} tok/s")
+    if "turns" in out:
+        for trn in out["turns"]:
+            print(f"[serve]   turn {trn['turn']}: "
+                  f"{trn['prompt_tokens']}-token prompt, ttft "
+                  f"{trn['ttft_s'] * 1000:.1f} ms, "
+                  f"{trn['cached_tokens']} cached, "
+                  f"{trn['recycled_pages']} pages recycled, "
+                  f"demote {trn['demotions']} promote {trn['promotions']}")
     if "kv_compression_ratio" in out:
         print(f"[serve] codec {out['codec']}: aggregate compression "
               f"{out['kv_compression_ratio']:.2f}x (raw/compressed "
@@ -480,6 +611,10 @@ def main() -> None:
         print(f"[serve] injected faults: {out['faults']}")
     if "prefix_cache" in out:
         print(f"[serve] prefix cache: {out['prefix_cache']}")
+    if "tier" in out:
+        print(f"[serve] memory tier: {out['tier']}")
+        if out.get("persisted"):
+            print(f"[serve] tier persisted to {out['persisted']}")
     if "snapshot" in out:
         print(f"[serve] snapshot/restore: {out['snapshot']}")
 

@@ -99,6 +99,7 @@ slightly different times.  That is inherent to batching, not a bug.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -112,6 +113,7 @@ from repro.kernels._backend import default_interpret
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.serving import faults as F
+from repro.serving import tier as T
 from repro.serving.telemetry import Telemetry
 from repro.serving.prefix_cache import (PrefixCache, canonical_update,
                                         prefix_chunk_attention)
@@ -526,6 +528,28 @@ def _publish_blocks(pools, k_blocks, v_blocks, layer_idx, pids, *,
     return pools, nbytes, csums, tags, msizes
 
 
+@jax.jit
+def _gather_entry_pages(pools, pids):
+    """Gather one entry's per-layer compressed pages (``pids`` i32 [L])
+    out of the pools: leaves [L, ...], the tier's demotion payload."""
+    lidx = jnp.arange(pids.shape[0])
+    return jax.tree.map(lambda a: a[lidx, pids], pools)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _promote_scatter(pools, vals, pids):
+    """Scatter a batch of tier records' leaves ([N, L, ...]) back into
+    the pools at ``pids`` i32 [N, L] — the promotion twin of the publish
+    scatter.  One dispatch covers a whole promoted chain; per-block
+    dispatch would make warm promotion scale like cold prefill at small
+    model sizes.  Callers pad N to a power of two (rows aimed at pool
+    page 0, the padding target) so retrace count stays logarithmic in
+    chain length."""
+    lidx = jnp.arange(pids.shape[1])[None, :]
+    return jax.tree.map(lambda pool, v: pool.at[lidx, pids].set(v),
+                        pools, vals)
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -548,7 +572,9 @@ class PagedKVEngine:
                  faults: "F.FaultInjector | None" = None,
                  integrity: bool = True,
                  telemetry: Telemetry | None = None,
-                 observatory=None):
+                 observatory=None,
+                 tier: "T.TieredPageStore | None" = None,
+                 cache_decode_pages: bool = False):
         assert cfg.attn_kind == "gqa" and not cfg.is_encdec
         if prefix_cache is not None:
             assert prefix_cache.page == page_size \
@@ -625,6 +651,16 @@ class PagedKVEngine:
         self.obs = observatory
         if observatory is not None:
             observatory.bind_engine(self)
+        # optional host/disk demotion tier (serving/tier.py).  Decode-
+        # page caching is opt-in: decode-produced pages are pure
+        # functions of the token prefix in principle, but decode-vs-
+        # prefill summation order can differ at ULP level, so the
+        # warm==cold bit-equality suites keep it off by default.
+        self.tier: T.TieredPageStore | None = None
+        self.cache_decode_pages = cache_decode_pages
+        self._h_promote = None
+        if tier is not None:
+            self.attach_tier(tier)
 
     _STAT_KEYS = ("pages_compressed", "pages_evicted", "bytes_raw",
                   "bytes_compressed", "preemptions",
@@ -693,6 +729,8 @@ class PagedKVEngine:
         obs = getattr(self, "obs", None)   # absent on the reference oracle
         if obs is not None:
             obs.sample_gauges()
+        if getattr(self, "tier", None) is not None:
+            self.tier.sample_metrics()
 
     # -- pool bookkeeping ----------------------------------------------------
 
@@ -877,6 +915,12 @@ class PagedKVEngine:
         # are fine — their publishes are already dropped
         assert not (seq.prefilling and not seq.preempted), \
             f"sid {sid} is mid-prefill; cannot release"
+        if (self.tier is not None and self.cache_decode_pages
+                and not seq.preempted and not seq.corrupted):
+            # opt-in: decode-produced pages become demotable too (the
+            # multi-turn chat hit path); the tier holds copies, so the
+            # pool pages still free normally below
+            self._demote_decode_pages(seq)
         self._drop_seq_pages(seq, count_evicted=False)
         if self.prefix_cache is not None:
             # reclaim quarantined entries the moment their last pin drops
@@ -904,6 +948,186 @@ class PagedKVEngine:
         self._pt_dirty = True
         self._maybe_drop_cohort()
 
+    # -- memory tier (serving/tier.py) --------------------------------------
+
+    def attach_tier(self, tier: "T.TieredPageStore") -> None:
+        """Attach a host/disk demotion tier: SIP eviction victims demote
+        into it (compressed bytes, codec tags and publish-time checksums
+        intact) and warm lookups that miss the device pool promote back
+        out of it through the prefix-cache publish bookkeeping."""
+        assert self.prefix_cache is not None, \
+            "a tier needs a prefix cache to demote from"
+        assert tier.page == self.page \
+            and tier.n_layers == self.cfg.n_layers \
+            and tier.codec_name == self.codec.name, \
+            "tier layout disagrees with the engine"
+        self.tier = tier
+        if tier.telemetry is None:
+            tier.telemetry = self.telemetry
+        if tier.observatory is None:
+            tier.observatory = self.obs
+        self._h_promote = self.telemetry.registry.histogram(
+            "tier_promotion_seconds",
+            "wall time to promote a warm chain from the tier",
+            codec=self.codec.name)
+        self.prefix_cache.demote_cb = self._demote_entry
+
+    def _entry_parent_digest(self, e) -> str:
+        """Digest of the token prefix *before* entry ``e``: walk the
+        resident ancestor chain (eviction is leaf-first, so ancestors
+        are still in the cache when the demotion hook fires)."""
+        anc = []
+        pid = e.parent
+        while pid:
+            pe = self.prefix_cache.entries[pid]
+            anc.append(pe)
+            pid = pe.parent
+        digest = T.ROOT
+        for pe in reversed(anc):
+            digest = T.child_digest(digest, pe.toks)
+        return digest
+
+    def _demote_pages(self, parent: str, toks: tuple[int, ...],
+                      pids: list[int], *, hits: int = 0,
+                      source: str = "prompt") -> None:
+        """Gather one page boundary's pool pages and hand them to the
+        tier with their publish metadata (one device sync per demotion
+        — demotion is off the admission/decode latency path)."""
+        leaves = [np.asarray(lf) for lf in jax.device_get(
+            jax.tree.leaves(_gather_entry_pages(
+                self.pools, jnp.asarray(pids, jnp.int32))))]
+        self.tier.demote(parent, toks, leaves,
+                         [int(self.page_bytes[p]) for p in pids],
+                         [int(self.page_codec_id[p]) for p in pids],
+                         [int(self.page_checksum[p]) for p in pids],
+                         hits=hits, source=source)
+
+    def _demote_entry(self, e) -> None:
+        """Prefix-cache demotion hook (``PrefixCache.demote_cb``):
+        capture an eviction victim's compressed pages before they are
+        dropped.  Bytes corrupted since publish travel with their
+        original checksum, so promotion quarantines them — the tier
+        never turns silent pool corruption into served tokens."""
+        self._demote_pages(self._entry_parent_digest(e), e.toks,
+                           list(e.pages), hits=e.hits)
+
+    def _demote_decode_pages(self, seq: Sequence) -> None:
+        """Opt-in retirement hook (``cache_decode_pages``): register the
+        sequence's private full pages — decode-produced and any shed
+        prompt pages — keyed by the token prefix they cover, so a
+        follow-up conversation turn that replays this exchange promotes
+        instead of recomputing."""
+        page, lyr = self.page, self.cfg.n_layers
+        ns = len(seq.chain)
+        digest = T.ROOT
+        for blk in range(len(seq.pages[0])):
+            toks = tuple(seq.tokens[blk * page:(blk + 1) * page])
+            if blk >= ns:
+                self._demote_pages(digest, toks,
+                                   [seq.pages[li][blk]
+                                    for li in range(lyr)],
+                                   source="decode")
+            digest = T.child_digest(digest, toks)
+
+    def _promote_from_tier(self, prompt: list[int], start: int,
+                           chain: list[int]) -> tuple[int, list[int]]:
+        """Extend a warm hit past the device pool from the tier.
+
+        Walks the tier trie from the first device-uncached block; each
+        record is checksum-verified host-side (a corrupt slot is
+        quarantined and the walk stops — shorter hit, never bad bytes),
+        scattered into freshly reserved pool pages, and re-inserted into
+        the prefix cache pinned, exactly like a published prompt page.
+        The already-pinned device chain can't be victimized by the
+        reservations this makes.  Returns the extended ``(start,
+        chain)``.
+        """
+        tier, cache, page = self.tier, self.prefix_cache, self.page
+        lyr = self.cfg.n_layers
+        recs = tier.lookup(prompt)
+        b = start // page
+        if len(recs) <= b:
+            return start, chain
+        t0 = time.perf_counter()
+        stored, promoted = len(prompt) - 1, 0
+        # pass 1 (host only): walk the trie, verify checksums, and
+        # collect the longest clean run.  read_record returns owned
+        # copies, so later evictions/spills cannot alias these leaves.
+        picked: list = []
+        while (b + len(picked) < len(recs)
+               and (b + len(picked) + 1) * page <= stored):
+            rec = recs[b + len(picked)]
+            lo = (b + len(picked)) * page
+            if rec.toks != tuple(prompt[lo:lo + page]):
+                break                      # digest collision paranoia
+            leaves, ok = tier.read_record(rec)
+            if not ok:
+                self._m["integrity_failures"].inc()
+                break
+            picked.append((rec, leaves))
+        if not picked:
+            return start, chain
+        # pass 2: one batched scatter for the whole verified run, rows
+        # padded to a power of two aimed at padding page 0
+        pids = [self._reserve_pages(lyr) for _ in picked]
+        pad = 1 << (len(picked) - 1).bit_length()
+        rows = np.asarray(pids + [[0] * lyr] * (pad - len(picked)),
+                          np.int32)
+        vals = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(self.pools),
+            [np.stack([lv[i] for _, lv in picked]
+                      + [picked[0][1][i]] * (pad - len(picked)))
+             for i in range(len(picked[0][1]))])
+        self.pools = _promote_scatter(self.pools, vals, jnp.asarray(rows))
+        # pass 3 (host only): page-table metadata + cache inserts, in
+        # chain order so pin/dedup semantics match a published prompt
+        for idx, ((rec, _), bpids) in enumerate(zip(picked, pids)):
+            for li, pid in enumerate(bpids):
+                self.page_bytes[pid] = rec.nbytes[li]
+                self.page_checksum[pid] = rec.checksums[li]
+                self.page_codec_id[pid] = rec.codec_ids[li]
+            eid, created = cache.insert(
+                chain[-1] if chain else 0, rec.toks, bpids,
+                sum(rec.nbytes), codec_ids=list(rec.codec_ids))
+            displaced = cache.drain_displaced()   # healed-over pages
+            self.free.extend(displaced)
+            if self.obs is not None:
+                self.obs.on_release(displaced)
+            if eid is None:        # pinned corrupt twin: cannot map
+                for later in pids[idx:]:   # scattered but unmapped —
+                    self.free.extend(later)   # contents are harmless
+                break
+            if not created:        # clean twin already resident: share it
+                self.free.extend(bpids)
+            cache.pin([eid])
+            chain.append(eid)
+            tier.on_promoted(rec)
+            promoted += 1
+            b += 1
+        if promoted:
+            self._pt_dirty = True
+            if self._h_promote is not None:
+                self._h_promote.observe(time.perf_counter() - t0)
+            if self.telemetry.tracer.enabled:
+                self.telemetry.tracer.event(-1, "tier_promote",
+                                            blocks=promoted)
+        return b * page, chain
+
+    def recycle_device_pool(self) -> int:
+        """Drop every retained prefix entry (demoting through the tier
+        when one is attached), returning their pages to the free list —
+        the multi-turn chat scenario's between-turns device-pool reset.
+        Requires an idle engine (no live sequences, no cohort).  Returns
+        the number of pages freed."""
+        assert not self.seqs and self._cohort is None, \
+            "recycle_device_pool with work in flight"
+        before = len(self.free)
+        while (self.prefix_cache is not None
+               and self.prefix_cache.entries
+               and self._evict_prefix_pages(self.n_pool_pages)):
+            pass
+        return len(self.free) - before
+
     # -- integrity / invariants ---------------------------------------------
 
     def verify_seq(self, sid: int) -> bool:
@@ -919,18 +1143,20 @@ class PagedKVEngine:
     def add_request(self, sid: int, prompt: list[int]) -> None:
         self.add_requests({sid: prompt})
 
-    def add_requests(self, prompts: dict[int, list[int]]) -> None:
+    def add_requests(self, prompts: dict[int, list[int]]
+                     ) -> dict[int, int]:
         """Admit a batch of prompts and prefill them to completion.
 
         Blocking convenience wrapper over the cohort machinery: admits all
         prompts as one cohort and drains it with full-width chunks.  The
         continuous-batching scheduler instead drives the same cohort one
-        budgeted chunk per iteration via :meth:`mixed_step`, so prefill
-        interleaves with decode.
+        budgeted chunk per iteration via :meth:`mixed_step`.  Returns
+        ``begin_cohort``'s ``{sid: cached_tokens}`` warm-hit map.
         """
-        self.begin_cohort(prompts)
+        cached = self.begin_cohort(prompts)
         while self._cohort is not None:
             self.mixed_step(decode_sids=[], pf_tokens=self.prefill_chunk)
+        return cached
 
     def begin_cohort(self, prompts: dict[int, list[int]]
                      ) -> dict[int, int]:
@@ -984,6 +1210,12 @@ class PagedKVEngine:
                                 verified=vstart)
                         start = vstart
                 self.prefix_cache.pin(chain)
+                if self.tier is not None:
+                    # the device chain is pinned first, so the pool
+                    # reservations promotion makes can never victimize
+                    # the chain being extended
+                    start, chain = self._promote_from_tier(prompt, start,
+                                                           chain)
             ent = [self.prefix_cache.entries[e] for e in chain]
             seq = Sequence(sid=sid, slot=self._free_slots.pop(),
                            tokens=list(prompt),

@@ -287,6 +287,11 @@ class PrefixCache:
         # by the owning engine when one is attached; :meth:`evict_for`
         # records each SIP victim ranking in its decision audit log
         self.observatory = None
+        # demotion hook (serving/tier.py, set by the owning engine):
+        # called with each clean eviction victim *before* its pages are
+        # dropped, so a lower memory tier can capture the compressed
+        # bytes instead of losing them
+        self.demote_cb = None
 
     @classmethod
     def for_model(cls, cfg, page_size: int, **kw) -> "PrefixCache":
@@ -466,6 +471,11 @@ class PrefixCache:
                     size_bin=self.policy.bin(victim.nbytes),
                     born=victim.born, corrupt=victim.corrupt,
                     candidates=len(cands))
+            if self.demote_cb is not None and not victim.corrupt:
+                # eviction/deletion split: the tier captures the
+                # victim's compressed pages while they are still pool-
+                # resident; quarantined entries are never demoted
+                self.demote_cb(victim)
             freed.extend(self._drop(victim))
         return freed
 

@@ -38,6 +38,7 @@ from repro.serving.engine import PagedKVEngine, Sequence, _Cohort
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ContinuousScheduler, Request, Track
 from repro.serving.telemetry import Telemetry
+from repro.serving.tier import TieredPageStore
 
 
 def _seq_meta(s: Sequence) -> dict:
@@ -106,6 +107,15 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
                    "roff": co.roff, "pub": list(co.pub or []),
                    "done_sids": sorted(co.done_sids or ())}
 
+    tier = getattr(engine, "tier", None)
+    tier_meta = None
+    if tier is not None:
+        # the host/disk tier rides the same snapshot: packed slot bytes
+        # as one array, trie metadata as JSON (restore re-places every
+        # row into the host arena, spilling per the new capacity)
+        arrays.update(tier.tier_arrays())
+        tier_meta = tier.meta_state()
+
     cache = engine.prefix_cache
     meta = {
         "kind": "serving-engine-snapshot",
@@ -116,6 +126,7 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
             "codec": engine.codec.name, "use_fused": engine.use_fused,
             "integrity": engine.integrity,
             "shed_cache_inserts": engine.shed_cache_inserts,
+            "cache_decode_pages": engine.cache_decode_pages,
             "free": list(engine.free),
             "free_slots": list(engine._free_slots),
             "pmax": engine._pmax, "stats": dict(engine.stats),
@@ -130,6 +141,7 @@ def save_snapshot(ckpt_dir: str, engine: PagedKVEngine,
             "seqs": [_seq_meta(s) for s in engine.seqs.values()],
         },
         "cohort": co_meta,
+        "tier": tier_meta,
         "cache": None if cache is None else cache.state(),
         "cache_line": None if cache is None else cache.policy.line,
         "scheduler": None,
@@ -226,6 +238,14 @@ def restore_snapshot(ckpt_dir: str, cfg, params, *, step: int | None = None,
         eng.load_stats_dict(em["stats"])
     if obs is not None:
         obs.load_state(om)
+    tm = meta.get("tier")          # absent from pre-tier snapshots
+    if tm is not None and cache is not None:
+        tier = TieredPageStore.for_model(
+            cfg, em["page"], eng.codec,
+            host_mb=tm["host_slots"] * tm["slot_bytes"] / 2**20)
+        tier.load_state(tm, {"tier_data": arrays["tier_data"]})
+        eng.attach_tier(tier)
+        eng.cache_decode_pages = em.get("cache_decode_pages", False)
     eng.shed_cache_inserts = em["shed_cache_inserts"]
     eng.request_bytes = {int(k): list(v)
                          for k, v in em["request_bytes"].items()}
